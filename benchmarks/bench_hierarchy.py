@@ -1,0 +1,84 @@
+"""Fig. 3 experiment: cost of each decidability level.
+
+  * SAT layer: pairwise shadowing analysis time vs #rules
+  * geometric layer: cap-intersection decision + MC co-fire vs dimension
+  * classifier layer: undecidable statically — we report the online-
+    monitor throughput instead (events/sec)
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import geometry, sat
+from repro.core.atoms import SignalAtom
+from repro.core.conditions import And, Atom, Not
+from repro.core.monitor import OnlineConflictMonitor
+from repro.core.taxonomy import Rule
+
+
+def bench_sat(n_rules: int) -> float:
+    rules = []
+    for i in range(n_rules):
+        cond = And((Atom(f"s{i % 8}"), Not(Atom(f"s{(i + 3) % 8}"))))
+        rules.append(Rule(f"r{i}", cond, f"m{i}", 1000 - i))
+    t0 = time.perf_counter()
+    n_pairs = 0
+    for i in range(len(rules)):
+        for j in range(i + 1, len(rules)):
+            sat.implies(rules[j].condition, rules[i].condition)
+            n_pairs += 1
+    dt = time.perf_counter() - t0
+    return dt / max(n_pairs, 1) * 1e6            # us per pair
+
+
+def bench_geometric(d: int) -> tuple:
+    c1 = np.zeros(d)
+    c1[0] = 1
+    c2 = np.zeros(d)
+    c2[0], c2[1] = math.cos(0.5), math.sin(0.5)
+    a = geometry.SphericalCap(c1, 0.8)
+    b = geometry.SphericalCap(c2, 0.8)
+    t0 = time.perf_counter()
+    for _ in range(1000):
+        geometry.caps_intersect(a, b)
+    decide_us = (time.perf_counter() - t0) / 1000 * 1e6
+    t0 = time.perf_counter()
+    geometry.cofire_probability([a, b], query_dist="vmf",
+                                mixture_kappa=4.0 * d, n_samples=5000)
+    mc_us = (time.perf_counter() - t0) * 1e6
+    return decide_us, mc_us
+
+
+def bench_monitor() -> float:
+    mon = OnlineConflictMonitor([f"s{i}" for i in range(8)])
+    scores = np.random.default_rng(0).random((256, 8))
+    thr = np.full(8, 0.5)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        mon.observe_batch(scores, thr)
+    dt = time.perf_counter() - t0
+    return 20 * 256 / dt                         # events/sec
+
+
+def main():
+    lines = []
+    for n in (4, 8, 16, 32):
+        us = bench_sat(n)
+        lines.append(f"hierarchy/sat_pair_n{n},{us:.1f},decidable=SAT")
+    for d in (64, 256, 768):
+        dec, mc = bench_geometric(d)
+        lines.append(f"hierarchy/cap_decide_d{d},{dec:.2f},"
+                     f"mc_cofire_us={mc:.0f}")
+    ev = bench_monitor()
+    lines.append(f"hierarchy/online_monitor,{1e6/ev:.2f},"
+                 f"events_per_s={ev:.0f};classifier_level=undecidable_static")
+    for ln in lines:
+        print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: Pallas (interpret=True on CPU — correctness
+path) vs the pure-jnp oracle (the jit'd production fallback).
+
+NOTE: interpret mode executes the kernel body op-by-op in Python, so
+wall-times here are NOT TPU perf predictions; the derived column also
+reports the jnp-reference time, which IS the compiled-CPU datapoint.
+Structural TPU expectations live in EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    lines = []
+    k0 = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(k0, (1024, 256))
+    c = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
+    t_pl = _time(ops.voronoi_scores, x, c, 0.1, interpret=True)
+    t_ref = _time(ref.voronoi_scores_ref, x, c, 0.1)
+    lines.append(f"kernel/voronoi_b1024_k8,{t_pl:.0f},"
+                 f"jnp_ref_us={t_ref:.0f};interpret=True")
+
+    q = jax.random.normal(k0, (4, 16, 128))
+    kk = jax.random.normal(jax.random.PRNGKey(2), (4, 2048, 4, 128))
+    vv = jax.random.normal(jax.random.PRNGKey(3), (4, 2048, 4, 128))
+    t_pl = _time(ops.decode_gqa, q, kk, vv, 2000, interpret=True,
+                 block_s=512)
+    t_ref = _time(ref.decode_gqa_ref, q, kk, vv, 2000)
+    lines.append(f"kernel/decode_gqa_b4_s2048,{t_pl:.0f},"
+                 f"jnp_ref_us={t_ref:.0f};interpret=True")
+
+    r = jax.random.normal(k0, (2, 512, 4, 64))
+    kw = jax.random.normal(jax.random.PRNGKey(4), (2, 512, 4, 64))
+    vw = jax.random.normal(jax.random.PRNGKey(5), (2, 512, 4, 64))
+    w = jax.nn.sigmoid(jax.random.normal(
+        jax.random.PRNGKey(6), (2, 512, 4, 64))) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.PRNGKey(7), (4, 64)) * 0.1
+    t_pl = _time(ops.wkv6, r, kw, vw, w, u, interpret=True, chunk=64)
+    t_seq = _time(ref.wkv6_ref, r, kw, vw, w, u)
+    lines.append(f"kernel/wkv6_b2_s512,{t_pl:.0f},"
+                 f"jnp_seq_ref_us={t_seq:.0f};interpret=True")
+
+    for ln in lines:
+        print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end router throughput: queries/sec through embed -> signals ->
+group normalization -> tensorized policy, vs #routes and batch size.
+Also validator latency vs config size (the compile-time budget story)."""
+from __future__ import annotations
+
+import time
+
+from repro.dsl.compiler import compile_text
+from repro.dsl.validate import Validator
+from repro.serving.router import RouterService
+
+
+def make_dsl(n_routes: int) -> str:
+    parts = []
+    for i in range(n_routes):
+        parts.append(
+            f'SIGNAL embedding s{i} {{\n'
+            f'  candidates: ["topic {i} alpha beta", "subject {i} gamma"]\n'
+            f'  threshold: 0.5\n}}')
+    members = ", ".join(f"s{i}" for i in range(n_routes))
+    parts.append(
+        f"SIGNAL_GROUP g {{ semantics: softmax_exclusive temperature: 0.1\n"
+        f"  threshold: 0.51 members: [{members}] default: s0 }}")
+    for i in range(n_routes):
+        parts.append(
+            f'ROUTE r{i} {{ PRIORITY {100 + i} WHEN embedding("s{i}") '
+            f'MODEL "m{i}" }}')
+    parts.append('GLOBAL { default_model: "m0" }')
+    return "\n".join(parts)
+
+
+def main():
+    lines = []
+    queries = [f"query about topic {i} alpha" for i in range(64)]
+    for n_routes in (4, 16, 64):
+        dsl = make_dsl(n_routes)
+        svc = RouterService(dsl, load_backends=False, validate=False)
+        svc.route(queries[:4])  # warm
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            svc.route(queries)
+        dt = (time.perf_counter() - t0) / reps
+        qps = len(queries) / dt
+        lines.append(f"router/route64_n{n_routes},{dt/len(queries)*1e6:.0f},"
+                     f"qps={qps:.0f}")
+        cfg = compile_text(dsl)
+        t0 = time.perf_counter()
+        Validator(cfg).validate(run_taxonomy=False)
+        v_us = (time.perf_counter() - t0) * 1e6
+        lines.append(f"router/validate_n{n_routes},{v_us:.0f},"
+                     f"static_passes=M1-M5+M7")
+    for ln in lines:
+        print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Table 1 reproduction: per-technique implementation status, exercised
+live (each technique actually runs here, not just claimed).
+
+The paper marks §6 rows 'future work'; this framework implements them —
+status is reported as implemented(+beyond-paper) accordingly."""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import fdd
+from repro.core.algebra import DisjointnessError, PolicyAlgebra
+from repro.core.atoms import SignalAtom
+from repro.core.conditions import And, Atom
+from repro.dsl.compiler import compile_text
+from repro.dsl.validate import Validator
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    status = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return f"table1/{name},{us:.0f},{status}"
+
+
+def category_overlap():
+    cfg = compile_text("""
+SIGNAL domain a { mmlu_categories: ["x"] }
+SIGNAL domain b { mmlu_categories: ["x"] }""")
+    d = Validator(cfg).check_category_overlap()
+    assert d
+    return "implemented;struct=yes"
+
+
+def guard_warning():
+    cfg = compile_text("""
+SIGNAL domain a {}
+SIGNAL domain b {}
+ROUTE hi { PRIORITY 2 WHEN domain("a") MODEL "m" }
+ROUTE lo { PRIORITY 1 WHEN domain("b") MODEL "m" }""")
+    d = Validator(cfg).check_guard_warnings()
+    assert d and d[0].fix_hint
+    return "implemented;struct=yes;auto_repair_hint=yes"
+
+
+def signal_group():
+    cfg = compile_text("""
+SIGNAL domain a {}
+SIGNAL domain b {}
+SIGNAL_GROUP g { temperature: 0.1 threshold: 0.6 members: [a, b] default: a }""")
+    assert Validator(cfg).check_signal_groups() == []
+    return "implemented;struct=yes"
+
+
+def test_blocks():
+    cfg = compile_text("""
+SIGNAL domain a {}
+ROUTE r { PRIORITY 1 WHEN domain("a") MODEL "m" }
+TEST t { "q" -> r }""")
+    assert Validator(cfg).check_tests_static() == []
+    return "implemented;struct=yes;semant=yes"
+
+
+def tier_routing():
+    from repro.serving import policy
+    cfg = compile_text("""
+SIGNAL domain a {}
+ROUTE hi { PRIORITY 1 TIER 2 WHEN domain("a") MODEL "m1" }
+ROUTE lo { PRIORITY 9 TIER 1 WHEN domain("a") MODEL "m2" }""")
+    t = policy.build_tables(cfg)
+    got = policy.route_names(t, np.array([[True]]),
+                             np.array([[0.9]], np.float32))
+    assert got == ["hi"]
+    return "implemented;struct=yes"
+
+
+def decision_tree():
+    t = fdd.DecisionTree("t", (
+        fdd.Branch(Atom("a"), "m1"),
+        fdd.Branch(None, "m2")))
+    fdd.validate_tree(t)
+    return "implemented(beyond-paper:was-future-work);by_construction=yes"
+
+
+def type_checked_composition():
+    c = np.zeros(8)
+    c[0] = 1
+    c2 = np.zeros(8)
+    c2[1] = 1
+    sigs = {"a": SignalAtom("a", "embedding", 0.9, tuple(c)),
+            "b": SignalAtom("b", "embedding", 0.9, tuple(c2))}
+    alg = PolicyAlgebra(sigs)
+    alg.xunion(alg.atomic(Atom("a"), "m1"), alg.atomic(Atom("b"), "m2"))
+    try:
+        sigs_bad = {"a": SignalAtom("a", "embedding", 0.5, tuple(c)),
+                    "b": SignalAtom("b", "embedding", 0.5, tuple(c2))}
+        alg2 = PolicyAlgebra(sigs_bad)
+        alg2.xunion(alg2.atomic(Atom("a"), "m1"),
+                    alg2.atomic(Atom("b"), "m2"))
+        return "BROKEN"
+    except DisjointnessError:
+        return "implemented(beyond-paper:was-future-work);conf=yes"
+
+
+def coherent_head():
+    import jax
+    from repro.core.coherent import (Hierarchy, coherence_violations,
+                                     coherent_scores, init_coherent_head)
+    h = Hierarchy(("p",), (("x", "y"),))
+    p = init_coherent_head(jax.random.PRNGKey(0), 16, h)
+    s = coherent_scores(p, h, jax.numpy.ones((4, 16)))
+    assert int(coherence_violations(s, h)) == 0
+    return "implemented(beyond-paper:was-future-work);conf=yes"
+
+
+def voronoi_normalization():
+    from repro.kernels import ops
+    import jax
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+    c = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    s = np.asarray(ops.voronoi_scores(x, c, 0.1, interpret=True))
+    assert ((s > 0.51).sum(1) <= 1).all()
+    return "implemented;runtime=signal-engine+pallas-kernel;conf=yes"
+
+
+def main():
+    lines = [
+        _run("category_overlap", category_overlap),
+        _run("guard_warning", guard_warning),
+        _run("signal_group", signal_group),
+        _run("test_blocks", test_blocks),
+        _run("tier_routing", tier_routing),
+        _run("decision_tree_fdd", decision_tree),
+        _run("type_checked_composition", type_checked_composition),
+        _run("coherent_head", coherent_head),
+        _run("voronoi_normalization", voronoi_normalization),
+    ]
+    for ln in lines:
+        print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark driver (deliverable d): one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1           — Table 1: technique x conflict-type status, run live
+  running_example  — §2.3/§6.4 numbers + faithfulness findings
+  cofire           — Fig. 4: independent vs Voronoi co-fire rates
+  hierarchy        — Fig. 3: per-level decidability costs
+  taxonomy         — Fig. 2: detection time per conflict type
+  kernels          — Pallas (interpret) vs jnp-oracle microbench
+  router           — end-to-end routing throughput + validator latency
+  moe_voronoi      — beyond-paper: MoE router as Voronoi partition
+  roofline         — deliverable (g): 3-term roofline per (arch x shape)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_cofire, bench_hierarchy, bench_kernels,
+                            bench_moe_voronoi, bench_roofline,
+                            bench_router, bench_running_example,
+                            bench_table1, bench_taxonomy)
+    suites = [
+        ("table1", bench_table1.main),
+        ("running_example", bench_running_example.main),
+        ("cofire", bench_cofire.main),
+        ("hierarchy", bench_hierarchy.main),
+        ("taxonomy", bench_taxonomy.main),
+        ("kernels", bench_kernels.main),
+        ("router", bench_router.main),
+        ("moe_voronoi", bench_moe_voronoi.main),
+        ("roofline", bench_roofline.main),
+    ]
+    only = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:                      # noqa: BLE001
+            failures += 1
+            print(f"{name}/SUITE_FAILED,0,{traceback.format_exc(limit=2)!r}",
+                  file=sys.stderr)
+        print(f"# suite {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

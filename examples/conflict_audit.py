@@ -1,0 +1,96 @@
+"""Conflict audit walkthrough: all six taxonomy types on one config, the
+decidability level of each, FDD normalization, the ⊕ algebra refusing an
+unsafe composition, and the online monitor catching a type-6 conflict
+that every static check misses.
+
+Run:  PYTHONPATH=src python examples/conflict_audit.py
+"""
+import math
+
+import numpy as np
+
+from repro.core import fdd
+from repro.core.algebra import DisjointnessError, PolicyAlgebra
+from repro.core.atoms import SignalAtom
+from repro.core.conditions import And, Atom, Not
+from repro.core.monitor import OnlineConflictMonitor
+from repro.core.taxonomy import ConflictDetector, Rule
+
+
+def _geo(name, deg, radius_deg, d=32):
+    c = np.zeros(d)
+    th = math.radians(deg)
+    c[0], c[1] = math.cos(th), math.sin(th)
+    return SignalAtom(name, "embedding",
+                      math.cos(math.radians(radius_deg)), tuple(c.tolist()))
+
+
+SIGNALS = {
+    "kw": SignalAtom("kw", "keyword", 0.5),
+    "auth": SignalAtom("auth", "authz", 0.5),
+    "math": _geo("math", 0, 45),
+    "science": _geo("science", 30, 45),
+    "dom_m": SignalAtom("dom_m", "domain", 0.5,
+                        categories=("college_mathematics",)),
+    "dom_s": SignalAtom("dom_s", "domain", 0.5,
+                        categories=("college_physics",)),
+}
+
+RULES = [
+    Rule("contradiction", And((Atom("kw"), Not(Atom("kw")))), "m0", 500),
+    Rule("broad", Atom("kw"), "m1", 400),
+    Rule("shadowed", And((Atom("kw"), Atom("auth"))), "m2", 300),
+    Rule("math_route", Atom("math"), "m3", 200),
+    Rule("science_route", Atom("science"), "m4", 100),
+    Rule("dom_m_route", Atom("dom_m"), "m5", 90),
+    Rule("dom_s_route", Atom("dom_s"), "m6", 80),
+]
+
+
+def main():
+    print("=== six-type conflict audit (paper fig. 2) ===")
+    for f in ConflictDetector(SIGNALS).analyze(RULES):
+        print(f"[T{f.kind.value} {f.kind.name:22s}] ({f.decidability.value})"
+              f"\n    {f.detail}\n    fix: {f.fix_hint}")
+
+    print("\n=== FDD normalization (paper §6.1) ===")
+    tree = fdd.normalize_rules(RULES[1:5])
+    for i, b in enumerate(tree.branches):
+        cond = fdd.path_condition(tree, i)
+        print(f"  branch {i}: {b.action:4s} when {cond!r}"[:100])
+
+    print("\n=== ⊕ algebra refusing an unsafe composition (paper §6.2) ===")
+    alg = PolicyAlgebra(SIGNALS)
+    try:
+        alg.xunion(alg.atomic(Atom("math"), "qwen-math"),
+                   alg.atomic(Atom("science"), "qwen-science"))
+    except DisjointnessError as e:
+        print(f"  TYPE ERROR (as the paper's listing 7): {e}")
+    ok = PolicyAlgebra(SIGNALS, exclusive_groups=[("math", "science")])
+    p = ok.xunion(ok.atomic(Atom("math"), "qwen-math"),
+                  ok.atomic(Atom("science"), "qwen-science"))
+    print(f"  with the SIGNAL_GROUP certificate it compiles: "
+          f"{len(p.stages[0])} disjoint terms")
+
+    print("\n=== online monitor: type-6 under distribution shift (§10) ===")
+    mon = OnlineConflictMonitor(["dom_m", "dom_s"],
+                                priority_of={"dom_m": 90, "dom_s": 80},
+                                halflife=200)
+    rng = np.random.default_rng(0)
+    # month 1: clean traffic, no co-fire
+    for _ in range(10):
+        s = np.stack([rng.uniform(0.6, 0.9, 64),
+                      rng.uniform(0.1, 0.4, 64)], axis=1)
+        mon.observe_batch(s, np.array([0.5, 0.5]))
+    print(f"  clean traffic alerts: {len(mon.alerts())}")
+    # month 2: physics queries arrive — both classifiers hot
+    for _ in range(10):
+        s = np.stack([rng.uniform(0.5, 0.7, 64),
+                      rng.uniform(0.6, 0.95, 64)], axis=1)
+        mon.observe_batch(s, np.array([0.5, 0.5]))
+    for a in mon.alerts():
+        print(f"  ALERT [{a.kind.name}]: {a.detail[:90]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper §6.1: conflict-free-by-construction routing with an FDD-style
+DECISION_TREE — the physics overlap must be handled EXPLICITLY, a missing
+ELSE or unreachable branch is a compile error.
+
+Run:  PYTHONPATH=src python examples/decision_tree_policy.py
+"""
+from repro.core import fdd
+from repro.dsl.compiler import compile_text
+from repro.dsl.validate import Validator
+
+GOOD = """
+SIGNAL jailbreak detector { threshold: 0.7 }
+SIGNAL domain math { mmlu_categories: ["college_mathematics"] }
+SIGNAL domain science { mmlu_categories: ["college_physics"] }
+
+DECISION_TREE routing_policy {
+  IF jailbreak("detector") { MODEL "fast-reject" }
+  ELSE IF domain("math") AND domain("science") { MODEL "qwen-physics" }
+  ELSE IF domain("math") { MODEL "qwen-math" }
+  ELSE IF domain("science") { MODEL "qwen-science" }
+  ELSE { MODEL "qwen-default" }
+}
+"""
+
+UNREACHABLE = GOOD.replace(
+    'ELSE IF domain("science") { MODEL "qwen-science" }',
+    'ELSE IF domain("math") AND NOT jailbreak("detector") '
+    '{ MODEL "dead-branch" }')
+
+MISSING_ELSE = """
+SIGNAL domain math {}
+DECISION_TREE t { IF domain("math") { MODEL "m" } }
+"""
+
+
+def main():
+    print("=== valid tree: every branch disjoint by construction ===")
+    cfg = compile_text(GOOD)
+    diags = Validator(cfg).validate(run_taxonomy=False)
+    print("tree diagnostics:", [str(d) for d in diags
+                                if d.code == "M7-tree"] or "none")
+    tree = cfg.trees["routing_policy"]
+    for i in range(len(tree.branches)):
+        print(f"  path {i}: {fdd.path_condition(tree, i)!r}"[:100])
+    print("\nfirst-match evaluation:")
+    for acts in ({"detector": True}, {"math": True, "science": True},
+                 {"math": True}, {}):
+        print(f"  {str(acts):44s} -> {fdd.evaluate(tree, acts)}")
+
+    print("\n=== unreachable branch -> compile error ===")
+    cfg2 = compile_text(UNREACHABLE)
+    for d in Validator(cfg2).validate(run_taxonomy=False):
+        if d.code == "M7-tree":
+            print(" ", d.message)
+
+    print("\n=== missing ELSE -> compile error ===")
+    try:
+        cfg3 = compile_text(MISSING_ELSE)
+        for d in Validator(cfg3).validate(run_taxonomy=False):
+            if d.code == "M7-tree":
+                print(" ", d.message)
+    except Exception as e:  # parser may reject earlier
+        print(" ", e)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Quickstart: author a conflicted config, watch the compiler catch it,
+apply the paper's fix, emit deployment artifacts.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.dsl.compiler import compile_text
+from repro.dsl.decompile import decompile
+from repro.dsl.emit import to_crd_dict, to_flat_dict, to_yaml
+from repro.dsl.validate import Validator
+from repro.serving.router import RouterService
+
+CONFLICTED = """
+# The paper's listing 1: two domain signals the author believes disjoint.
+SIGNAL domain math {
+  mmlu_categories: ["college_mathematics", "abstract_algebra"]
+}
+SIGNAL domain science {
+  mmlu_categories: ["college_physics", "college_chemistry"]
+}
+ROUTE math_route {
+  PRIORITY 200
+  WHEN domain("math")
+  MODEL "qwen2.5-math"
+}
+ROUTE science_route {
+  PRIORITY 100
+  WHEN domain("science")
+  MODEL "qwen2.5-science"
+}
+GLOBAL { default_model: "qwen2.5-science" }
+"""
+
+FIX = """
+SIGNAL_GROUP domain_taxonomy {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math, science]
+  default: science
+}
+"""
+
+
+def banner(s):
+    print(f"\n=== {s} " + "=" * max(0, 60 - len(s)))
+
+
+def main():
+    banner("1. validate the conflicted config")
+    svc = RouterService(CONFLICTED, load_backends=False)  # binds centroids
+    for d in Validator(svc.config).validate():
+        print(d)
+
+    banner("2. the physics query routes WRONG (priority beats evidence)")
+    q = "What is the quantum tunneling probability through a barrier?"
+    res = svc.engine.evaluate([q])
+    print({n: round(float(v), 3) for n, v in zip(res.names, res.raw[0])})
+    print("winner:", svc.route([q])[0], " <- math wins on priority")
+
+    banner("3. apply the SIGNAL_GROUP fix (no retraining!)")
+    svc2 = RouterService(CONFLICTED + FIX, load_backends=False)
+    bad = [d for d in Validator(svc2.config).validate()
+           if d.code.startswith("M6")]
+    print(f"taxonomy findings after fix: {len(bad)}")
+    res2 = svc2.engine.evaluate([q])
+    print({n: round(float(v), 3) for n, v in zip(res2.names,
+                                                 res2.normalized[0])})
+    print("winner:", svc2.route([q])[0])
+
+    banner("4. round-trip + emit")
+    text = decompile(svc2.config)
+    assert to_flat_dict(compile_text(text)) == to_flat_dict(svc2.config)
+    print("round-trip: OK")
+    print(to_yaml(to_crd_dict(svc2.config))[:600] + " ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper §8: semantic RBAC — the same conflict taxonomy and fix, where a
+type-4 conflict is a PRIVILEGE ESCALATION rather than a wrong model.
+
+Run:  PYTHONPATH=src python examples/rbac_policy.py
+"""
+from repro.dsl.validate import Validator
+from repro.serving.router import RouterService
+
+RBAC = """
+SIGNAL embedding researcher_behavior {
+  candidates: ["citing literature", "statistical analysis",
+               "scientific query"]
+  threshold: 0.55
+}
+SIGNAL embedding medical_professional_behavior {
+  candidates: ["clinical statistics", "biostatistics analysis",
+               "patient literature"]
+  threshold: 0.55
+}
+SIGNAL authz verified_employee {
+  subjects: [{ kind: "Group", name: "staff" }]
+}
+ROUTE researcher_access {
+  PRIORITY 200
+  WHEN embedding("researcher_behavior") AND authz("verified_employee")
+  PLUGIN rag { backend: "restricted_papers" }
+}
+ROUTE medical_access {
+  PRIORITY 150
+  WHEN embedding("medical_professional_behavior") AND authz("verified_employee")
+  PLUGIN rag { backend: "phi_records" }
+}
+ROUTE general_access {
+  PRIORITY 100
+  WHEN authz("verified_employee")
+  MODEL "general"
+}
+PLUGIN rag { backend: "default" }
+GLOBAL { default_model: "general" }
+"""
+
+FIX = """
+SIGNAL_GROUP behavioral_roles {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.6
+  members: [researcher_behavior, medical_professional_behavior]
+  default: researcher_behavior
+}
+"""
+
+ESCALATION_QUERY = "biostatistics literature analysis of patient statistics"
+
+
+def main():
+    print("=== hazard: overlapping behavioral-role signals ===")
+    svc = RouterService(RBAC, load_backends=False)
+    for d in Validator(svc.config).validate():
+        if d.code.startswith(("M2", "M6")):
+            print(d)
+    res = svc.engine.evaluate([ESCALATION_QUERY],
+                              metadata=[{"groups": ["staff"]}])
+    ri = res.names.index("researcher_behavior")
+    mi = res.names.index("medical_professional_behavior")
+    print(f"\nco-fire on escalation query: researcher={res.raw[0, ri]:.2f} "
+          f"medical={res.raw[0, mi]:.2f} "
+          f"both>=0.55: {bool(res.raw[0, ri] >= .55 and res.raw[0, mi] >= .55)}")
+    print("-> in access control this grants BOTH restricted_papers and "
+          "phi_records exposure paths (paper §8: privilege escalation)")
+
+    print("\n=== fix: softmax_exclusive group over behavioral roles ===")
+    svc2 = RouterService(RBAC + FIX, load_backends=False)
+    res2 = svc2.engine.evaluate([ESCALATION_QUERY],
+                                metadata=[{"groups": ["staff"]}])
+    print({n: round(float(v), 3)
+           for n, v in zip(res2.names, res2.normalized[0])
+           if "behavior" in n})
+    both = res2.fired[0, res2.names.index("researcher_behavior")] and \
+        res2.fired[0, res2.names.index("medical_professional_behavior")]
+    print(f"co-fire after fix: {bool(both)} (guaranteed by Thm 2, θ>1/2)")
+    print("route:", svc2.route([ESCALATION_QUERY],
+                               metadata=[{"groups": ["staff"]}])[0])
+    print("route (not staff):", svc2.route([ESCALATION_QUERY],
+                                           metadata=[{"groups": []}])[0])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, smoke_variant
+from repro.configs.registry import get_config, get_shape, input_specs, list_archs

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the definition)."""
+from repro.configs.archs import GEMMA3_27B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the definition)."""
+from repro.configs.archs import INTERNLM2_1_8B as CONFIG
+
+__all__ = ["CONFIG"]

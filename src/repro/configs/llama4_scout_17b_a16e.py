@@ -1,0 +1,4 @@
+"""Assigned architecture config (see archs.py for the definition)."""
+from repro.configs.archs import LLAMA4_SCOUT_17B_A16E as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,69 @@
+"""Architecture registry: ``--arch <id>`` lookup + dry-run input specs."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import archs
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                smoke_variant)
+
+
+def list_archs():
+    return sorted(archs.ALL)
+
+
+def get_config(arch: str, *, smoke: bool = False, **overrides) -> ModelConfig:
+    if arch not in archs.ALL:
+        raise KeyError(f"unknown arch {arch!r}; available: {list_archs()}")
+    cfg = archs.ALL[arch]
+    if smoke:
+        cfg = smoke_variant(cfg)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.name in archs.LONG_CONTEXT_OK
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> str:
+    if shape.name == "long_500k" and cfg.name not in archs.LONG_CONTEXT_OK:
+        return ("pure full-attention decode at 500k cache skipped per "
+                "assignment; see DESIGN.md 'Shape skips'")
+    return ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input — shardable,
+    weak-type-correct, zero device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": sds((b, 1), jnp.int32)}
+    extras = {}
+    if cfg.encoder is not None:
+        extras["audio_features"] = sds(
+            (b, cfg.encoder.n_frames, cfg.encoder.d_input), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    if cfg.vision is not None:
+        extras["vision_embeds"] = sds(
+            (b, cfg.vision.n_tokens, cfg.vision.d_input), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    if extras:
+        specs["extras"] = extras
+    return specs

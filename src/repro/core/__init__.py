@@ -1,0 +1,6 @@
+"""ProbPol — the paper's formal framework for probabilistic policy conflict."""
+from repro.core.atoms import AtomKind, SignalAtom
+from repro.core.conditions import And, Atom, Cond, Not, Or
+from repro.core.taxonomy import (ConflictDetector, ConflictType,
+                                 Decidability, Finding, Rule)
+from repro.core.voronoi import VoronoiGroup, voronoi_scores

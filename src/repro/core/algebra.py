@@ -1,0 +1,129 @@
+"""Typed policy composition algebra (paper §6.2, after NetKAT).
+
+    p = cond -> action                        (atomic policy)
+    p1 (+) p2        exclusive union — TYPE ERROR unless provably disjoint
+    p1 >> p2         sequential composition (p1 first; p2 on fall-through)
+
+Disjointness certificates, by atom level (Theorem 1):
+  * crisp       — SAT:   cond1 ∧ cond2 UNSAT (under group constraints)
+  * geometric   — spherical caps of every cross pair disjoint, OR both
+                  atoms in the same softmax_exclusive group
+  * classifier  — only certifiable via group exclusivity; otherwise the
+                  composition is rejected (undecidable statically)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import geometry, sat
+from repro.core.atoms import AtomKind, SignalAtom
+from repro.core.conditions import Cond
+from repro.core.taxonomy import Rule
+
+
+class DisjointnessError(TypeError):
+    """The ⊕ operator's compile-time contract failed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyTerm:
+    condition: Cond
+    action: str
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """A set of provably pairwise-disjoint (condition -> action) terms,
+    evaluated in order within a stage; stages compose sequentially."""
+    stages: Tuple[Tuple[PolicyTerm, ...], ...]
+
+
+class PolicyAlgebra:
+    def __init__(self, signals: Dict[str, SignalAtom],
+                 exclusive_groups: Sequence[Sequence[str]] = ()):
+        self.signals = signals
+        self.groups = [tuple(g) for g in exclusive_groups]
+
+    # -- certificates --------------------------------------------------------
+    def _same_group(self, a: str, b: str) -> bool:
+        return any(a in g and b in g for g in self.groups)
+
+    def certify_disjoint(self, t1: PolicyTerm, t2: PolicyTerm) -> Optional[str]:
+        """-> None if certified, else a human-readable refusal."""
+        model = sat.co_satisfiable(t1.condition, t2.condition, self.groups)
+        if model is None:
+            return None  # crisp-level certificate
+        # the SAT witness co-fires; check whether every co-fired pair of
+        # probabilistic atoms is geometrically or group-wise impossible
+        pos = [n for n, v in model.items() if v]
+        for a, b in itertools.combinations(sorted(pos), 2):
+            sa, sb = self.signals.get(a), self.signals.get(b)
+            if sa is None or sb is None:
+                continue
+            if a in t1.condition.atoms() and b in t2.condition.atoms() or \
+               b in t1.condition.atoms() and a in t2.condition.atoms():
+                if self._same_group(a, b):
+                    continue
+                if sa.kind is AtomKind.GEOMETRIC and \
+                        sb.kind is AtomKind.GEOMETRIC:
+                    ca = geometry.SphericalCap(sa.centroid_array(),
+                                               sa.threshold) \
+                        if sa.centroid is not None else None
+                    cb = geometry.SphericalCap(sb.centroid_array(),
+                                               sb.threshold) \
+                        if sb.centroid is not None else None
+                    if ca and cb and not geometry.caps_intersect(ca, cb):
+                        continue
+                    return (f"embedding signals {a!r} and {b!r} have "
+                            f"intersecting activation caps; not disjoint")
+                if sa.kind is AtomKind.CLASSIFIER or \
+                        sb.kind is AtomKind.CLASSIFIER:
+                    if sa.categories and sb.categories and \
+                            set(sa.categories) & set(sb.categories):
+                        shared = set(sa.categories) & set(sb.categories)
+                        return (f"classifier signals {a!r}/{b!r} share "
+                                f"categories {sorted(shared)}")
+                    return (f"classifier signals {a!r}/{b!r}: disjointness "
+                            f"undecidable without P(x) (Thm 1.3); declare "
+                            f"a softmax_exclusive SIGNAL_GROUP")
+        return None  # every probabilistic co-fire is impossible
+
+    # -- operators -----------------------------------------------------------
+    def atomic(self, condition: Cond, action: str, name: str = "") -> Policy:
+        return Policy(((PolicyTerm(condition, action, name),),))
+
+    def xunion(self, p1: Policy, p2: Policy) -> Policy:
+        """⊕ — exclusive union of single-stage policies."""
+        if len(p1.stages) != 1 or len(p2.stages) != 1:
+            raise DisjointnessError("⊕ operates on single-stage policies; "
+                                    "use >> for sequencing")
+        for t1 in p1.stages[0]:
+            for t2 in p2.stages[0]:
+                refusal = self.certify_disjoint(t1, t2)
+                if refusal is not None:
+                    raise DisjointnessError(
+                        f"(+) cannot certify disjointness of "
+                        f"{t1.name or t1.action!r} and "
+                        f"{t2.name or t2.action!r}: {refusal}")
+        return Policy((tuple(p1.stages[0]) + tuple(p2.stages[0]),))
+
+    def seq(self, p1: Policy, p2: Policy) -> Policy:
+        """>> — p1's stages first, then p2's."""
+        return Policy(tuple(p1.stages) + tuple(p2.stages))
+
+    # -- lowering ------------------------------------------------------------
+    def to_rules(self, p: Policy) -> List[Rule]:
+        rules: List[Rule] = []
+        n_stages = len(p.stages)
+        for si, stage in enumerate(p.stages):
+            for ti, term in enumerate(stage):
+                rules.append(Rule(
+                    name=term.name or f"stage{si}_term{ti}",
+                    condition=term.condition,
+                    action=term.action,
+                    priority=(len(stage) - ti) * 10,
+                    tier=n_stages - si))
+        return rules

@@ -1,0 +1,72 @@
+"""Signal atoms — the predicates of a probabilistic policy (paper §3).
+
+Three kinds, which determine static decidability (Theorem 1):
+  CRISP      — always 0/1 (keyword, group membership, token count)
+  GEOMETRIC  — embedding cosine similarity vs a centroid: the activation
+               region is a spherical cap on S^{d-1}
+  CLASSIFIER — soft neural score; decision boundary depends on training
+               data; conflict undecidable without P(x)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class AtomKind(enum.Enum):
+    CRISP = "crisp"
+    GEOMETRIC = "geometric"
+    CLASSIFIER = "classifier"
+
+
+# signal types shipped by the Semantic Router DSL (paper §2.2: 13 types)
+SIGNAL_TYPE_KINDS = {
+    "keyword": AtomKind.CRISP,
+    "regex": AtomKind.CRISP,
+    "token_count": AtomKind.CRISP,
+    "authz": AtomKind.CRISP,
+    "header": AtomKind.CRISP,
+    "tenant": AtomKind.CRISP,
+    "embedding": AtomKind.GEOMETRIC,
+    "similarity": AtomKind.GEOMETRIC,
+    "domain": AtomKind.CLASSIFIER,
+    "complexity": AtomKind.CLASSIFIER,
+    "jailbreak": AtomKind.CLASSIFIER,
+    "pii": AtomKind.CLASSIFIER,
+    "language": AtomKind.CLASSIFIER,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalAtom:
+    """A named signal with an activation threshold."""
+    name: str
+    signal_type: str
+    threshold: float = 0.5
+    # GEOMETRIC: unit centroid (set when the embedding model is available)
+    centroid: Optional[Tuple[float, ...]] = None
+    # CLASSIFIER (domain): declared category strings (e.g. MMLU categories)
+    categories: Tuple[str, ...] = ()
+    # group this atom belongs to, if any (SIGNAL_GROUP)
+    group: Optional[str] = None
+
+    @property
+    def kind(self) -> AtomKind:
+        return SIGNAL_TYPE_KINDS.get(self.signal_type, AtomKind.CLASSIFIER)
+
+    def centroid_array(self) -> Optional[np.ndarray]:
+        if self.centroid is None:
+            return None
+        c = np.asarray(self.centroid, dtype=np.float64)
+        n = np.linalg.norm(c)
+        return c / max(n, 1e-12)
+
+    def angular_radius(self) -> Optional[float]:
+        """Half-angle of the spherical-cap activation region (radians)."""
+        if self.kind is not AtomKind.GEOMETRIC:
+            return None
+        t = min(max(self.threshold, -1.0), 1.0)
+        return float(np.arccos(t))

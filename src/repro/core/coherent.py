@@ -1,0 +1,79 @@
+"""Coherent classifier head (paper §6.3, after C-HMCNN, Giunchiglia &
+Lukasiewicz 2020) — hierarchy-coherent multi-label scores by construction.
+
+For a label hierarchy (children grouped under parents):
+  * sibling leaves under one parent pass through a softmax (Σ = 1 — the
+    within-parent analogue of Voronoi normalization), and
+  * a parent's score is the max of its children (the C-HMCNN 'max
+    constraint'), so parent ≥ child always holds.
+
+This is the *training-time* route to mutual exclusion; Voronoi
+normalization (core/voronoi.py) achieves the same at inference time with
+no retraining — the comparison the paper draws in §6.3/§6.4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """Two-level hierarchy: parents -> tuple of leaf labels."""
+    parents: Tuple[str, ...]
+    children: Tuple[Tuple[str, ...], ...]
+
+    @property
+    def leaves(self) -> Tuple[str, ...]:
+        return tuple(l for group in self.children for l in group)
+
+    def leaf_slices(self) -> List[Tuple[int, int]]:
+        out, i = [], 0
+        for group in self.children:
+            out.append((i, i + len(group)))
+            i += len(group)
+        return out
+
+
+def init_coherent_head(key, d_model: int, hier: Hierarchy, dtype=jnp.float32):
+    n = len(hier.leaves)
+    return {"w_head": cm.dense_init(key, (d_model, n), dtype),
+            "b_head": jnp.zeros((n,), dtype)}
+
+
+def coherent_scores(params, hier: Hierarchy, x: jnp.ndarray
+                    ) -> Dict[str, jnp.ndarray]:
+    """x: (B, d) pooled features -> {'leaf': (B, n_leaves), 'parent':
+    (B, n_parents)}; within-parent leaves sum to 1; parent = max child."""
+    logits = x @ params["w_head"] + params["b_head"]
+    leaf_parts = []
+    parent_parts = []
+    for (lo, hi) in hier.leaf_slices():
+        probs = jax.nn.softmax(logits[:, lo:hi], axis=-1)
+        leaf_parts.append(probs)
+        parent_parts.append(probs.max(axis=-1, keepdims=True))
+    return {"leaf": jnp.concatenate(leaf_parts, axis=-1),
+            "parent": jnp.concatenate(parent_parts, axis=-1)}
+
+
+def coherence_violations(scores: Dict[str, jnp.ndarray], hier: Hierarchy,
+                         atol: float = 1e-5) -> jnp.ndarray:
+    """Count of (parent < child) violations — zero by construction."""
+    viol = jnp.zeros((), jnp.int32)
+    for pi, (lo, hi) in enumerate(hier.leaf_slices()):
+        child_max = scores["leaf"][:, lo:hi].max(axis=-1)
+        viol += jnp.sum(scores["parent"][:, pi] + atol < child_max)
+    return viol
+
+
+def coherent_loss(params, hier: Hierarchy, x, leaf_labels):
+    """CE over within-parent softmaxes (trains the head end-to-end)."""
+    scores = coherent_scores(params, hier, x)
+    lp = jnp.log(jnp.clip(scores["leaf"], 1e-9))
+    nll = -jnp.take_along_axis(lp, leaf_labels[:, None], axis=-1)
+    return jnp.mean(nll)

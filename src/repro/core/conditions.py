@@ -1,0 +1,180 @@
+"""Boolean condition AST over signal atoms (WHEN clauses), with NNF/CNF
+conversion for the SAT-based detectors (Theorem 1 case 1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Sequence, Tuple, Union
+
+
+class Cond:
+    """Base class.  Combinators: & | ~ build the tree."""
+
+    def __and__(self, other: "Cond") -> "Cond":
+        return And((self, other))
+
+    def __or__(self, other: "Cond") -> "Cond":
+        return Or((self, other))
+
+    def __invert__(self) -> "Cond":
+        return Not(self)
+
+    def atoms(self) -> FrozenSet[str]:
+        raise NotImplementedError
+
+    def evaluate(self, activations: Dict[str, bool]) -> bool:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Atom(Cond):
+    name: str  # references a SignalAtom by name
+
+    def atoms(self):
+        return frozenset({self.name})
+
+    def evaluate(self, a):
+        return bool(a.get(self.name, False))
+
+    def __repr__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Cond):
+    child: Cond
+
+    def atoms(self):
+        return self.child.atoms()
+
+    def evaluate(self, a):
+        return not self.child.evaluate(a)
+
+    def __repr__(self):
+        return f"NOT {self.child!r}"
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Cond):
+    children: Tuple[Cond, ...]
+
+    def atoms(self):
+        return frozenset().union(*(c.atoms() for c in self.children)) \
+            if self.children else frozenset()
+
+    def evaluate(self, a):
+        return all(c.evaluate(a) for c in self.children)
+
+    def __repr__(self):
+        return "(" + " AND ".join(map(repr, self.children)) + ")"
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Cond):
+    children: Tuple[Cond, ...]
+
+    def atoms(self):
+        return frozenset().union(*(c.atoms() for c in self.children)) \
+            if self.children else frozenset()
+
+    def evaluate(self, a):
+        return any(c.evaluate(a) for c in self.children)
+
+    def __repr__(self):
+        return "(" + " OR ".join(map(repr, self.children)) + ")"
+
+
+TRUE = And(())
+FALSE = Or(())
+
+
+# ---------------------------------------------------------------------------
+# CNF via Tseitin transform (linear size; used by core/sat.py)
+# ---------------------------------------------------------------------------
+
+class CNFBuilder:
+    """Variables are 1-based ints; clauses are lists of signed ints."""
+
+    def __init__(self):
+        self.var_of: Dict[str, int] = {}
+        self.clauses: List[List[int]] = []
+        self._next = 1
+
+    def var(self, name: str) -> int:
+        if name not in self.var_of:
+            self.var_of[name] = self._next
+            self._next += 1
+        return self.var_of[name]
+
+    def fresh(self) -> int:
+        v = self._next
+        self._next += 1
+        return v
+
+    def add(self, clause: Iterable[int]):
+        self.clauses.append(list(clause))
+
+    def tseitin(self, cond: Cond) -> int:
+        """Returns a literal equivalent to `cond`."""
+        if isinstance(cond, Atom):
+            return self.var(cond.name)
+        if isinstance(cond, Not):
+            return -self.tseitin(cond.child)
+        if isinstance(cond, And):
+            if not cond.children:           # TRUE
+                t = self.fresh()
+                self.add([t])
+                return t
+            lits = [self.tseitin(c) for c in cond.children]
+            g = self.fresh()
+            for l in lits:
+                self.add([-g, l])
+            self.add([g] + [-l for l in lits])
+            return g
+        if isinstance(cond, Or):
+            if not cond.children:           # FALSE
+                t = self.fresh()
+                self.add([-t])
+                return t
+            lits = [self.tseitin(c) for c in cond.children]
+            g = self.fresh()
+            for l in lits:
+                self.add([-l, g])
+            self.add([-g] + lits)
+            return g
+        raise TypeError(type(cond))
+
+    def n_vars(self) -> int:
+        return self._next - 1
+
+
+def to_dnf_atoms(cond: Cond) -> List[Tuple[FrozenSet[str], FrozenSet[str]]]:
+    """Small-policy DNF: list of (positive atoms, negative atoms) terms.
+    Exponential in the worst case — used only for the tensorized policy
+    evaluator where WHEN clauses are small."""
+    if isinstance(cond, Atom):
+        return [(frozenset({cond.name}), frozenset())]
+    if isinstance(cond, Not):
+        inner = cond.child
+        if isinstance(inner, Atom):
+            return [(frozenset(), frozenset({inner.name}))]
+        if isinstance(inner, Not):
+            return to_dnf_atoms(inner.child)
+        if isinstance(inner, And):
+            return to_dnf_atoms(Or(tuple(Not(c) for c in inner.children)))
+        if isinstance(inner, Or):
+            return to_dnf_atoms(And(tuple(Not(c) for c in inner.children)))
+    if isinstance(cond, Or):
+        out = []
+        for c in cond.children:
+            out.extend(to_dnf_atoms(c))
+        return out
+    if isinstance(cond, And):
+        terms: List[Tuple[FrozenSet[str], FrozenSet[str]]] = \
+            [(frozenset(), frozenset())]
+        for c in cond.children:
+            sub = to_dnf_atoms(c)
+            terms = [(p | sp, n | sn) for (p, n) in terms for (sp, sn) in sub]
+            if len(terms) > 4096:
+                raise ValueError("DNF blow-up; use the SAT path")
+        return terms
+    raise TypeError(type(cond))

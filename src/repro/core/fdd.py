@@ -1,0 +1,104 @@
+"""Firewall-Decision-Diagram policy encoding (paper §6.1, after Gouda &
+Liu).  A DECISION_TREE is an IF/ELSE-IF/ELSE chain whose branches are
+disjoint *by construction* (each branch implicitly conjoins the negation
+of all earlier guards).  The compiler requires:
+
+  * a catch-all ELSE (exhaustiveness) — compile error if missing
+  * every branch reachable — compile error if a guard is UNSAT given the
+    negations of its predecessors (and group exclusivity constraints)
+
+Also provides the flat-list -> FDD normalization ("all-match to
+first-match" rewriting), which is how an existing priority list can be
+migrated to the conflict-free form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import sat
+from repro.core.conditions import And, Cond, Not, TRUE
+from repro.core.taxonomy import Rule
+
+
+@dataclasses.dataclass(frozen=True)
+class Branch:
+    guard: Optional[Cond]        # None = ELSE
+    action: str
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionTree:
+    name: str
+    branches: Tuple[Branch, ...]
+
+
+class FDDError(ValueError):
+    pass
+
+
+def validate_tree(tree: DecisionTree,
+                  exclusive_groups: Sequence[Sequence[str]] = ()
+                  ) -> List[str]:
+    """-> list of diagnostics; raises FDDError on structural errors."""
+    notes: List[str] = []
+    if not tree.branches:
+        raise FDDError(f"DECISION_TREE {tree.name}: empty")
+    if tree.branches[-1].guard is not None:
+        raise FDDError(
+            f"DECISION_TREE {tree.name}: missing required catch-all ELSE")
+    for i, b in enumerate(tree.branches[:-1]):
+        if b.guard is None:
+            raise FDDError(
+                f"DECISION_TREE {tree.name}: ELSE before last branch")
+        path = path_condition(tree, i)
+        if not sat.satisfiable(path, exclusive_groups):
+            raise FDDError(
+                f"DECISION_TREE {tree.name}: branch {i} "
+                f"({b.action}) is unreachable")
+    return notes
+
+
+def path_condition(tree: DecisionTree, index: int) -> Cond:
+    """Guard_i ∧ ¬Guard_0 ∧ … ∧ ¬Guard_{i-1} — the *disjoint* condition."""
+    negs = [Not(b.guard) for b in tree.branches[:index]
+            if b.guard is not None]
+    guard = tree.branches[index].guard
+    parts = ([guard] if guard is not None else []) + negs
+    return And(tuple(parts)) if parts else TRUE
+
+
+def to_rules(tree: DecisionTree) -> List[Rule]:
+    """Lower the FDD to a prioritized rule list with provably disjoint
+    conditions (priorities descending by branch order)."""
+    rules = []
+    n = len(tree.branches)
+    for i, b in enumerate(tree.branches):
+        rules.append(Rule(
+            name=b.name or f"{tree.name}_branch{i}",
+            condition=path_condition(tree, i),
+            action=b.action,
+            priority=(n - i) * 10))
+    return rules
+
+
+def normalize_rules(rules: Sequence[Rule]) -> DecisionTree:
+    """Flat first-match list -> FDD: branch i's guard is rule i's raw
+    condition; disjointness then holds by path semantics.  Appends an
+    explicit reject ELSE if the list has no TRUE rule."""
+    ordered = sorted(rules, key=lambda r: (-r.tier, -r.priority))
+    branches = [Branch(r.condition, r.action, r.name) for r in ordered]
+    if branches and isinstance(branches[-1].guard, And) \
+            and not branches[-1].guard.children:
+        branches[-1] = Branch(None, branches[-1].action, branches[-1].name)
+    else:
+        branches.append(Branch(None, "__default_reject__", "catch_all"))
+    return DecisionTree("normalized", tuple(branches))
+
+
+def evaluate(tree: DecisionTree, activations: Dict[str, bool]) -> str:
+    for b in tree.branches:
+        if b.guard is None or b.guard.evaluate(activations):
+            return b.action
+    raise FDDError("unreachable: validated trees always hit ELSE")

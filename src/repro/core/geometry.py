@@ -1,0 +1,174 @@
+"""Unit-sphere geometry for GEOMETRIC (embedding) signals — Theorem 1
+case 2.
+
+* Activation region of an embedding signal = spherical cap
+  C(c, r) = {x ∈ S^{d-1} : <x, c> ≥ cos r},  r = arccos(threshold).
+* Two caps intersect  ⟺  angle(c_i, c_j) ≤ r_i + r_j   (closed caps).
+* Cap measure (fraction of the sphere) via the regularized incomplete
+  beta function:  A(r)/A(S^{d-1}) = ½ I_{sin²r}((d−1)/2, ½)  for r ≤ π/2.
+* vMF sampling (Wood's algorithm) for co-firing probability estimates
+  under realistic query distributions.
+
+Everything here is numpy — these run inside the compiler/validator, not
+on the accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SphericalCap:
+    centroid: np.ndarray          # unit vector, shape (d,)
+    threshold: float              # cosine threshold in (-1, 1]
+
+    @property
+    def angular_radius(self) -> float:
+        return float(np.arccos(np.clip(self.threshold, -1.0, 1.0)))
+
+
+def angle_between(u: np.ndarray, v: np.ndarray) -> float:
+    un = u / np.linalg.norm(u)
+    vn = v / np.linalg.norm(v)
+    return float(np.arccos(np.clip(un @ vn, -1.0, 1.0)))
+
+
+def caps_intersect(a: SphericalCap, b: SphericalCap) -> bool:
+    """Theorem 1 case 2 decision procedure (closed caps)."""
+    return angle_between(a.centroid, b.centroid) \
+        <= a.angular_radius + b.angular_radius + 1e-12
+
+
+def cap_separation_margin(a: SphericalCap, b: SphericalCap) -> float:
+    """Positive ⇒ disjoint by that many radians; ≤ 0 ⇒ intersecting."""
+    return angle_between(a.centroid, b.centroid) \
+        - (a.angular_radius + b.angular_radius)
+
+
+# ---------------------------------------------------------------------------
+# Cap measure
+# ---------------------------------------------------------------------------
+
+def _log_beta(a: float, b: float) -> float:
+    return math.lgamma(a) + math.lgamma(b) - math.lgamma(a + b)
+
+
+def _betainc_reg(a: float, b: float, x: float) -> float:
+    """Regularized incomplete beta I_x(a,b) by continued fraction
+    (Numerical Recipes 'betacf'); no scipy in this environment."""
+    if x <= 0.0:
+        return 0.0
+    if x >= 1.0:
+        return 1.0
+    lbeta = _log_beta(a, b)
+    front = math.exp(a * math.log(x) + b * math.log1p(-x) - lbeta) / a
+
+    def betacf(a, b, x):
+        qab, qap, qam = a + b, a + 1.0, a - 1.0
+        c, d = 1.0, 1.0 - qab * x / qap
+        if abs(d) < 1e-30:
+            d = 1e-30
+        d = 1.0 / d
+        h = d
+        for m in range(1, 200):
+            m2 = 2 * m
+            aa = m * (b - m) * x / ((qam + m2) * (a + m2))
+            d = 1.0 + aa * d
+            if abs(d) < 1e-30:
+                d = 1e-30
+            c = 1.0 + aa / c
+            if abs(c) < 1e-30:
+                c = 1e-30
+            d = 1.0 / d
+            h *= d * c
+            aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
+            d = 1.0 + aa * d
+            if abs(d) < 1e-30:
+                d = 1e-30
+            c = 1.0 + aa / c
+            if abs(c) < 1e-30:
+                c = 1e-30
+            d = 1.0 / d
+            delta = d * c
+            h *= delta
+            if abs(delta - 1.0) < 1e-12:
+                break
+        return h
+
+    if x < (a + 1.0) / (a + b + 2.0):
+        return front * betacf(a, b, x)
+    return 1.0 - math.exp(b * math.log1p(-x) + a * math.log(x)
+                          - lbeta) / b * betacf(b, a, 1.0 - x)
+
+
+def cap_fraction(radius: float, d: int) -> float:
+    """Fraction of S^{d-1} covered by a cap of angular radius `radius`."""
+    if radius <= 0:
+        return 0.0
+    if radius >= math.pi:
+        return 1.0
+    if radius <= math.pi / 2:
+        x = math.sin(radius) ** 2
+        return 0.5 * _betainc_reg((d - 1) / 2.0, 0.5, x)
+    return 1.0 - cap_fraction(math.pi - radius, d)
+
+
+# ---------------------------------------------------------------------------
+# von Mises–Fisher sampling (Wood 1994) — for P(co-fire) estimation
+# ---------------------------------------------------------------------------
+
+def sample_vmf(mu: np.ndarray, kappa: float, n: int,
+               rng: np.random.Generator) -> np.ndarray:
+    """n samples from vMF(mu, kappa) on S^{d-1}."""
+    mu = np.asarray(mu, np.float64)
+    d = mu.shape[0]
+    mu = mu / np.linalg.norm(mu)
+    if kappa <= 1e-9:
+        x = rng.normal(size=(n, d))
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+    b = (-2 * kappa + math.sqrt(4 * kappa ** 2 + (d - 1) ** 2)) / (d - 1)
+    x0 = (1 - b) / (1 + b)
+    c = kappa * x0 + (d - 1) * math.log(1 - x0 ** 2)
+    ws = np.empty(n)
+    filled = 0
+    while filled < n:
+        m = (n - filled) * 2 + 8
+        z = rng.beta((d - 1) / 2.0, (d - 1) / 2.0, size=m)
+        w = (1 - (1 + b) * z) / (1 - (1 - b) * z)
+        u = rng.uniform(size=m)
+        ok = kappa * w + (d - 1) * np.log(1 - x0 * w) - c >= np.log(u)
+        take = w[ok][: n - filled]
+        ws[filled: filled + take.shape[0]] = take
+        filled += take.shape[0]
+    # tangential component
+    v = rng.normal(size=(n, d))
+    v -= (v @ mu)[:, None] * mu[None]
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    return ws[:, None] * mu[None] + np.sqrt(1 - ws ** 2)[:, None] * v
+
+
+def cofire_probability(caps: Sequence[SphericalCap], *,
+                       query_dist: str = "uniform",
+                       mixture_kappa: float = 0.0,
+                       n_samples: int = 20_000,
+                       seed: int = 0) -> float:
+    """Monte-Carlo P(≥2 caps fire) under uniform or a vMF mixture centered
+    on the caps' centroids (the realistic 'queries cluster near topics'
+    distribution)."""
+    rng = np.random.default_rng(seed)
+    d = caps[0].centroid.shape[0]
+    if query_dist == "uniform":
+        x = rng.normal(size=(n_samples, d))
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+    else:
+        per = n_samples // len(caps) + 1
+        xs = [sample_vmf(c.centroid, mixture_kappa, per, rng) for c in caps]
+        x = np.concatenate(xs)[:n_samples]
+    C = np.stack([c.centroid / np.linalg.norm(c.centroid) for c in caps])
+    sims = x @ C.T
+    fires = sims >= np.array([c.threshold for c in caps])[None]
+    return float(np.mean(fires.sum(axis=1) >= 2))

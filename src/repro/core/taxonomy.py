@@ -1,0 +1,267 @@
+"""Conflict taxonomy (paper §3.1, fig. 2) and the decidability-hierarchy
+driver (§3.2, Theorem 1).
+
+Six anomaly types over pairs of rules with different actions/priorities:
+
+  1 LOGICAL_CONTRADICTION — condition unsatisfiable            (SAT)
+  2 STRUCTURAL_SHADOWING  — higher-priority condition implied  (SAT)
+  3 STRUCTURAL_REDUNDANCY — conditions equivalent              (SAT)
+  4 PROBABLE_CONFLICT     — co-fire on a non-trivial input mass
+                            (geometric: cap intersection + measure;
+                             classifier: Monte-Carlo / TEST blocks)
+  5 SOFT_SHADOWING        — priority routinely overrides a more-confident
+                            signal (distributional estimate)
+  6 CALIBRATION_CONFLICT  — structurally disjoint categories co-activate
+                            near semantic boundaries (undecidable without
+                            P(x); flagged empirically)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import geometry, sat
+from repro.core.atoms import AtomKind, SignalAtom
+from repro.core.conditions import Atom, Cond
+
+
+class ConflictType(enum.Enum):
+    LOGICAL_CONTRADICTION = 1
+    STRUCTURAL_SHADOWING = 2
+    STRUCTURAL_REDUNDANCY = 3
+    PROBABLE_CONFLICT = 4
+    SOFT_SHADOWING = 5
+    CALIBRATION_CONFLICT = 6
+
+
+class Decidability(enum.Enum):
+    SAT = "decidable-sat"                  # crisp atoms
+    GEOMETRIC = "decidable-geometric"      # embedding atoms, fixed model
+    UNDECIDABLE = "undecidable-static"     # classifier atoms w/o P(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    condition: Cond
+    action: str
+    priority: int
+    tier: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    kind: ConflictType
+    decidability: Decidability
+    rules: Tuple[str, ...]
+    detail: str
+    severity: str = "warning"              # warning | error
+    evidence: Optional[dict] = None
+    fix_hint: str = ""
+
+
+def atom_kinds(cond: Cond, signals: Dict[str, SignalAtom]) -> List[AtomKind]:
+    return [signals[n].kind for n in sorted(cond.atoms()) if n in signals]
+
+
+def condition_level(cond: Cond, signals: Dict[str, SignalAtom]) -> Decidability:
+    """Theorem 1: the decidability level of a condition = worst atom."""
+    kinds = set(atom_kinds(cond, signals))
+    if kinds <= {AtomKind.CRISP}:
+        return Decidability.SAT
+    if kinds <= {AtomKind.CRISP, AtomKind.GEOMETRIC}:
+        return Decidability.GEOMETRIC
+    return Decidability.UNDECIDABLE
+
+
+# ---------------------------------------------------------------------------
+# Detector
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TaxonomyConfig:
+    probable_conflict_eps: float = 0.01    # min co-fire mass to report T4
+    soft_shadow_eps: float = 0.05          # min against-evidence mass for T5
+    mc_samples: int = 20_000
+    # vMF concentration for the realistic query mixture scales with the
+    # embedding dimension (spread angle ~ sqrt(d/kappa)); kappa = scale*d
+    query_kappa_scale: float = 4.0
+    seed: int = 0
+
+    def kappa(self, d: int) -> float:
+        return self.query_kappa_scale * d
+
+
+class ConflictDetector:
+    """Pairwise analysis of a prioritized rule list (first-match)."""
+
+    def __init__(self, signals: Dict[str, SignalAtom],
+                 exclusive_groups: Sequence[Sequence[str]] = (),
+                 cfg: TaxonomyConfig = TaxonomyConfig()):
+        self.signals = signals
+        self.groups = [tuple(g) for g in exclusive_groups]
+        self.cfg = cfg
+
+    # -- crisp layer (SAT) --------------------------------------------------
+    def _crisp_findings(self, hi: Rule, lo: Rule) -> List[Finding]:
+        out: List[Finding] = []
+        for r in (hi, lo):
+            if not sat.satisfiable(r.condition, self.groups):
+                out.append(Finding(
+                    ConflictType.LOGICAL_CONTRADICTION, Decidability.SAT,
+                    (r.name,), f"condition of {r.name} is unsatisfiable",
+                    severity="error",
+                    fix_hint="remove the rule or fix the contradictory "
+                             "NOT/AND structure"))
+        if sat.implies(lo.condition, hi.condition, self.groups):
+            if sat.equivalent(lo.condition, hi.condition, self.groups):
+                out.append(Finding(
+                    ConflictType.STRUCTURAL_REDUNDANCY, Decidability.SAT,
+                    (hi.name, lo.name),
+                    f"{lo.name} has a condition equivalent to higher-"
+                    f"priority {hi.name}; it can never fire",
+                    severity="error",
+                    fix_hint=f"delete {lo.name} or change its condition"))
+            else:
+                out.append(Finding(
+                    ConflictType.STRUCTURAL_SHADOWING, Decidability.SAT,
+                    (hi.name, lo.name),
+                    f"{hi.name} (priority {hi.priority}) structurally "
+                    f"shadows {lo.name} (priority {lo.priority})",
+                    severity="error",
+                    fix_hint=f"raise {lo.name}'s priority above "
+                             f"{hi.name} or add a NOT guard to {hi.name}"))
+        return out
+
+    # -- geometric layer ----------------------------------------------------
+    def _geo_cap(self, name: str) -> Optional[geometry.SphericalCap]:
+        s = self.signals.get(name)
+        if s is None or s.kind is not AtomKind.GEOMETRIC:
+            return None
+        c = s.centroid_array()
+        if c is None:
+            return None
+        return geometry.SphericalCap(c, s.threshold)
+
+    def _geometric_findings(self, hi: Rule, lo: Rule) -> List[Finding]:
+        out: List[Finding] = []
+        pairs = itertools.product(sorted(hi.condition.atoms()),
+                                  sorted(lo.condition.atoms()))
+        for a, b in pairs:
+            if a == b:
+                continue
+            ca, cb = self._geo_cap(a), self._geo_cap(b)
+            if ca is None or cb is None:
+                continue
+            if any(a in g and b in g for g in self.groups):
+                continue  # softmax_exclusive group: co-fire impossible
+            if not geometry.caps_intersect(ca, cb):
+                continue
+            p = geometry.cofire_probability(
+                [ca, cb], query_dist="vmf",
+                mixture_kappa=self.cfg.kappa(ca.centroid.shape[0]),
+                n_samples=self.cfg.mc_samples, seed=self.cfg.seed)
+            if p >= self.cfg.probable_conflict_eps:
+                margin = geometry.cap_separation_margin(ca, cb)
+                out.append(Finding(
+                    ConflictType.PROBABLE_CONFLICT, Decidability.GEOMETRIC,
+                    (hi.name, lo.name),
+                    f"embedding signals {a!r} and {b!r} have intersecting "
+                    f"activation caps (separation margin {margin:.3f} rad); "
+                    f"estimated co-fire mass {p:.1%}",
+                    evidence={"cofire_prob": p, "margin_rad": margin,
+                              "signals": (a, b)},
+                    fix_hint="declare both in a SIGNAL_GROUP with "
+                             "semantics: softmax_exclusive (Voronoi "
+                             "normalization, Thm 2) or raise thresholds"))
+        return out
+
+    def _soft_shadowing(self, hi: Rule, lo: Rule) -> List[Finding]:
+        """T5: P(both fire ∧ lo's signal more confident) ≥ eps."""
+        out: List[Finding] = []
+        for a in sorted(hi.condition.atoms()):
+            for b in sorted(lo.condition.atoms()):
+                ca, cb = self._geo_cap(a), self._geo_cap(b)
+                if ca is None or cb is None or a == b:
+                    continue
+                if any(a in g and b in g for g in self.groups):
+                    continue
+                rng = np.random.default_rng(self.cfg.seed)
+                kap = self.cfg.kappa(ca.centroid.shape[0])
+                x = np.concatenate([
+                    geometry.sample_vmf(ca.centroid, kap,
+                                        self.cfg.mc_samples // 2, rng),
+                    geometry.sample_vmf(cb.centroid, kap,
+                                        self.cfg.mc_samples // 2, rng)])
+                sa, sb = x @ ca.centroid, x @ cb.centroid
+                both = (sa >= ca.threshold) & (sb >= cb.threshold)
+                against = both & (sb > sa)
+                p = float(against.mean())
+                if p >= self.cfg.soft_shadow_eps:
+                    out.append(Finding(
+                        ConflictType.SOFT_SHADOWING, Decidability.GEOMETRIC,
+                        (hi.name, lo.name),
+                        f"{hi.name} wins on priority while {b!r} is the "
+                        f"more confident signal on ~{p:.1%} of queries — "
+                        f"routing against the evidence",
+                        evidence={"against_evidence_mass": p},
+                        fix_hint="use TIER routing (confidence within "
+                                 "tier) or a softmax_exclusive group"))
+        return out
+
+    # -- classifier layer ---------------------------------------------------
+    def _calibration_findings(self, hi: Rule, lo: Rule) -> List[Finding]:
+        """T6 is undecidable statically (Thm 1 case 3); we emit an
+        'unverifiable statically' notice when two classifier signals with
+        disjoint category sets appear in competing rules, pointing at TEST
+        blocks / the online monitor."""
+        out: List[Finding] = []
+        for a in sorted(hi.condition.atoms()):
+            for b in sorted(lo.condition.atoms()):
+                sa, sb = self.signals.get(a), self.signals.get(b)
+                if sa is None or sb is None or a == b:
+                    continue
+                if sa.kind is not AtomKind.CLASSIFIER or \
+                        sb.kind is not AtomKind.CLASSIFIER:
+                    continue
+                if any(a in g and b in g for g in self.groups):
+                    continue
+                if sa.categories and sb.categories and \
+                        not set(sa.categories) & set(sb.categories):
+                    out.append(Finding(
+                        ConflictType.CALIBRATION_CONFLICT,
+                        Decidability.UNDECIDABLE,
+                        (hi.name, lo.name),
+                        f"classifier signals {a!r}/{b!r} have disjoint "
+                        f"category sets but may co-activate near semantic "
+                        f"boundaries; not statically decidable (Thm 1.3)",
+                        severity="info",
+                        fix_hint="add TEST block assertions for boundary "
+                                 "queries, or enable the online co-fire "
+                                 "monitor (core/monitor.py)"))
+        return out
+
+    # -- driver ---------------------------------------------------------------
+    def analyze(self, rules: Sequence[Rule]) -> List[Finding]:
+        findings: List[Finding] = []
+        ordered = sorted(rules, key=lambda r: (-r.tier, -r.priority))
+        seen_contradiction = set()
+        for i, hi in enumerate(ordered):
+            for lo in ordered[i + 1:]:
+                if hi.action == lo.action and hi.priority == lo.priority:
+                    continue
+                fs = self._crisp_findings(hi, lo)
+                # report each contradiction once
+                fs = [f for f in fs if not (
+                    f.kind is ConflictType.LOGICAL_CONTRADICTION
+                    and (f.rules in seen_contradiction
+                         or seen_contradiction.add(f.rules)))]
+                findings.extend(fs)
+                findings.extend(self._geometric_findings(hi, lo))
+                findings.extend(self._soft_shadowing(hi, lo))
+                findings.extend(self._calibration_findings(hi, lo))
+        return findings

@@ -1,0 +1,107 @@
+"""Voronoi normalization (paper Definition 1 / Theorem 2) as a composable
+JAX module.
+
+Given a group of embedding signals with unit centroids C (k, d) and
+temperature τ, the normalized score of query embedding x is
+
+    σ̃_i(x) = softmax(sim(x, C) / τ)_i
+
+and the signal fires iff σ̃_i(x) > θ.  For θ > 1/k at most one signal can
+fire (scores sum to 1), so co-firing is impossible — the embedding space
+is partitioned into (softened) Voronoi cells of the centroids.
+
+The batched hot path dispatches to the fused Pallas kernel
+(kernels/voronoi.py) when requested; the pure-jnp forms here double as
+its oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VoronoiGroup:
+    """Static config for one softmax_exclusive SIGNAL_GROUP."""
+    names: tuple                      # member signal names, ordered
+    temperature: float = 0.1
+    threshold: float = 0.5            # group threshold θ
+    default: Optional[str] = None     # fires when no member clears θ
+
+    def __post_init__(self):
+        if self.temperature <= 0:
+            raise ValueError("temperature must be positive")
+        k = len(self.names)
+        if k and self.threshold <= 1.0 / k:
+            # Thm 2 precondition θ > 1/k; warn-level is handled by the
+            # validator — constructing with θ ≤ 1/k is allowed but the
+            # exclusivity guarantee is void.
+            pass
+
+
+def normalize_scores(sims: jnp.ndarray, temperature: float) -> jnp.ndarray:
+    """sims: (..., k) raw cosine similarities -> (..., k) Voronoi scores."""
+    return jax.nn.softmax(sims / temperature, axis=-1)
+
+
+def voronoi_scores(x: jnp.ndarray, centroids: jnp.ndarray,
+                   temperature: float) -> jnp.ndarray:
+    """x: (B, d) unit embeddings; centroids: (k, d) unit rows -> (B, k)."""
+    sims = x @ centroids.T
+    return normalize_scores(sims, temperature)
+
+
+def fires(scores: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """Boolean activations under the group threshold."""
+    return scores > threshold
+
+
+def winner(scores: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(scores, axis=-1)
+
+
+def independent_fires(x: jnp.ndarray, centroids: jnp.ndarray,
+                      thresholds: jnp.ndarray) -> jnp.ndarray:
+    """The paper's *baseline* semantics: per-signal thresholding, where
+    spherical caps overlap and co-firing is possible."""
+    sims = x @ centroids.T
+    return sims >= thresholds[None, :]
+
+
+def cofire_rate(fire_mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of rows where ≥ 2 signals fire."""
+    return jnp.mean((fire_mask.sum(axis=-1) >= 2).astype(jnp.float32))
+
+
+def paper_thm2_guarantee(k: int, threshold: float) -> bool:
+    """Theorem 2 *as stated in the paper*: "the sum is 1, so at most one
+    score can exceed 1/k; for θ > 1/k at most one fires."
+
+    NOTE (soundness finding, see EXPERIMENTS.md §Thm2): this is only
+    correct for k = 2.  For k ≥ 3 it is refuted by e.g. scores
+    (0.4, 0.4, 0.2) at θ = 1/3 + ε: two members fire.  The sum-to-one
+    argument only bounds the number of scores exceeding 1/2."""
+    return threshold > 1.0 / k
+
+
+def at_most_one_guarantee(k: int, threshold: float) -> bool:
+    """The CORRECT finite-τ guarantee: scores sum to 1 ⇒ at most one can
+    exceed 1/2, so θ > 1/2 suffices for any k and any temperature."""
+    return threshold > 0.5
+
+
+def required_temperature(margin: float, k: int, threshold: float) -> float:
+    """Engineering helper: τ small enough that the argmax signal clears θ
+    whenever its raw-sim margin over the runner-up is ≥ `margin`:
+        softmax gap condition  1 / (1 + (k-1) e^{-margin/τ}) > θ.
+    """
+    if threshold >= 1.0 or threshold <= 0.0:
+        raise ValueError("threshold in (0,1)")
+    rhs = (1.0 / threshold - 1.0) / max(k - 1, 1)
+    if rhs <= 0:
+        raise ValueError("unreachable threshold")
+    return float(margin / -np.log(min(rhs, 1 - 1e-12)))

@@ -1,0 +1,242 @@
+"""Name-based sharding rules.
+
+Leaf names in the parameter pytree carry the tensor role; a single rule
+table maps role -> canonical PartitionSpec.  Two robustness mechanisms:
+
+* **stacked dims**: layer-scan stacking prepends a unit dim; if a leaf's
+  rank exceeds the rule's rank, leading ``None`` axes are prepended.
+* **divisibility fallback**: any dim whose size is not divisible by the
+  mesh axes assigned to it is replicated instead (this is how MQA kv=1
+  and 16-expert MoE on a 16-way model axis Just Work).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule table: regex on leaf *name* -> spec for the canonical (unstacked) rank.
+# "model" shards the tensor-parallel dim; batch axes never appear in params.
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # embeddings / lm head: shard vocab over model
+    (r"^(tok_embed|lm_head)$", P("model", None)),
+    (r"^(audio_proj|vision_proj)$", P(None, "model")),
+    # attention — q/o shard heads; k/v shard kv heads (replicate if indivisible)
+    (r"^(wq|cross_wq)$", P(None, "model", None)),
+    (r"^(wk|wv|cross_wk|cross_wv)$", P(None, "model", None)),
+    (r"^(wo|cross_wo)$", P("model", None, None)),
+    # MLA
+    (r"^mla_wq$", P(None, "model", None)),
+    (r"^mla_wdkv$", P(None, None)),
+    (r"^mla_wuk$", P(None, "model", None)),
+    (r"^mla_wuv$", P(None, "model", None)),
+    (r"^mla_wo$", P("model", None, None)),
+    # dense ffn
+    (r"^(w_gate|w_up|w_in)$", P(None, "model")),
+    (r"^w_down$", P("model", None)),
+    (r"^w_out$", P("model", None)),
+    # MoE: experts sharded over model axis (expert parallelism)
+    (r"^router$", P(None, None)),
+    (r"^e_(gate|up)$", P("model", None, None)),
+    (r"^e_down$", P("model", None, None)),
+    (r"^s_(gate|up)$", P(None, "model")),
+    (r"^s_down$", P("model", None)),
+    # RG-LRU: lru width over model
+    (r"^(rg_wx|rg_wgate)$", P(None, "model")),
+    (r"^rg_wy$", P("model", None)),
+    (r"^(rg_conv_w)$", P(None, "model")),
+    (r"^(rg_a_param|rg_conv_b|rg_input_gate_w|rg_a_gate_w)$", P("model",)),
+    (r"^(rg_input_gate|rg_a_gate)$", P("model", None)),
+    # RWKV-6: square projections over model on output dim
+    (r"^(wkv_wr|wkv_wk|wkv_wv|wkv_wg)$", P(None, "model")),
+    (r"^wkv_wo$", P("model", None)),
+    (r"^(cm_wk)$", P(None, "model")),
+    (r"^(cm_wv)$", P("model", None)),
+    (r"^(cm_wr)$", P(None, None)),
+]
+
+_COMPILED = [(re.compile(pat), spec) for pat, spec in _RULES]
+
+
+def spec_for(name: str, rank: int) -> P:
+    base: Optional[P] = None
+    for pat, spec in _COMPILED:
+        if pat.match(name):
+            base = spec
+            break
+    if base is None:
+        base = P()  # replicate (norm scales, gates, mixes, biases, ...)
+    pads = rank - len(base)
+    if pads < 0:  # rule rank exceeds leaf rank (shouldn't happen) -> replicate
+        return P()
+    return P(*([None] * pads + list(base)))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (replication fallback)."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            out.append(None)
+            continue
+        if shape[i] % _axis_size(mesh, axes) == 0 and shape[i] > 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, name: str, shape) -> NamedSharding:
+    spec = fit_spec(spec_for(name, len(shape)), shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, tree: Any) -> Any:
+    """Shardings for a pytree of arrays/ShapeDtypeStructs, by leaf name."""
+    def walk(path, leaf):
+        name = _leaf_name(path)
+        return named_sharding(mesh, name, leaf.shape)
+    return jax.tree_util.tree_map_with_path(walk, tree)
+
+
+def tree_pspecs(mesh: Mesh, tree: Any) -> Any:
+    def walk(path, leaf):
+        name = _leaf_name(path)
+        return fit_spec(spec_for(name, len(leaf.shape)), leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(walk, tree)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# Current-mesh context (threaded by the launchers so model code can use
+# shard_map for patterns implicit SPMD handles badly — e.g. expert-parallel
+# MoE dispatch; see models/moe.py `moe_impl="ep"`).
+# ---------------------------------------------------------------------------
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+_BATCH_AXES_CACHE = {}
+
+
+def data_axes(mesh: Mesh):
+    """The composite batch-sharding axes present in this mesh."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_rank: int) -> P:
+    axes = data_axes(mesh)
+    if not axes or batch % _axis_size(mesh, list(axes)) != 0:
+        return P(*([None] * (1 + extra_rank)))
+    return P(axes, *([None] * extra_rank))
+
+
+def batch_sharding(mesh: Mesh, shape) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, shape[0], len(shape) - 1))
+
+
+def constrain_batch(x, mesh: Optional[Mesh]):
+    """with_sharding_constraint over the leading batch dim, if divisible."""
+    if mesh is None:
+        return x
+    spec = batch_spec(mesh, x.shape[0], x.ndim - 1)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / recurrent-state shardings
+# ---------------------------------------------------------------------------
+
+# leaf name -> (seq_dim, head_dim) offsets relative to the batch dim
+# (None = no such dim).  Shapes below are for unstacked (prefix/suffix)
+# leaves; unit-scanned leaves gain a leading U dim handled via path.
+_CACHE_DIMS = {
+    "k": (1, 2), "v": (1, 2),              # (B, W, KV, hd)
+    "ck": (1, 2), "cv": (1, 2),            # (B, T, KV, hd)
+    "ckv": (1, None), "krope": (1, None),  # (B, S, R) MLA latent
+    "state": (None, 1),                    # (B, H, N, N) rwkv
+    "shift": (None, None), "h": (None, None), "conv": (None, None),
+}
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any) -> Any:
+    """Batch over (pod, data) when divisible; otherwise shard the sequence
+    dim over 'data' (the long_500k case); head dims over 'model'."""
+    daxes = data_axes(mesh)
+    dsize = _axis_size(mesh, list(daxes)) if daxes else 1
+
+    def walk(path, leaf):
+        name = _leaf_name(path)
+        stacked = any(getattr(e, "key", None) == "unit" for e in path)
+        b = 1 if stacked else 0
+        spec = [None] * len(leaf.shape)
+        dims = _CACHE_DIMS.get(name, (None, None))
+        if daxes and leaf.shape[b] % dsize == 0 and leaf.shape[b] > 1:
+            spec[b] = daxes
+        elif dims[0] is not None and "data" in mesh.shape:
+            sd = b + dims[0]
+            if leaf.shape[sd] % mesh.shape["data"] == 0:
+                spec[sd] = "data"
+        head_ok = False
+        if dims[1] is not None and "model" in mesh.shape:
+            hd_ = b + dims[1]
+            if leaf.shape[hd_] % mesh.shape["model"] == 0:
+                spec[hd_] = "model"
+                head_ok = True
+        if (not head_ok and dims[0] is not None and "model" in mesh.shape):
+            # GQA/MQA with kv_heads < model-axis: sequence-parallel KV
+            # (flash-decoding style) instead of replicating the cache
+            sd = b + dims[0]
+            if spec[sd] is None and leaf.shape[sd] % mesh.shape["model"] == 0 \
+                    and leaf.shape[sd] >= 4 * mesh.shape["model"]:
+                spec[sd] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+
+def seq_sharding(mesh: Mesh, shape, seq_axis: int) -> NamedSharding:
+    """Shard a sequence dim over 'data' (long_500k KV caches, batch=1)."""
+    spec = [None] * len(shape)
+    if "data" in mesh.shape and shape[seq_axis] % mesh.shape["data"] == 0:
+        spec[seq_axis] = "data"
+    return NamedSharding(mesh, P(*spec))

@@ -1,0 +1,88 @@
+"""AST node types for the Semantic Router DSL."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from repro.core.conditions import Cond
+
+FieldValue = Union[str, float, int, bool, list, dict]
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalDecl:
+    signal_type: str                 # domain | embedding | keyword | ...
+    name: str
+    fields: Dict[str, FieldValue]
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalGroupDecl:
+    name: str
+    fields: Dict[str, FieldValue]    # semantics, temperature, members, default, threshold
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecl:
+    name: str
+    priority: int
+    when: Cond
+    model: Optional[str] = None
+    plugin: Optional[Tuple[str, Dict[str, FieldValue]]] = None
+    tier: int = 0
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PluginDecl:
+    name: str
+    fields: Dict[str, FieldValue]
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendDecl:
+    name: str
+    fields: Dict[str, FieldValue]
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalDecl:
+    fields: Dict[str, FieldValue]
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TestDecl:
+    name: str
+    cases: Tuple[Tuple[str, str], ...]   # (query, expected_route)
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeBranchDecl:
+    guard: Optional[Cond]                # None = ELSE
+    model: Optional[str] = None
+    plugin: Optional[Tuple[str, Dict[str, FieldValue]]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeDecl:
+    name: str
+    branches: Tuple[TreeBranchDecl, ...]
+    line: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    signals: Tuple[SignalDecl, ...] = ()
+    groups: Tuple[SignalGroupDecl, ...] = ()
+    routes: Tuple[RouteDecl, ...] = ()
+    plugins: Tuple[PluginDecl, ...] = ()
+    backends: Tuple[BackendDecl, ...] = ()
+    global_: Optional[GlobalDecl] = None
+    tests: Tuple[TestDecl, ...] = ()
+    trees: Tuple[TreeDecl, ...] = ()

@@ -1,0 +1,92 @@
+"""Decompiler: RouterConfig -> canonical DSL text.
+
+"All new constructs survive a full parse→compile→decompile round-trip,
+ensuring the DSL remains the single source of truth" (paper §7.1).  The
+round-trip invariant tested in tests/test_roundtrip.py is
+
+    compile(decompile(cfg)) ≡ cfg      (semantic equality)
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+from repro.dsl.compiler import RouterConfig
+from repro.dsl.emit import cond_to_text
+
+
+def _value(v: Any) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return repr(v)
+    if isinstance(v, list):
+        return "[" + ", ".join(_value(x) for x in v) + "]"
+    if isinstance(v, dict):
+        inner = " ".join(f"{k}: {_value(x)}" for k, x in v.items())
+        return "{ " + inner + " }"
+    return '"' + str(v).replace("\\", "\\\\").replace('"', '\\"') + '"'
+
+
+def _fields(fields: dict, indent: str = "  ") -> str:
+    return "".join(f"{indent}{k}: {_value(v)}\n"
+                   for k, v in fields.items())
+
+
+def decompile(cfg: RouterConfig) -> str:
+    out: List[str] = []
+    for name, sig in sorted(cfg.signals.items()):
+        out.append(f"SIGNAL {sig.signal_type} {name} {{\n")
+        fields = dict(cfg.signal_fields.get(name, {}))
+        fields.setdefault("threshold", sig.threshold)
+        out.append(_fields(fields))
+        out.append("}\n\n")
+    for name, g in sorted(cfg.groups.items()):
+        out.append(f"SIGNAL_GROUP {name} {{\n")
+        out.append("  semantics: softmax_exclusive\n")
+        out.append(f"  temperature: {g.temperature!r}\n")
+        out.append(f"  threshold: {g.threshold!r}\n")
+        out.append(f"  members: [{', '.join(g.names)}]\n")
+        if g.default:
+            out.append(f"  default: {g.default}\n")
+        out.append("}\n\n")
+    for rule in cfg.rules:
+        action = cfg.actions[rule.name]
+        out.append(f"ROUTE {rule.name} {{\n")
+        out.append(f"  PRIORITY {rule.priority}\n")
+        if rule.tier:
+            out.append(f"  TIER {rule.tier}\n")
+        out.append(f"  WHEN {cond_to_text(rule.condition, cfg.atom_types)}\n")
+        if action.kind == "model":
+            out.append(f'  MODEL "{action.target}"\n')
+        else:
+            out.append(f"  PLUGIN {action.target}")
+            if action.params:
+                out.append(" {\n" + _fields(action.params, "    ") + "  }")
+            out.append("\n")
+        out.append("}\n\n")
+    for name, fields in sorted(cfg.plugins.items()):
+        out.append(f"PLUGIN {name} {{\n{_fields(fields)}}}\n\n")
+    for name, fields in sorted(cfg.backends.items()):
+        out.append(f"BACKEND {name} {{\n{_fields(fields)}}}\n\n")
+    if cfg.global_fields:
+        out.append(f"GLOBAL {{\n{_fields(cfg.global_fields)}}}\n\n")
+    for name, cases in sorted(cfg.tests.items()):
+        out.append(f"TEST {name} {{\n")
+        for q, route in cases:
+            out.append(f'  "{q}" -> {route}\n')
+        out.append("}\n\n")
+    for name, tree in sorted(cfg.trees.items()):
+        out.append(f"DECISION_TREE {name} {{\n")
+        for i, b in enumerate(tree.branches):
+            kind, _, target = b.action.partition(":")
+            body = (f'MODEL "{target}"' if kind == "model"
+                    else f"PLUGIN {target}")
+            if b.guard is None:
+                out.append(f"  ELSE {{ {body} }}\n")
+            else:
+                kw = "IF" if i == 0 else "ELSE IF"
+                out.append(
+                    f"  {kw} {cond_to_text(b.guard, cfg.atom_types)} "
+                    f"{{ {body} }}\n")
+        out.append("}\n\n")
+    return "".join(out)

@@ -1,0 +1,133 @@
+"""Emitters: RouterConfig -> flat YAML / Kubernetes CRD / Helm values.
+
+The production system's three targets (paper §7.1).  No pyyaml in this
+environment, so we serialize with a small deterministic writer."""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core.conditions import And, Atom, Cond, Not, Or
+from repro.dsl.compiler import RouterConfig
+
+
+def cond_to_text(cond: Cond, atom_types: Dict[str, str]) -> str:
+    if isinstance(cond, Atom):
+        t = atom_types.get(cond.name, "signal")
+        return f'{t}("{cond.name}")'
+    if isinstance(cond, Not):
+        inner = cond_to_text(cond.child, atom_types)
+        if isinstance(cond.child, (And, Or)):
+            inner = f"({inner})"
+        return f"NOT {inner}"
+    if isinstance(cond, And):
+        if not cond.children:
+            return "true"
+        return " AND ".join(
+            f"({cond_to_text(c, atom_types)})"
+            if isinstance(c, Or) else cond_to_text(c, atom_types)
+            for c in cond.children)
+    if isinstance(cond, Or):
+        if not cond.children:
+            return "false"
+        return " OR ".join(cond_to_text(c, atom_types)
+                           for c in cond.children)
+    raise TypeError(type(cond))
+
+
+def to_flat_dict(cfg: RouterConfig) -> Dict[str, Any]:
+    return {
+        "signals": [
+            dict(name=n, type=s.signal_type, threshold=s.threshold,
+                 group=s.group, **{k: v for k, v in
+                                   cfg.signal_fields[n].items()
+                                   if k != "threshold"})
+            for n, s in sorted(cfg.signals.items())],
+        "signal_groups": [
+            dict(name=n, semantics="softmax_exclusive",
+                 temperature=g.temperature, threshold=g.threshold,
+                 members=list(g.names), default=g.default)
+            for n, g in sorted(cfg.groups.items())],
+        "routes": [
+            dict(name=r.name, priority=r.priority, tier=r.tier,
+                 when=cond_to_text(r.condition, cfg.atom_types),
+                 action={"kind": cfg.actions[r.name].kind,
+                         "target": cfg.actions[r.name].target,
+                         **({"params": cfg.actions[r.name].params}
+                            if cfg.actions[r.name].params else {})})
+            for r in cfg.rules],
+        "backends": [dict(name=n, **f)
+                     for n, f in sorted(cfg.backends.items())],
+        "plugins": [dict(name=n, **f)
+                    for n, f in sorted(cfg.plugins.items())],
+        "global": dict(cfg.global_fields),
+        "tests": [dict(name=n, cases=[{"query": q, "route": r}
+                                      for q, r in cases])
+                  for n, cases in sorted(cfg.tests.items())],
+        "decision_trees": [
+            dict(name=n, branches=[
+                {"if": cond_to_text(b.guard, cfg.atom_types)
+                 if b.guard is not None else None,
+                 "action": b.action} for b in t.branches])
+            for n, t in sorted(cfg.trees.items())],
+    }
+
+
+def to_crd_dict(cfg: RouterConfig) -> Dict[str, Any]:
+    return {
+        "apiVersion": "vllm.ai/v1alpha1",
+        "kind": "SemanticRoute",
+        "metadata": {"name": cfg.global_fields.get("name", "semantic-router")},
+        "spec": to_flat_dict(cfg),
+    }
+
+
+def to_helm_values(cfg: RouterConfig) -> Dict[str, Any]:
+    return {"semanticRouter": {"config": to_flat_dict(cfg),
+                               "replicaCount": 2,
+                               "image": {"repository": "vllm/semantic-router",
+                                         "tag": "latest"}}}
+
+
+# ---------------------------------------------------------------------------
+# Minimal YAML writer (deterministic, subset sufficient for our dicts)
+# ---------------------------------------------------------------------------
+
+def to_yaml(value: Any, indent: int = 0) -> str:
+    pad = "  " * indent
+    if isinstance(value, dict):
+        if not value:
+            return pad + "{}\n"
+        out = []
+        for k, v in value.items():
+            if isinstance(v, (dict, list)) and v:
+                out.append(f"{pad}{k}:\n{to_yaml(v, indent + 1)}")
+            else:
+                out.append(f"{pad}{k}: {_scalar(v)}\n")
+        return "".join(out)
+    if isinstance(value, list):
+        if not value:
+            return pad + "[]\n"
+        out = []
+        for item in value:
+            if isinstance(item, (dict, list)) and item:
+                body = to_yaml(item, indent + 1)
+                first, _, rest = body.partition("\n")
+                out.append(f"{pad}- {first.strip()}\n" +
+                           (rest if rest.strip() else ""))
+            else:
+                out.append(f"{pad}- {_scalar(item)}\n")
+        return "".join(out)
+    return pad + _scalar(value) + "\n"
+
+
+def _scalar(v: Any) -> str:
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return repr(v)
+    s = str(v)
+    if any(c in s for c in ":{}[]#,\"'\n") or s != s.strip():
+        return '"' + s.replace("\\", "\\\\").replace('"', '\\"') + '"'
+    return s

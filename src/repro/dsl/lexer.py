@@ -1,0 +1,79 @@
+"""Tokenizer for the Semantic Router DSL (paper §2.2/§7).
+
+Hand-written PEG-style pipeline (the production system uses Go participle;
+this is its Python/JAX-framework counterpart)."""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterator, List
+
+KEYWORDS = {
+    "SIGNAL", "SIGNAL_GROUP", "ROUTE", "PLUGIN", "BACKEND", "GLOBAL",
+    "TEST", "DECISION_TREE", "PRIORITY", "TIER", "WHEN", "MODEL",
+    "IF", "ELSE", "AND", "OR", "NOT", "true", "false",
+}
+
+_TOKEN_RE = re.compile(r"""
+    (?P<ws>[ \t\r]+)
+  | (?P<comment>\#[^\n]*)
+  | (?P<nl>\n)
+  | (?P<arrow>->)
+  | (?P<string>"(?:[^"\\]|\\.)*")
+  | (?P<number>-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)
+  | (?P<ident>[A-Za-z_][A-Za-z0-9_\-\.]*)
+  | (?P<punct>[{}\[\]():,])
+""", re.VERBOSE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Token:
+    kind: str          # keyword | ident | string | number | punct | arrow | eof
+    value: str
+    line: int
+    col: int
+
+    def __repr__(self):
+        return f"{self.kind}:{self.value!r}@{self.line}:{self.col}"
+
+
+class LexError(SyntaxError):
+    pass
+
+
+def tokenize(text: str) -> List[Token]:
+    out: List[Token] = []
+    line, col = 1, 1
+    i = 0
+    n = len(text)
+    while i < n:
+        m = _TOKEN_RE.match(text, i)
+        if not m:
+            raise LexError(f"line {line}:{col}: unexpected character "
+                           f"{text[i]!r}")
+        kind = m.lastgroup
+        val = m.group()
+        if kind == "nl":
+            line += 1
+            col = 1
+        elif kind in ("ws", "comment"):
+            col += len(val)
+        else:
+            if kind == "ident" and val in KEYWORDS:
+                tok_kind = "keyword"
+            elif kind == "ident":
+                tok_kind = "ident"
+            elif kind == "string":
+                tok_kind = "string"
+                val = _unescape(val[1:-1])
+            else:
+                tok_kind = kind
+            out.append(Token(tok_kind, val, line, col))
+            col += len(m.group())
+        i = m.end()
+    out.append(Token("eof", "", line, col))
+    return out
+
+
+def _unescape(s: str) -> str:
+    return s.replace('\\"', '"').replace("\\n", "\n").replace("\\\\", "\\")

@@ -1,0 +1,305 @@
+"""Recursive-descent parser for the Semantic Router DSL.
+
+Grammar sketch (paper listings 1–8):
+
+  program      := decl*
+  decl         := signal | signal_group | route | plugin | backend
+                | global | test | decision_tree
+  signal       := SIGNAL type:ident name:ident "{" field* "}"
+  signal_group := SIGNAL_GROUP name "{" field* "}"
+  route        := ROUTE name "{" (PRIORITY num | TIER num | WHEN cond
+                | MODEL str | PLUGIN name "{" field* "}")* "}"
+  cond         := or ;  or := and (OR and)* ; and := not (AND not)*
+  not          := NOT not | atom | "(" cond ")"
+  atom         := type:ident "(" str ")"
+  test         := TEST name "{" (str -> ident)* "}"
+  decision_tree:= DECISION_TREE name "{" IF cond "{" action "}"
+                   (ELSE IF cond "{" action "}")* ELSE "{" action "}" "}"
+  field        := key:ident ":" value
+  value        := str | num | bool | ident | "[" value,* "]"
+                | "{" field* "}"
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.conditions import And, Atom, Cond, Not, Or
+from repro.dsl import ast
+from repro.dsl.lexer import Token, tokenize
+
+
+class ParseError(SyntaxError):
+    pass
+
+
+class Parser:
+    def __init__(self, tokens: List[Token]):
+        self.toks = tokens
+        self.i = 0
+        # atom name -> signal type as referenced in WHEN clauses (for the
+        # validator's type cross-check)
+        self.atom_types: Dict[str, str] = {}
+
+    # -- plumbing -------------------------------------------------------------
+    def peek(self) -> Token:
+        return self.toks[self.i]
+
+    def next(self) -> Token:
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, kind: str, value: Optional[str] = None) -> Token:
+        t = self.peek()
+        if t.kind != kind or (value is not None and t.value != value):
+            want = value or kind
+            raise ParseError(
+                f"line {t.line}:{t.col}: expected {want!r}, got "
+                f"{t.kind} {t.value!r}")
+        return self.next()
+
+    def at(self, kind: str, value: Optional[str] = None) -> bool:
+        t = self.peek()
+        return t.kind == kind and (value is None or t.value == value)
+
+    # -- program --------------------------------------------------------------
+    def parse(self) -> ast.Program:
+        signals, groups, routes = [], [], []
+        plugins, backends, tests, trees = [], [], [], []
+        global_: Optional[ast.GlobalDecl] = None
+        while not self.at("eof"):
+            t = self.peek()
+            if self.at("keyword", "SIGNAL"):
+                signals.append(self.signal())
+            elif self.at("keyword", "SIGNAL_GROUP"):
+                groups.append(self.signal_group())
+            elif self.at("keyword", "ROUTE"):
+                routes.append(self.route())
+            elif self.at("keyword", "PLUGIN"):
+                plugins.append(self.plugin())
+            elif self.at("keyword", "BACKEND"):
+                backends.append(self.backend())
+            elif self.at("keyword", "GLOBAL"):
+                if global_ is not None:
+                    raise ParseError(f"line {t.line}: duplicate GLOBAL block")
+                global_ = self.global_block()
+            elif self.at("keyword", "TEST"):
+                tests.append(self.test_block())
+            elif self.at("keyword", "DECISION_TREE"):
+                trees.append(self.tree())
+            else:
+                raise ParseError(
+                    f"line {t.line}:{t.col}: expected a block keyword, got "
+                    f"{t.value!r}")
+        return ast.Program(tuple(signals), tuple(groups), tuple(routes),
+                           tuple(plugins), tuple(backends), global_,
+                           tuple(tests), tuple(trees))
+
+    # -- blocks ---------------------------------------------------------------
+    def signal(self) -> ast.SignalDecl:
+        t = self.expect("keyword", "SIGNAL")
+        stype = self.ident_like()
+        name = self.ident_like()
+        fields = self.field_block()
+        return ast.SignalDecl(stype, name, fields, t.line)
+
+    def signal_group(self) -> ast.SignalGroupDecl:
+        t = self.expect("keyword", "SIGNAL_GROUP")
+        name = self.ident_like()
+        fields = self.field_block()
+        return ast.SignalGroupDecl(name, fields, t.line)
+
+    def route(self) -> ast.RouteDecl:
+        t = self.expect("keyword", "ROUTE")
+        name = self.ident_like()
+        self.expect("punct", "{")
+        priority = 0
+        tier = 0
+        when: Optional[Cond] = None
+        model: Optional[str] = None
+        plugin = None
+        while not self.at("punct", "}"):
+            if self.at("keyword", "PRIORITY"):
+                self.next()
+                priority = int(float(self.expect("number").value))
+            elif self.at("keyword", "TIER"):
+                self.next()
+                tier = int(float(self.expect("number").value))
+            elif self.at("keyword", "WHEN"):
+                self.next()
+                when = self.cond()
+            elif self.at("keyword", "MODEL"):
+                self.next()
+                model = self.expect("string").value
+            elif self.at("keyword", "PLUGIN"):
+                self.next()
+                pname = self.ident_like()
+                pfields = self.field_block() if self.at("punct", "{") else {}
+                plugin = (pname, pfields)
+            else:
+                tok = self.peek()
+                raise ParseError(
+                    f"line {tok.line}:{tok.col}: unexpected {tok.value!r} "
+                    f"in ROUTE {name}")
+        self.expect("punct", "}")
+        if when is None:
+            raise ParseError(f"line {t.line}: ROUTE {name} missing WHEN")
+        if model is None and plugin is None:
+            raise ParseError(
+                f"line {t.line}: ROUTE {name} needs MODEL or PLUGIN")
+        return ast.RouteDecl(name, priority, when, model, plugin, tier, t.line)
+
+    def plugin(self) -> ast.PluginDecl:
+        t = self.expect("keyword", "PLUGIN")
+        name = self.ident_like()
+        return ast.PluginDecl(name, self.field_block(), t.line)
+
+    def backend(self) -> ast.BackendDecl:
+        t = self.expect("keyword", "BACKEND")
+        name = self.ident_like()
+        return ast.BackendDecl(name, self.field_block(), t.line)
+
+    def global_block(self) -> ast.GlobalDecl:
+        t = self.expect("keyword", "GLOBAL")
+        return ast.GlobalDecl(self.field_block(), t.line)
+
+    def test_block(self) -> ast.TestDecl:
+        t = self.expect("keyword", "TEST")
+        name = self.ident_like()
+        self.expect("punct", "{")
+        cases: List[Tuple[str, str]] = []
+        while not self.at("punct", "}"):
+            q = self.expect("string").value
+            self.expect("arrow")
+            route = self.ident_like()
+            cases.append((q, route))
+        self.expect("punct", "}")
+        return ast.TestDecl(name, tuple(cases), t.line)
+
+    def tree(self) -> ast.TreeDecl:
+        t = self.expect("keyword", "DECISION_TREE")
+        name = self.ident_like()
+        self.expect("punct", "{")
+        branches: List[ast.TreeBranchDecl] = []
+        self.expect("keyword", "IF")
+        branches.append(self.tree_branch(guarded=True))
+        while self.at("keyword", "ELSE"):
+            self.next()
+            if self.at("keyword", "IF"):
+                self.next()
+                branches.append(self.tree_branch(guarded=True))
+            else:
+                branches.append(self.tree_branch(guarded=False))
+                break
+        self.expect("punct", "}")
+        return ast.TreeDecl(name, tuple(branches), t.line)
+
+    def tree_branch(self, guarded: bool) -> ast.TreeBranchDecl:
+        guard = self.cond() if guarded else None
+        self.expect("punct", "{")
+        model = None
+        plugin = None
+        if self.at("keyword", "MODEL"):
+            self.next()
+            model = self.expect("string").value
+        elif self.at("keyword", "PLUGIN"):
+            self.next()
+            pname = self.ident_like()
+            pfields = self.field_block() if self.at("punct", "{") else {}
+            plugin = (pname, pfields)
+        else:
+            tok = self.peek()
+            raise ParseError(f"line {tok.line}: branch needs MODEL/PLUGIN")
+        self.expect("punct", "}")
+        return ast.TreeBranchDecl(guard, model, plugin)
+
+    # -- conditions -------------------------------------------------------------
+    def cond(self) -> Cond:
+        return self.or_expr()
+
+    def or_expr(self) -> Cond:
+        parts = [self.and_expr()]
+        while self.at("keyword", "OR"):
+            self.next()
+            parts.append(self.and_expr())
+        return parts[0] if len(parts) == 1 else Or(tuple(parts))
+
+    def and_expr(self) -> Cond:
+        parts = [self.not_expr()]
+        while self.at("keyword", "AND"):
+            self.next()
+            parts.append(self.not_expr())
+        return parts[0] if len(parts) == 1 else And(tuple(parts))
+
+    def not_expr(self) -> Cond:
+        if self.at("keyword", "NOT"):
+            self.next()
+            return Not(self.not_expr())
+        if self.at("punct", "("):
+            self.next()
+            c = self.cond()
+            self.expect("punct", ")")
+            return c
+        stype = self.ident_like()
+        self.expect("punct", "(")
+        name = self.expect("string").value
+        self.expect("punct", ")")
+        prev = self.atom_types.get(name)
+        if prev is not None and prev != stype:
+            raise ParseError(
+                f"signal {name!r} referenced as both {prev!r} and "
+                f"{stype!r}")
+        self.atom_types[name] = stype
+        return Atom(name)
+
+    # -- fields -----------------------------------------------------------------
+    def ident_like(self) -> str:
+        t = self.peek()
+        if t.kind in ("ident", "keyword", "string"):
+            return self.next().value
+        raise ParseError(
+            f"line {t.line}:{t.col}: expected identifier, got {t.value!r}")
+
+    def field_block(self) -> Dict[str, ast.FieldValue]:
+        self.expect("punct", "{")
+        fields: Dict[str, ast.FieldValue] = {}
+        while not self.at("punct", "}"):
+            key = self.ident_like()
+            self.expect("punct", ":")
+            fields[key] = self.value()
+            if self.at("punct", ","):
+                self.next()
+        self.expect("punct", "}")
+        return fields
+
+    def value(self) -> ast.FieldValue:
+        t = self.peek()
+        if t.kind == "string":
+            return self.next().value
+        if t.kind == "number":
+            v = float(self.next().value)
+            return int(v) if v.is_integer() else v
+        if t.kind == "keyword" and t.value in ("true", "false"):
+            return self.next().value == "true"
+        if t.kind == "ident":
+            return self.next().value
+        if self.at("punct", "["):
+            self.next()
+            items = []
+            while not self.at("punct", "]"):
+                items.append(self.value())
+                if self.at("punct", ","):
+                    self.next()
+            self.expect("punct", "]")
+            return items
+        if self.at("punct", "{"):
+            return self.field_block()
+        raise ParseError(
+            f"line {t.line}:{t.col}: expected a value, got {t.value!r}")
+
+
+def parse(text: str) -> Tuple[ast.Program, Dict[str, str]]:
+    """-> (Program, atom-name -> referenced signal type)."""
+    p = Parser(tokenize(text))
+    prog = p.parse()
+    return prog, dict(p.atom_types)

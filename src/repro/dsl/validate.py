@@ -1,0 +1,341 @@
+"""Validator passes (paper §5 / §7.1).
+
+Classic passes (the pre-existing system): syntax (parser), reference
+resolution, constraint checks.  New passes from the paper:
+
+  M1 category overlap     — shared mmlu_categories across domain signals
+  M2 guard warning        — same signal type in two WHEN clauses without a
+                            NOT guard; emits an auto-repair suggestion
+  M3 SIGNAL_GROUP checks  — member existence, category disjointness,
+                            temperature > 0, default present, θ > 1/k
+  M4 TEST block checks    — routes exist, queries non-empty (static);
+                            ``run_tests`` executes them through the live
+                            signal pipeline when an engine is supplied
+  M5 TIER checks          — tier sanity + priority range
+  M6 taxonomy pass        — full six-type conflict analysis (core/)
+  M7 tree pass            — FDD exhaustiveness / reachability
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import fdd
+from repro.core.atoms import SIGNAL_TYPE_KINDS, AtomKind
+from repro.core.conditions import And, Atom, Cond, Not, Or
+from repro.core.taxonomy import (ConflictDetector, ConflictType, Finding,
+                                 TaxonomyConfig)
+from repro.dsl.compiler import RouterConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    severity: str          # error | warning | info
+    code: str              # e.g. "M1-overlap"
+    message: str
+    fix_hint: str = ""
+
+    def __str__(self):
+        s = f"[{self.severity}] {self.code}: {self.message}"
+        if self.fix_hint:
+            s += f"\n    fix: {self.fix_hint}"
+        return s
+
+
+MAX_PRIORITY = 100_000
+
+
+def _polarity_atoms(cond: Cond, neg: bool = False):
+    """Yield (atom_name, negated) with polarity tracking."""
+    if isinstance(cond, Atom):
+        yield cond.name, neg
+    elif isinstance(cond, Not):
+        yield from _polarity_atoms(cond.child, not neg)
+    elif isinstance(cond, (And, Or)):
+        for c in cond.children:
+            yield from _polarity_atoms(c, neg)
+
+
+class Validator:
+    def __init__(self, config: RouterConfig,
+                 taxonomy_cfg: TaxonomyConfig = TaxonomyConfig()):
+        self.cfg = config
+        self.tax_cfg = taxonomy_cfg
+
+    # ---- full run -------------------------------------------------------------
+    def validate(self, *, run_taxonomy: bool = True) -> List[Diagnostic]:
+        out: List[Diagnostic] = []
+        out += self.check_references()
+        out += self.check_constraints()
+        out += self.check_category_overlap()       # M1
+        out += self.check_guard_warnings()         # M2
+        out += self.check_signal_groups()          # M3
+        out += self.check_tests_static()           # M4 (static half)
+        out += self.check_tiers()                  # M5
+        if run_taxonomy:
+            out += self.check_taxonomy()           # M6
+        out += self.check_trees()                  # M7
+        return out
+
+    # ---- classic passes ---------------------------------------------------------
+    def check_references(self) -> List[Diagnostic]:
+        out = []
+        for rule in self.cfg.rules:
+            for atom in sorted(rule.condition.atoms()):
+                if atom not in self.cfg.signals:
+                    out.append(Diagnostic(
+                        "error", "ref-signal",
+                        f"ROUTE {rule.name}: WHEN references undeclared "
+                        f"signal {atom!r}"))
+                else:
+                    used = self.cfg.atom_types.get(atom)
+                    decl = self.cfg.signals[atom].signal_type
+                    if used and used != decl:
+                        out.append(Diagnostic(
+                            "error", "ref-type",
+                            f"signal {atom!r} declared as {decl!r} but "
+                            f"referenced as {used!r}"))
+        for rname, action in self.cfg.actions.items():
+            if action.kind == "model" and self.cfg.backends and \
+                    action.target not in self.cfg.backends:
+                out.append(Diagnostic(
+                    "warning", "ref-backend",
+                    f"ROUTE {rname}: MODEL {action.target!r} has no "
+                    f"BACKEND block"))
+            if action.kind == "plugin" and self.cfg.plugins and \
+                    action.target not in self.cfg.plugins:
+                out.append(Diagnostic(
+                    "warning", "ref-plugin",
+                    f"ROUTE {rname}: PLUGIN {action.target!r} not declared"))
+        return out
+
+    def check_constraints(self) -> List[Diagnostic]:
+        out = []
+        for name, sig in self.cfg.signals.items():
+            if not (0.0 <= sig.threshold <= 1.0):
+                out.append(Diagnostic(
+                    "error", "constraint-threshold",
+                    f"SIGNAL {name}: threshold {sig.threshold} ∉ [0,1]"))
+            if sig.signal_type not in SIGNAL_TYPE_KINDS:
+                out.append(Diagnostic(
+                    "warning", "constraint-type",
+                    f"SIGNAL {name}: unknown type {sig.signal_type!r} "
+                    f"(treated as classifier)"))
+        for rule in self.cfg.rules:
+            if not (0 <= rule.priority <= MAX_PRIORITY):
+                out.append(Diagnostic(
+                    "error", "constraint-priority",
+                    f"ROUTE {rule.name}: PRIORITY {rule.priority} outside "
+                    f"[0, {MAX_PRIORITY}]"))
+        return out
+
+    # ---- M1: category overlap -----------------------------------------------
+    def check_category_overlap(self) -> List[Diagnostic]:
+        out = []
+        seen: Dict[str, str] = {}
+        for name, sig in sorted(self.cfg.signals.items()):
+            for cat in sig.categories:
+                if cat in seen and seen[cat] != name:
+                    out.append(Diagnostic(
+                        "warning", "M1-overlap",
+                        f"category {cat!r} appears in both SIGNAL "
+                        f"{seen[cat]!r} and SIGNAL {name!r} — the domain "
+                        f"classifier can fire both on one query",
+                        fix_hint=f"remove {cat!r} from one signal, or "
+                                 f"declare both in a softmax_exclusive "
+                                 f"SIGNAL_GROUP"))
+                else:
+                    seen[cat] = name
+        return out
+
+    # ---- M2: guard warnings + auto-repair -------------------------------------
+    def check_guard_warnings(self) -> List[Diagnostic]:
+        out = []
+        # per route: positively-referenced signal types and guarded names
+        refs: Dict[str, Dict[str, List[str]]] = {}
+        guards: Dict[str, set] = {}
+        for rule in self.cfg.rules:
+            pos: Dict[str, List[str]] = {}
+            neg = set()
+            for atom, negated in _polarity_atoms(rule.condition):
+                stype = self.cfg.atom_types.get(
+                    atom, self.cfg.signals.get(atom).signal_type
+                    if atom in self.cfg.signals else "?")
+                if negated:
+                    neg.add(atom)
+                else:
+                    pos.setdefault(stype, []).append(atom)
+            refs[rule.name] = pos
+            guards[rule.name] = neg
+        rules = sorted(self.cfg.rules, key=lambda r: -r.priority)
+        for i, hi in enumerate(rules):
+            for lo in rules[i + 1:]:
+                shared = set(refs[hi.name]) & set(refs[lo.name])
+                for stype in sorted(shared):
+                    if SIGNAL_TYPE_KINDS.get(stype) is AtomKind.CRISP:
+                        continue
+                    hi_atoms = set(refs[hi.name][stype])
+                    lo_atoms = set(refs[lo.name][stype])
+                    if hi_atoms == lo_atoms:
+                        continue  # same signal, not an overlap pair
+                    if hi_atoms & guards[lo.name]:
+                        continue  # already guarded
+                    g = sorted(hi_atoms - lo_atoms)
+                    if not g:
+                        continue
+                    if any(self.cfg.signals.get(a) and
+                           self.cfg.signals[a].group and
+                           self.cfg.signals[a].group ==
+                           (self.cfg.signals[next(iter(lo_atoms))].group
+                            if self.cfg.signals.get(next(iter(lo_atoms)))
+                            else None) for a in g):
+                        continue  # same softmax_exclusive group
+                    guard_txt = " AND ".join(
+                        f'NOT {stype}("{a}")' for a in g)
+                    out.append(Diagnostic(
+                        "warning", "M2-guard",
+                        f"ROUTE {lo.name} and higher-priority ROUTE "
+                        f"{hi.name} both fire on {stype!r} signals with no "
+                        f"NOT guard — {hi.name} wins regardless of "
+                        f"confidence",
+                        fix_hint=f"ROUTE {lo.name}: WHEN "
+                                 f"{lo.condition!r} AND {guard_txt}"))
+        return out
+
+    # ---- M3: SIGNAL_GROUP --------------------------------------------------------
+    def check_signal_groups(self) -> List[Diagnostic]:
+        out = []
+        for gname, group in sorted(self.cfg.groups.items()):
+            for m in group.names:
+                if m not in self.cfg.signals:
+                    out.append(Diagnostic(
+                        "error", "M3-member",
+                        f"SIGNAL_GROUP {gname}: member {m!r} is not a "
+                        f"declared SIGNAL"))
+            if group.temperature <= 0:
+                out.append(Diagnostic(
+                    "error", "M3-temperature",
+                    f"SIGNAL_GROUP {gname}: temperature must be > 0"))
+            if group.default is None:
+                out.append(Diagnostic(
+                    "warning", "M3-default",
+                    f"SIGNAL_GROUP {gname}: no default member — queries "
+                    f"below θ route nowhere",
+                    fix_hint="add `default: <member>`"))
+            elif group.default not in group.names:
+                out.append(Diagnostic(
+                    "error", "M3-default",
+                    f"SIGNAL_GROUP {gname}: default {group.default!r} is "
+                    f"not a member"))
+            k = len(group.names)
+            if k and group.threshold <= 1.0 / k:
+                out.append(Diagnostic(
+                    "warning", "M3-theta",
+                    f"SIGNAL_GROUP {gname}: θ={group.threshold} ≤ 1/k="
+                    f"{1.0/k:.3f}; Theorem 2's at-most-one guarantee "
+                    f"does not hold",
+                    fix_hint=f"raise threshold above {1.0/k:.3f}"))
+            elif k > 2 and group.threshold <= 0.5:
+                # soundness finding (EXPERIMENTS.md §Thm2): the paper's
+                # θ > 1/k bound is insufficient for k ≥ 3 — two scores can
+                # both exceed 1/k while summing to 1.  θ > 1/2 is the
+                # temperature-independent guarantee.
+                out.append(Diagnostic(
+                    "warning", "M3-theta-k3",
+                    f"SIGNAL_GROUP {gname}: θ={group.threshold} satisfies "
+                    f"the paper's θ > 1/k bound but with k={k} two members "
+                    f"can still co-fire (e.g. scores 0.4/0.4/0.2 at "
+                    f"θ=0.34); only θ > 0.5 is temperature-independent",
+                    fix_hint="raise threshold above 0.5, or rely on low "
+                             "temperature (see "
+                             "core.voronoi.required_temperature)"))
+            # category disjointness across members
+            seen: Dict[str, str] = {}
+            for m in group.names:
+                sig = self.cfg.signals.get(m)
+                if sig is None:
+                    continue
+                for cat in sig.categories:
+                    if cat in seen:
+                        out.append(Diagnostic(
+                            "error", "M3-category",
+                            f"SIGNAL_GROUP {gname}: members {seen[cat]!r} "
+                            f"and {m!r} share category {cat!r}"))
+                    else:
+                        seen[cat] = m
+        return out
+
+    # ---- M4: TEST blocks ------------------------------------------------------
+    def check_tests_static(self) -> List[Diagnostic]:
+        out = []
+        route_names = {r.name for r in self.cfg.rules}
+        for tname, cases in sorted(self.cfg.tests.items()):
+            for q, expected in cases:
+                if not q.strip():
+                    out.append(Diagnostic(
+                        "error", "M4-query",
+                        f"TEST {tname}: empty query string"))
+                if expected not in route_names and \
+                        expected not in ("default", "__default__"):
+                    out.append(Diagnostic(
+                        "error", "M4-route",
+                        f"TEST {tname}: expected route {expected!r} does "
+                        f"not exist"))
+        return out
+
+    def run_tests(self, route_fn: Callable[[str], str]) -> List[Diagnostic]:
+        """M4 empirical half: route each TEST query through the live
+        pipeline (`route_fn`: query text -> winning route name)."""
+        out = []
+        for tname, cases in sorted(self.cfg.tests.items()):
+            for q, expected in cases:
+                got = route_fn(q)
+                if got != expected:
+                    out.append(Diagnostic(
+                        "error", "M4-assert",
+                        f"TEST {tname}: {q!r} routed to {got!r}, expected "
+                        f"{expected!r} — semantic conflict the static "
+                        f"checks cannot see"))
+        return out
+
+    # ---- M5: TIER --------------------------------------------------------------
+    def check_tiers(self) -> List[Diagnostic]:
+        out = []
+        tiers = {r.tier for r in self.cfg.rules}
+        if len(tiers) > 1 and 0 in tiers:
+            mixed = [r.name for r in self.cfg.rules if r.tier == 0]
+            out.append(Diagnostic(
+                "info", "M5-tier",
+                f"routes {mixed} have no TIER while others do; they "
+                f"evaluate in the lowest tier"))
+        for r in self.cfg.rules:
+            if r.tier < 0:
+                out.append(Diagnostic(
+                    "error", "M5-tier", f"ROUTE {r.name}: negative TIER"))
+        return out
+
+    # ---- M6: taxonomy ------------------------------------------------------------
+    def check_taxonomy(self) -> List[Diagnostic]:
+        det = ConflictDetector(self.cfg.signals,
+                               self.cfg.exclusive_groups(), self.tax_cfg)
+        out = []
+        for f in det.analyze(self.cfg.rules):
+            out.append(Diagnostic(
+                f.severity if f.severity in ("error", "warning", "info")
+                else "warning",
+                f"M6-{f.kind.name.lower()}", f.detail, f.fix_hint))
+        return out
+
+    # ---- M7: decision trees ----------------------------------------------------
+    def check_trees(self) -> List[Diagnostic]:
+        out = []
+        for tree in self.cfg.trees.values():
+            try:
+                fdd.validate_tree(tree, self.cfg.exclusive_groups())
+            except fdd.FDDError as e:
+                out.append(Diagnostic("error", "M7-tree", str(e)))
+        return out
+
+
+def has_errors(diags: Sequence[Diagnostic]) -> bool:
+    return any(d.severity == "error" for d in diags)

@@ -1,0 +1,105 @@
+"""Flash-decoding GQA attention Pallas kernel — the serving hot-spot.
+
+One new query token per sequence attends to a (B, S, KV, hd) cache:
+
+  * grid (B, S/block_s); the KV sequence is tiled through VMEM in
+    ``block_s`` chunks (hardware-aligned, default 512×hd),
+  * online-softmax running (m, l, acc) state lives in VMEM scratch and
+    persists across the sequential S-grid dimension,
+  * the GQA query block (H, hd) stays resident per batch row; KV heads
+    are broadcast to their query group inside the kernel,
+  * invalid cache slots (beyond ``n_valid``) are masked with -inf.
+
+Validated on CPU with ``interpret=True`` against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # (H, hd)
+    k = k_ref[0]                                    # (bs, KV, hd)
+    v = v_ref[0]
+    h, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(kv, g, hd)
+    s = jax.lax.dot_general(                        # (KV, g, bs)
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    offs = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=2)
+    s = jnp.where(offs < nvalid_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (KV, g)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    r = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])               # (KV, g, bs)
+    l_ref[...] = l_ref[...] * r + p.sum(axis=-1)
+    pv = jax.lax.dot_general(                       # (KV, g, hd)
+        p.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))))
+    acc_ref[...] = acc_ref[...] * r[..., None] + pv.astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        o = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+        o_ref[0] = o.reshape(h, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "interpret"))
+def decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               n_valid: jnp.ndarray, *, block_s: int = 512,
+               interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, hd); k/v: (B, S, KV, hd); n_valid: () or (1,) int32.
+    -> (B, H, hd) attention output."""
+    b, h, hd = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    bs = min(block_s, s_len)
+    pad = (-s_len) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ns = k.shape[1] // bs
+    g = h // kv
+    nvalid = jnp.asarray(n_valid, jnp.int32).reshape(1)
+    scale = hd ** -0.5
+    kern = functools.partial(_decode_kernel, block_s=bs, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, si: (0,)),
+            pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, bs, kv, hd), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, bs, kv, hd), lambda bi, si: (bi, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nvalid, q, k, v)
+    return out

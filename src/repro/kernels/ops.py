@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+real TPU backend pass ``interpret=False`` (the default resolves by
+platform).  ``use_ref=True`` routes to the pure-jnp oracles — handy for
+A/B in benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_gqa as _dg
+from repro.kernels import ref as _ref
+from repro.kernels import voronoi as _vor
+from repro.kernels import wkv6 as _wkv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def voronoi_scores(x, centroids, temperature, *, interpret=None,
+                   use_ref=False, block_b: int = 128):
+    if use_ref:
+        return _ref.voronoi_scores_ref(x, centroids, temperature)
+    interp = _default_interpret() if interpret is None else interpret
+    return _vor.voronoi_scores(x, centroids, temperature,
+                               block_b=block_b, interpret=interp)
+
+
+def voronoi_normalize_sims(sims, temperature, *, interpret=None,
+                           use_ref=False, block_b: int = 128):
+    if use_ref:
+        return _ref.voronoi_normalize_sims_ref(sims, temperature)
+    interp = _default_interpret() if interpret is None else interpret
+    return _vor.voronoi_normalize_sims(sims, temperature,
+                                       block_b=block_b, interpret=interp)
+
+
+def decode_gqa(q, k, v, n_valid, *, interpret=None, use_ref=False,
+               block_s: int = 512):
+    if use_ref:
+        return _ref.decode_gqa_ref(q, k, v, n_valid)
+    interp = _default_interpret() if interpret is None else interpret
+    return _dg.decode_gqa(q, k, v, n_valid, block_s=block_s,
+                          interpret=interp)
+
+
+def wkv6(r, k, v, w, u, *, interpret=None, use_ref=False, chunk: int = 64):
+    if use_ref:
+        return _ref.wkv6_ref(r, k, v, w, u)
+    interp = _default_interpret() if interpret is None else interpret
+    return _wkv.wkv6(r, k, v, w, u, chunk=chunk, interpret=interp)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def voronoi_scores_ref(x, centroids, temperature):
+    sims = (x @ centroids.T).astype(jnp.float32)
+    return jax.nn.softmax(sims / temperature, axis=-1)
+
+
+def voronoi_normalize_sims_ref(sims, temperature):
+    return jax.nn.softmax(sims.astype(jnp.float32) / temperature, axis=-1)
+
+
+def decode_gqa_ref(q, k, v, n_valid):
+    """q: (B,H,hd); k/v: (B,S,KV,hd); n_valid: scalar."""
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = jnp.arange(k.shape[1]) < n_valid
+    s = jnp.where(valid[None, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v)
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential WKV recurrence.  r/k/v/w: (B,S,H,N) f32; u: (H,N)."""
+    b, s, h, n = r.shape
+    state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        kvm = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, st + u[None, :, :, None] * kvm)
+        st = wt[..., :, None] * st + kvm
+        return st, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,105 @@
+"""RWKV-6 WKV chunked-scan Pallas kernel.
+
+Per (batch, head) grid cell, time is tiled in chunks of C steps; the
+(N, N) recurrent state lives in VMEM scratch and persists across the
+sequential time-grid dimension.  Within a chunk the recurrence is closed
+into dense (C,N)x(N,N)/(C,C) matmuls (MXU work) using cumulative decay
+products — identical math to models/rwkv6.wkv_chunked:
+
+  y_t = r_t · (S_in · Π_{s<t} w  +  Σ_{s<t} k_s v_sᵀ Π_{s<u<t} w)
+        + (r_t ⊙ u ⊙ k_t) · v_t
+  S_out = diag(Π w) S_in + Σ_s (Π_{u>s} w) k_s v_sᵀ
+
+Head size N = 64 ⇒ all blocks are tiny; C defaults to 64 so the (C,C)
+intra-chunk matrix stays register-friendly.  Validated with
+``interpret=True`` against the sequential oracle in kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0, 0].astype(jnp.float32)           # (C, N)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    w = w_ref[0, 0, 0].astype(jnp.float32)
+    u = u_ref[0]                                     # (N,)
+    st = s_ref[...]                                  # (N, N)
+    c = r.shape[0]
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    cw = jnp.cumsum(logw, axis=0)                    # (C, N): Π_{s<=t}
+    dec_q = jnp.exp(cw - logw)                       # Π_{s<t}
+    y_inter = jax.lax.dot_general(                   # (C, N_v)
+        r * dec_q, st, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # pair decay ratio[t, s, n] = Π_{s<u<t} w_u  (for s < t).  Clamp the
+    # exponent at 0: anti-causal entries are masked by `tri` anyway but
+    # would overflow to inf at extreme decay (0*inf = NaN); every causal
+    # entry has exponent ≤ 0 since w < 1, so the clamp is exact.
+    ratio = jnp.exp(jnp.minimum(
+        cw[:, None, :] - logw[:, None, :] - cw[None, :, :], 0.0))
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), -1)[..., None]
+    att = jnp.einsum("tn,tsn,sn->ts", r, ratio * tri, k)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)      # (C,)
+    att = att + jnp.eye(c, dtype=jnp.float32) * diag[:, None]
+    y_intra = jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0, 0] = (y_inter + y_intra).astype(o_ref.dtype)
+
+    wtot = jnp.exp(cw[-1])                           # (N,)
+    dec_k = jnp.exp(cw[-1][None, :] - cw)            # Π_{u>s}
+    s_ref[...] = wtot[:, None] * st + jax.lax.dot_general(
+        k * dec_k, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+         u: jnp.ndarray, *, chunk: int = 64, interpret: bool = False
+         ) -> jnp.ndarray:
+    """r/k/v/w: (B, S, H, N) f32; u: (H, N).  -> y (B, S, H, N).
+    Requires S % chunk == 0 (pad upstream)."""
+    b, s, h, n = r.shape
+    assert s % chunk == 0, "pad S to a multiple of the chunk"
+    nc = s // chunk
+    # layout: (B, H, S, N) so the time dim tiles cleanly
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b, h, nc, chunk, n)
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    kern = functools.partial(_wkv_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, n), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, n),
+                               lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nc, chunk, n), r.dtype),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, wb, u)
+    return out.reshape(b, h, s, n).transpose(0, 2, 1, 3)

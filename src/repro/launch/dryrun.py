@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) combination this lowers the
+appropriate step function (train_step / prefill_step / serve_step) with
+``jax.jit(...).lower(**input_specs)``, compiles it, and records
+``memory_analysis`` / ``cost_analysis`` / structural-HLO collective stats
+into ``artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json``.
+
+The 512 placeholder host devices exist ONLY here (the env var above runs
+before any other import, because jax locks the device count on first
+init).  Smoke tests and benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  python -m repro.launch.dryrun --arch X --shape Y --set attn_impl=chunked --tag chunked
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import archs
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config, input_specs, skip_reason
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def parse_overrides(pairs):
+    out = {}
+    for pair in pairs or []:
+        k, v = pair.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        if v in ("false", "False"):
+            v = False
+        out[k] = v
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            overrides=None, tag: str = "", verbose: bool = True):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch, **(overrides or {}))
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_name = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "overrides": overrides or {}, "status": "",
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        result["status"] = "skipped"
+        result["skip_reason"] = reason
+        _write(out_name, result)
+        if verbose:
+            print(f"[dryrun] SKIP  {out_name}: {reason}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = lower_step(cfg, shape, mesh)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            text = compiled.as_text()
+        result["lower_s"] = round(t1 - t0, 2)
+        result["compile_s"] = round(t2 - t1, 2)
+        result["memory_analysis"] = {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        result["cost_analysis"] = {
+            k: float(v) for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals") or "bytes" in k)}
+        result["hlo"] = hlo_analysis.analyze(text)
+        result["hlo_chars"] = len(text)
+        result["status"] = "ok"
+        if verbose:
+            ca = result["cost_analysis"].get("flops", 0)
+            hf = result["hlo"]["dot_flops"]
+            cb = result["hlo"]["collective_bytes"]
+            print(f"[dryrun] OK    {out_name}: compile={result['compile_s']}s "
+                  f"dot_flops={hf:.3e} coll_bytes={cb:.3e} "
+                  f"(raw cost_analysis flops={ca:.3e})")
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] FAIL  {out_name}: {result['error'][:300]}")
+    _write(out_name, result)
+    return result
+
+
+def _write(name, result):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    with open(ARTIFACTS / f"{name}.json", "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(archs.ALL), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    metavar="key=value", help="ModelConfig overrides")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.sets)
+
+    combos = []
+    if args.all:
+        for arch in sorted(archs.ALL):
+            for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                combos.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    ok = fail = skip = 0
+    for arch, shape in combos:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            fn = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+            if args.skip_existing and (ARTIFACTS / f"{fn}.json").exists():
+                prev = json.loads((ARTIFACTS / f"{fn}.json").read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] CACHED {fn} ({prev['status']})")
+                    continue
+            r = run_one(arch, shape, multi_pod=mp, overrides=overrides,
+                        tag=args.tag)
+            ok += r["status"] == "ok"
+            fail += r["status"] == "error"
+            skip += r["status"] == "skipped"
+    print(f"[dryrun] done: ok={ok} fail={fail} skip={skip}")
+
+
+if __name__ == "__main__":
+    main()

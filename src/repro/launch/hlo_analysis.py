@@ -1,0 +1,216 @@
+"""Structural analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE, so any model
+whose layers lower as a ``lax.scan`` is undercounted by the trip count
+(verified empirically on this jax/XLA build — EXPERIMENTS.md §Dry-run).
+This module re-derives the roofline inputs from the HLO text itself, with
+loop multipliers taken from each while op's ``known_trip_count``
+backend-config (fallback: the largest integer constant in the loop
+condition computation):
+
+  * dot FLOPs        — 2 * prod(result dims) * prod(lhs contracting dims),
+                       via a per-computation symbol table (optimized HLO
+                       does not inline operand types).
+  * HBM traffic      — Σ result bytes over compute ops × 2 (read+write).
+                       ``dynamic-update-slice`` counts its update operand
+                       (in-place), and pure layout/convert ops are skipped
+                       (bf16→f32 converts are a CPU-backend artifact).
+  * collective bytes — result bytes by kind (all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute).
+
+Fusion bodies are excluded from traffic (a fusion's external traffic is
+its operands/result, counted at the call site).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]\{\},]+))\s+"
+    r"([\w\-]+)\(([^)]*)\)")
+_CALL_ATTR = re.compile(r"(?:condition|body|to_apply|calls)=\s*%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "copy", "convert", "iota", "after-all",
+                 "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _prod(xs) -> float:
+    out = 1.0
+    for x in xs:
+        out *= x
+    return out
+
+
+class Computation:
+    __slots__ = ("name", "calls", "dot_flops", "traffic_bytes",
+                 "collective_bytes", "collective_counts", "max_const",
+                 "whiles", "trip_by_body")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.calls: List[Tuple[str, str]] = []
+        self.dot_flops = 0.0
+        self.traffic_bytes = 0.0
+        self.collective_bytes: Dict[str, float] = defaultdict(float)
+        self.collective_counts: Dict[str, int] = defaultdict(int)
+        self.max_const = 0
+        self.whiles: List[Tuple[str, str]] = []       # (cond, body)
+        self.trip_by_body: Dict[str, int] = {}
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    symtab: Dict[str, str] = {}
+    for line in text.splitlines():
+        if line.startswith("}"):
+            cur = None
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            symtab = {}
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        for c in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(c.group(1)))
+        op = _OP_RE.match(line)
+        if not op:
+            continue
+        name, rtype, kind, operands_str = op.groups()
+        symtab[name] = rtype
+        operands = [o.strip().lstrip("%")
+                    for o in operands_str.split(",") if o.strip()]
+        for cm in _CALL_ATTR.finditer(line):
+            cur.calls.append((kind, cm.group(1)))
+        if " while(" in line:
+            cm = re.search(r"condition=\s*%?([\w\.\-]+)", line)
+            bm = re.search(r"body=\s*%?([\w\.\-]+)", line)
+            if cm and bm:
+                cur.whiles.append((cm.group(1), bm.group(1)))
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    cur.trip_by_body[bm.group(1)] = int(tm.group(1))
+        if kind == "dot":
+            out_elems = _prod(_shape_dims(rtype)) if _shape_dims(rtype) else 1
+            contract = 1.0
+            cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            lhs_dims = _shape_dims(symtab.get(operands[0], "")) if operands else []
+            if cm2 and lhs_dims:
+                for idx in cm2.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            cur.dot_flops += 2.0 * out_elems * contract
+        base = kind[:-6] if kind.endswith("-start") else kind
+        if base in COLLECTIVES:
+            b = _shape_bytes(rtype)
+            cur.collective_bytes[base] += b
+            cur.collective_counts[base] += 1
+        if kind == "dynamic-update-slice" and len(operands) >= 2:
+            cur.traffic_bytes += _shape_bytes(symtab.get(operands[1], ""))
+        elif kind not in _SKIP_TRAFFIC:
+            cur.traffic_bytes += _shape_bytes(rtype)
+    return comps, entry
+
+
+def analyze(text: str) -> Dict[str, object]:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        entry = max(comps, key=lambda n: comps[n].traffic_bytes, default=None)
+    mult: Dict[str, float] = defaultdict(float)
+
+    def walk(name: str, m: float, fused: bool, depth: int = 0):
+        comp = comps.get(name)
+        if comp is None or depth > 48:
+            return
+        if not fused:
+            mult[name] += m
+        body_tc = {}
+        conds = set()
+        for cond, body in comp.whiles:
+            tc = comp.trip_by_body.get(
+                body, max(comps[cond].max_const, 1) if cond in comps else 1)
+            body_tc[body] = tc
+            conds.add(cond)
+        seen = set()
+        for kind, callee in comp.calls:
+            if callee not in comps or callee == name or callee in seen:
+                continue
+            seen.add(callee)
+            if callee in body_tc:
+                walk(callee, m * body_tc[callee], fused, depth + 1)
+            elif callee in conds:
+                continue
+            elif kind == "fusion":
+                walk(callee, m, True, depth + 1)
+            else:
+                walk(callee, m, fused, depth + 1)
+
+    if entry:
+        walk(entry, 1.0, False)
+
+    per_coll: Dict[str, float] = defaultdict(float)
+    per_coll_n: Dict[str, float] = defaultdict(float)
+    total = {"dot_flops": 0.0, "traffic_bytes": 0.0, "n_while": 0}
+    trip_counts = []
+    for name, m in mult.items():
+        comp = comps[name]
+        total["dot_flops"] += m * comp.dot_flops
+        total["traffic_bytes"] += m * comp.traffic_bytes * 2.0
+        for k, v in comp.collective_bytes.items():
+            per_coll[k] += m * v
+            per_coll_n[k] += m * comp.collective_counts[k]
+        total["n_while"] += len(comp.whiles)
+        trip_counts += [comp.trip_by_body[b] for _, b in comp.whiles
+                        if b in comp.trip_by_body]
+    total["collective_bytes"] = float(sum(per_coll.values()))
+    total["collectives"] = {k: float(per_coll[k]) for k in sorted(per_coll)}
+    total["collective_counts"] = {k: float(per_coll_n[k])
+                                  for k in sorted(per_coll_n)}
+    total["trip_counts"] = trip_counts
+    return total

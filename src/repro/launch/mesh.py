@@ -1,0 +1,19 @@
+"""Production mesh factories.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (device count is locked on first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke/serving paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,118 @@
+"""Step functions (train / prefill / serve) + their sharding assemblies.
+
+These are what both the real launchers (train.py / serve.py) and the
+multi-pod dry-run (dryrun.py) lower.  Everything here is mesh-agnostic:
+shardings are derived from the abstract param/cache trees by the
+name-based rules in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as shd
+from repro.models.model import Model, build_model
+from repro.train import optimizer as opt
+
+
+def make_train_step(model: Model, ocfg: opt.AdamWConfig = opt.AdamWConfig()):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch["tokens"], batch.get("extras"))
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = opt.apply_updates(params, grads, opt_state, ocfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: Model, max_seq: Optional[int] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch["tokens"], batch.get("extras"),
+                             max_seq=max_seq)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract shapes + shardings for a (cfg, shape, mesh) combination
+# ---------------------------------------------------------------------------
+
+def abstract_state(model: Model, shape: InputShape,
+                   with_opt: bool = True) -> Dict[str, Any]:
+    """ShapeDtypeStructs for params / opt state / cache via eval_shape —
+    no allocation, safe at 90B scale."""
+    out: Dict[str, Any] = {}
+    out["params"] = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind == "train" and with_opt:
+        out["opt"] = jax.eval_shape(opt.init_opt, out["params"])
+    if shape.kind == "decode":
+        out["cache"] = jax.eval_shape(
+            functools.partial(model.init_cache, shape.global_batch,
+                              shape.seq_len))
+    return out
+
+
+def batch_shardings(mesh, specs: Dict[str, Any]):
+    def walk(leaf):
+        return shd.batch_sharding(mesh, leaf.shape)
+    return jax.tree.map(walk, specs)
+
+
+def lower_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               donate: bool = True):
+    """Build + lower the right step for (cfg, shape) under `mesh`.
+    Returns the jax ``Lowered`` object."""
+    from repro.configs.registry import input_specs  # cycle-free local import
+    shd.set_current_mesh(mesh)   # lets model code (MoE "ep") use shard_map
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    state = abstract_state(model, shape)
+    p_shard = shd.tree_shardings(mesh, state["params"])
+    b_shard = batch_shardings(mesh, specs)
+
+    if shape.kind == "train":
+        step = make_train_step(model)
+        o_shard = opt.OptState(
+            step=shd.named_sharding(mesh, "step", ()),
+            m=shd.tree_shardings(mesh, state["opt"].m),
+            v=shd.tree_shardings(mesh, state["opt"].v))
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1) if donate else ())
+        return jitted.lower(state["params"], state["opt"], specs)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, max_seq=shape.seq_len)
+        model_cache = jax.eval_shape(
+            functools.partial(model.init_cache, shape.global_batch,
+                              shape.seq_len))
+        c_shard = shd.cache_shardings(mesh, model_cache)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                         out_shardings=(None, c_shard))
+        return jitted.lower(state["params"], specs)
+
+    # decode
+    step = make_serve_step(model)
+    c_shard = shd.cache_shardings(mesh, state["cache"])
+    tok_shard = shd.batch_sharding(mesh, specs["tokens"].shape)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, c_shard, tok_shard, None),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,) if donate else ())
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted.lower(state["params"], state["cache"],
+                        specs["tokens"], pos)

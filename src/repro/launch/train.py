@@ -1,0 +1,82 @@
+"""Training launcher.
+
+On the production mesh this runs exactly what launch/dryrun.py lowers;
+on CPU it runs real steps on a reduced config:
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --smoke --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train.data import DataConfig, SyntheticStream
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps)
+    step_fn = make_train_step(model, ocfg)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init_opt(params, ocfg)
+    p_shard = shd.tree_shardings(mesh, jax.eval_shape(lambda: params))
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    stream = SyntheticStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"devices={len(jax.devices())}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step={step:5d} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+        if args.ckpt_dir and args.ckpt_every and \
+                (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt_state._asdict()})
+    print(f"[train] first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

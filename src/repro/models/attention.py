@@ -1,0 +1,295 @@
+"""Self/cross attention: MHA, GQA, MQA; sliding windows; three prefill
+implementations (full, chunked online-softmax, banded windowed); ring-buffer
+decode caches.
+
+Layout conventions:
+  activations  x: (B, S, D)
+  q            (B, S, H, hd)
+  k, v         (B, S, KV, hd)
+  cache k/v    (B, W, KV, hd)   W = min(max_seq, window or max_seq)
+Keys are stored *post-RoPE* in the cache, so decode needs no re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import common as cm
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, spec: LayerSpec, *, cross: bool = False):
+    dt = cm.dtype_of(cfg.dtype)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    pfx = "cross_" if cross else ""
+    p = {
+        pfx + "wq": cm.dense_init(ks[0], (d, h, hd), dt),
+        pfx + "wk": cm.dense_init(ks[1], (d, kv, hd), dt),
+        pfx + "wv": cm.dense_init(ks[2], (d, kv, hd), dt),
+        pfx + "wo": cm.dense_init(ks[3], (h, hd, d), dt, in_axis=0),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = cm.ones((hd,), dt)
+        p["k_norm"] = cm.ones((hd,), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core score/combine helpers (grouped-query layout)
+# ---------------------------------------------------------------------------
+
+def _group(q, kv_heads):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, hd)
+
+
+def _scores(qg, k, scale):
+    # qg: (B,S,KV,G,hd)  k: (B,T,KV,hd) -> (B,KV,G,S,T), f32
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _combine(probs, v, dtype):
+    # probs: (B,KV,G,S,T)  v: (B,T,KV,hd) -> (B,S,KV*G,hd)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    b, s, kv, g, hd = out.shape
+    return out.reshape(b, s, kv * g, hd).astype(dtype)
+
+
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Prefill / train paths
+# ---------------------------------------------------------------------------
+
+def attend_full(q, k, v, q_pos, k_pos, *, causal: bool, window, scale, softcap=0.0):
+    qg = _group(q, k.shape[2])
+    s = _scores(qg, k, scale)
+    s = cm.softcap(s, softcap)
+    if causal:
+        mask = _causal_mask(q_pos, k_pos, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _combine(p, v, q.dtype)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, *, causal: bool, window, scale,
+                   chunk: int, softcap=0.0):
+    """Online-softmax scan over KV chunks (flash-style, O(S*chunk) live)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    nc = max(1, -(-t // chunk))
+    pad = nc * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    kv_heads = k.shape[2]
+    qg = _group(q, kv_heads)
+    kc = k.reshape(b, nc, chunk, kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(nc, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        sb = _scores(qg, kb, scale)               # (B,KV,G,S,C)
+        sb = cm.softcap(sb, softcap)
+        if causal:
+            mask = _causal_mask(q_pos, pb, window)
+            sb = jnp.where(mask[None, None, None], sb, NEG_INF)
+        m_new = jnp.maximum(m, sb.max(axis=-1))
+        r = jnp.exp(m - m_new)
+        p = jnp.exp(sb - m_new[..., None])
+        l = l * r + p.sum(axis=-1)
+        acc = acc * r[..., None] + jnp.einsum(
+            "bkgsc,bckh->bkgsh", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    g = h // kv_heads
+    m0 = jnp.full((b, kv_heads, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_heads, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kv_heads, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def attend_banded(q, k, v, q_pos, k_pos, *, window: int, scale, softcap=0.0):
+    """Windowed causal attention in O(S*2w): query chunk i attends KV
+    chunks i-1 and i (chunk size = window).  Requires S % window == 0."""
+    b, s, h, hd = q.shape
+    w = window
+    assert s % w == 0, "banded prefill needs seq % window == 0"
+    nc = s // w
+    kv_heads = k.shape[2]
+    qc = q.reshape(b, nc, w, h, hd)
+    kc = k.reshape(b, nc, w, kv_heads, hd)
+    vc = v.reshape(b, nc, w, kv_heads, hd)
+    zk = jnp.zeros_like(kc[:, :1])
+    kprev = jnp.concatenate([zk, kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kc], axis=2)     # (B,nc,2w,KV,hd)
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+    qg = qc.reshape(b, nc, w, kv_heads, h // kv_heads, hd)
+    sc = jnp.einsum("bnskgh,bntkh->bnkgst", qg, k2,
+                    preferred_element_type=jnp.float32) * scale
+    sc = cm.softcap(sc, softcap)
+    qp = q_pos.reshape(nc, w)
+    kp = jnp.concatenate(
+        [qp - w, qp], axis=1)                     # (nc, 2w) positions
+    mask = (kp[:, None, :] <= qp[:, :, None]) & \
+           (kp[:, None, :] > qp[:, :, None] - w) & (kp[:, None, :] >= 0)
+    sc = jnp.where(mask[None, :, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnkgst,bntkh->bnskgh", p.astype(v2.dtype), v2)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public layer application
+# ---------------------------------------------------------------------------
+
+def self_attention(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                   *, cache=None, pos=None, collect: Optional[int] = None):
+    """cache=None -> train/prefill over full x.
+    cache={'k','v'} + scalar pos -> single-token decode (x: (B,1,D)).
+    collect=max_seq -> prefill also returns a decode-ready KV cache."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    theta = spec.rope_theta or cfg.rope_theta
+    scale = hd ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = cm.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = cm.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.partial_rotary > 0:  # whisper sets 0.0 (sinusoidal abs pos)
+        q = cm.apply_rope(q, positions, theta, cfg.partial_rotary)
+        k = cm.apply_rope(k, positions, theta, cfg.partial_rotary)
+
+    if cache is None:
+        if not spec.causal:
+            out = attend_full(q, k, v, positions[0], positions[0],
+                              causal=False, window=None, scale=scale,
+                              softcap=cfg.logit_softcap)
+        elif (spec.window is not None and cfg.window_prefill_banded
+              and x.shape[1] % spec.window == 0 and x.shape[1] > spec.window):
+            out = attend_banded(q, k, v, positions[0], positions[0],
+                                window=spec.window, scale=scale,
+                                softcap=cfg.logit_softcap)
+        elif cfg.attn_impl == "chunked" and x.shape[1] > cfg.attn_chunk:
+            out = attend_chunked(q, k, v, positions[0], positions[0],
+                                 causal=True, window=spec.window, scale=scale,
+                                 chunk=cfg.attn_chunk, softcap=cfg.logit_softcap)
+        else:
+            out = attend_full(q, k, v, positions[0], positions[0],
+                              causal=True, window=spec.window, scale=scale,
+                              softcap=cfg.logit_softcap)
+        new_cache = None
+        if collect is not None:
+            new_cache = _collect_cache(k, v, positions, spec, collect)
+    else:
+        out, new_cache = _decode_attend(q, k, v, cache, pos, spec, cfg, scale)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def _collect_cache(k, v, positions, spec: LayerSpec, max_seq: int):
+    """Build a decode-ready cache from prefill K/V (post-RoPE)."""
+    b, s, kv, hd = k.shape
+    if spec.window is not None and min(max_seq, spec.window) < s:
+        w = min(max_seq, spec.window)
+        slots = positions[0][-w:] % w
+        ck = jnp.zeros((b, w, kv, hd), k.dtype).at[:, slots].set(k[:, -w:])
+        cv = jnp.zeros((b, w, kv, hd), v.dtype).at[:, slots].set(v[:, -w:])
+    else:
+        w = min(max_seq, spec.window) if spec.window is not None else max_seq
+        ck = jnp.zeros((b, w, kv, hd), k.dtype).at[:, :s].set(k[:, :w])
+        cv = jnp.zeros((b, w, kv, hd), v.dtype).at[:, :s].set(v[:, :w])
+    return {"k": ck, "v": cv}
+
+
+def _decode_attend(q, k_new, v_new, cache, pos, spec: LayerSpec,
+                   cfg: ModelConfig, scale):
+    """One-token decode against a (possibly ring-buffer) cache."""
+    ck, cv = cache["k"], cache["v"]
+    w = ck.shape[1]
+    slot = pos % w if spec.window is not None else jnp.minimum(pos, w - 1)
+    ck = ck.at[:, slot].set(k_new[:, 0].astype(ck.dtype))
+    cv = cv.at[:, slot].set(v_new[:, 0].astype(cv.dtype))
+    n_valid = jnp.minimum(pos + 1, w)
+    if cfg.decode_kernel and cfg.logit_softcap == 0.0:
+        # flash-decoding Pallas kernel (kernels/decode_gqa.py): online-
+        # softmax over KV blocks, scratch state in VMEM.  Valid-slot
+        # semantics match both the ring buffer (n_valid) and the full
+        # cache (pos+1) cases.
+        from repro.kernels import ops as kops
+        out = kops.decode_gqa(q[:, 0], ck, cv, n_valid,
+                              block_s=min(512, ck.shape[1]))
+        return out[:, None], {"k": ck, "v": cv}
+    if spec.window is not None:
+        # ring buffer: slot i holds absolute position whose (abs % w)==i;
+        # all written slots are within the window by construction.
+        valid = jnp.arange(w) < n_valid
+    else:
+        valid = jnp.arange(w) <= pos
+    qg = _group(q, ck.shape[2])
+    s = _scores(qg, ck, scale)
+    s = cm.softcap(s, cfg.logit_softcap)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _combine(p, cv, q.dtype)
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder / mllama image layers)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p, cfg: ModelConfig, x, memory=None, *, cache=None,
+                    prefix: str = "cross_"):
+    """memory: (B, T, D) encoder states (train/prefill); cache: {'ck','cv'}."""
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"])
+    if cache is None:
+        k = jnp.einsum("btd,dhk->bthk", memory, p[prefix + "wk"])
+        v = jnp.einsum("btd,dhk->bthk", memory, p[prefix + "wv"])
+    else:
+        k, v = cache["ck"], cache["cv"]
+    qg = _group(q, k.shape[2])
+    s = _scores(qg, k, scale)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = _combine(probs, v, q.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p[prefix + "wo"])
+
+
+def cross_kv(p, cfg: ModelConfig, memory, prefix: str = "cross_"):
+    k = jnp.einsum("btd,dhk->bthk", memory, p[prefix + "wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, p[prefix + "wv"])
+    return {"ck": k, "cv": v}
+
+
+def init_kv_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int,
+                  dtype):
+    w = min(max_seq, spec.window) if spec.window is not None else max_seq
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, w, kv, hd), dtype),
+            "v": jnp.zeros((batch, w, kv, hd), dtype)}

@@ -1,0 +1,99 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Prefill expands the latent KV into full per-head keys/values (naive path).
+Decode uses the weight-absorption trick: W_uk is folded into the query so
+attention runs directly against the (B, S, kv_lora + rope) latent cache —
+the TPU analogue of FlashMLA-style decode (see DESIGN §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import common as cm
+from repro.models.attention import NEG_INF
+
+def init_mla(key, cfg: ModelConfig):
+    dt = cm.dtype_of(cfg.dtype)
+    d, h, m = cfg.d_model, cfg.n_heads, cfg.mla
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "mla_wq": cm.dense_init(ks[0], (d, h, qd), dt),
+        "mla_wdkv": cm.dense_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "mla_wuk": cm.dense_init(ks[2], (m.kv_lora_rank, h, m.qk_nope_head_dim), dt),
+        "mla_wuv": cm.dense_init(ks[3], (m.kv_lora_rank, h, m.v_head_dim), dt),
+        "mla_wo": cm.dense_init(ks[4], (h, m.v_head_dim, d), dt, in_axis=0),
+        "kv_norm": cm.ones((m.kv_lora_rank,), dt),
+    }
+
+
+def _project_latent(p, cfg: ModelConfig, x, positions):
+    """-> (q_nope, q_rope, c_kv (normed latent), k_rope) ; rope applied."""
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["mla_wq"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ p["mla_wdkv"]                        # (B,S,R+rd)
+    c_kv, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c_kv = cm.rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions,
+                           cfg.rope_theta)[:, :, 0, :]  # shared across heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_prefill(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                collect=None):
+    """Naive expansion path for train/prefill."""
+    m = cfg.mla
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _project_latent(p, cfg, x, positions)
+    new_cache = None
+    if collect is not None:
+        b, s = x.shape[0], x.shape[1]
+        new_cache = {
+            "ckv": jnp.zeros((b, collect, m.kv_lora_rank), c_kv.dtype
+                             ).at[:, :s].set(c_kv),
+            "krope": jnp.zeros((b, collect, m.qk_rope_head_dim), k_rope.dtype
+                               ).at[:, :s].set(k_rope)}
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["mla_wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["mla_wuv"])
+    s = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    qp = positions[0]
+    mask = qp[:, None] >= qp[None, :]            # (S query, T key) causal
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs.astype(v.dtype), v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["mla_wo"]), new_cache
+
+
+def mla_decode(p, cfg: ModelConfig, spec: LayerSpec, x, positions, cache, pos):
+    """Absorbed decode: scores/combines run in latent (R) space."""
+    m = cfg.mla
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _project_latent(p, cfg, x, positions)
+    ck = cache["ckv"].at[:, pos].set(c_kv[:, 0].astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[:, pos].set(k_rope[:, 0].astype(cache["krope"].dtype))
+    # absorb W_uk into the query: q_eff (B,1,H,R)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["mla_wuk"])
+    s = (jnp.einsum("bshr,btr->bhst", q_eff, ck,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshk,btk->bhst", q_rope, cr,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(ck.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(ck.dtype), ck)  # (B,1,H,R)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["mla_wuv"])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["mla_wo"])
+    return y, {"ckv": ck, "krope": cr}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype)}

@@ -1,0 +1,184 @@
+"""Top-level model: embeddings, pattern stack, (optional) audio encoder /
+vision projector, LM head, loss; plus the cache factory.
+
+API (all pure functions of pytrees — pjit-ready):
+    m = Model(cfg)
+    params = m.init(key)                       # or jax.eval_shape(m.init, k)
+    logits, aux = m.forward(params, tokens, extras)
+    logits, cache = m.prefill(params, tokens, extras)
+    logits, cache = m.decode_step(params, cache, tokens_1, pos)
+    cache = m.init_cache(batch, max_seq)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, GELU_MLP, LayerSpec, ModelConfig
+from repro.models import common as cm
+from repro.models import pattern
+
+
+def _enc_layer_spec() -> LayerSpec:
+    return LayerSpec(mixer=ATTN, ffn=GELU_MLP, causal=False)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cm.dtype_of(cfg.dtype)
+        k_emb, k_stack, k_head, k_enc, k_proj = jax.random.split(key, 5)
+        params: Dict[str, Any] = {
+            "tok_embed": cm.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dt),
+            "stack": pattern.init_stack(k_stack, cfg),
+            "final_norm": cm.init_norm(cfg.norm, cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = cm.embed_init(
+                k_head, (cfg.vocab_size, cfg.d_model), dt)
+        if cfg.encoder is not None:
+            params["encoder"] = self._init_encoder(k_enc)
+        if cfg.vision is not None:
+            params["vision_proj"] = cm.dense_init(
+                k_proj, (cfg.vision.d_input, cfg.d_model), dt)
+        return params
+
+    def _init_encoder(self, key):
+        cfg = self.cfg
+        dt = cm.dtype_of(cfg.dtype)
+        e = cfg.encoder
+        spec = _enc_layer_spec()
+        keys = jax.random.split(key, 3)
+        layers = jax.vmap(
+            lambda k: pattern.init_block(k, cfg, spec)
+        )(jax.random.split(keys[0], e.n_layers))
+        return {
+            "audio_proj": cm.dense_init(keys[1], (e.d_input, cfg.d_model), dt),
+            "layers": layers,
+            "enc_norm": cm.init_norm(cfg.norm, cfg.d_model, dt),
+        }
+
+    # --------------------------------------------------------------- helpers
+    def _embed(self, params, tokens):
+        x = cm.take_embedding(params["tok_embed"], tokens)
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+        if self.cfg.encoder is not None or self.cfg.partial_rotary == 0:
+            # sinusoidal absolute positions (whisper decoder adaptation)
+            s = tokens.shape[1]
+            x = x + cm.sinusoidal_positions(s, self.cfg.d_model, x.dtype)[None]
+        return x
+
+    def _logits(self, params, x):
+        head = params["tok_embed"] if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        logits = jnp.einsum("bsd,vd->bsv", x, head,
+                            preferred_element_type=jnp.float32)
+        return cm.softcap(logits, self.cfg.logit_softcap)
+
+    def _memory(self, params, extras):
+        """Encoder states / projected vision tokens, or None."""
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            feats = extras["audio_features"]          # (B, F, d_input) stub
+            enc = params["encoder"]
+            x = feats @ enc["audio_proj"]
+            x = x + cm.sinusoidal_positions(
+                x.shape[1], cfg.d_model, x.dtype)[None]
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+            spec = _enc_layer_spec()
+
+            def body(h, lp):
+                h, _, _ = pattern.apply_block(lp, cfg, spec, h, pos)
+                return h, None
+
+            x, _ = jax.lax.scan(body, x, enc["layers"])
+            return cm.apply_norm(cfg.norm, enc["enc_norm"], x, cfg.norm_eps)
+        if cfg.vision is not None:
+            return extras["vision_embeds"] @ params["vision_proj"]
+        return None
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, tokens, extras=None):
+        """Teacher-forcing forward -> (logits (B,S,V) f32, moe_aux)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+        memory = self._memory(params, extras or {})
+        x, _, aux = pattern.apply_stack(params["stack"], cfg, x, positions,
+                                        memory=memory)
+        x = cm.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps,
+                          cfg.post_norm)
+        return self._logits(params, x), aux
+
+    def prefill(self, params, tokens, extras=None, max_seq: Optional[int] = None):
+        """-> (last-token logits (B,V), decode-ready cache)."""
+        cfg = self.cfg
+        max_seq = max_seq or tokens.shape[1]
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+        memory = self._memory(params, extras or {})
+        x, cache, _ = pattern.apply_stack(params["stack"], cfg, x, positions,
+                                          memory=memory, collect=max_seq)
+        x = cm.apply_norm(cfg.norm, params["final_norm"], x[:, -1:],
+                          cfg.norm_eps, cfg.post_norm)
+        return self._logits(params, x)[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1); pos: scalar int (next position).
+        -> (logits (B,V) f32, updated cache)."""
+        cfg = self.cfg
+        x = cm.take_embedding(params["tok_embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if cfg.encoder is not None or cfg.partial_rotary == 0:
+            # sinusoidal row for absolute position `pos`
+            d = cfg.d_model
+            posf = jnp.asarray(pos, jnp.float32)
+            dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+            ang = posf / jnp.power(10_000.0, dim / d)
+            row = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[:d]
+            x = x + row.astype(x.dtype)[None, None]
+        positions = jnp.full(tokens.shape, pos, jnp.int32)
+        x, new_cache, _ = pattern.apply_stack(
+            params["stack"], cfg, x, positions, cache=cache, pos=pos)
+        x = cm.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps,
+                          cfg.post_norm)
+        return self._logits(params, x)[:, 0], new_cache
+
+    # ----------------------------------------------------------------- cache
+    def n_memory(self) -> int:
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return cfg.encoder.n_frames
+        if cfg.vision is not None:
+            return cfg.vision.n_tokens
+        return 0
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        return pattern.init_stack_cache(
+            cfg, batch, max_seq, self.n_memory(), cm.dtype_of(cfg.dtype))
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, tokens, extras=None, *, aux_weight: float = 0.01):
+        """Next-token CE (+ MoE load-balance aux)."""
+        logits, aux = self.forward(params, tokens, extras)
+        targets = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(nll)
+        return ce + aux_weight * aux, {"ce": ce, "moe_aux": aux}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

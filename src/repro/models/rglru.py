@@ -1,0 +1,117 @@
+"""RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427, "Griffin").
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``lax.associative_scan`` (log-depth — the TPU-native
+replacement for the paper's linear CUDA scan; see DESIGN §3).  Decode is a
+single fused step.  The surrounding block is Griffin's gated recurrent
+unit: two input branches (GeLU gate ⊗ [conv1d → RG-LRU]) then out-proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def init_rglru(key, cfg: ModelConfig):
+    dt = cm.dtype_of(cfg.dtype)
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    cw = cfg.rglru.conv_width
+    ks = jax.random.split(key, 8)
+    # Λ init so that a ∈ (0.9, 0.999) roughly (standard LRU init)
+    lam = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(lam) / cfg.rglru.c))  # inv softplus
+    return {
+        "rg_wx": cm.dense_init(ks[0], (d, w), dt),
+        "rg_wgate": cm.dense_init(ks[1], (d, w), dt),
+        "rg_conv_w": cm.dense_init(ks[2], (cw, w), dt),
+        "rg_conv_b": cm.zeros((w,), dt),
+        "rg_input_gate": cm.dense_init(ks[3], (w, w), dt),
+        "rg_a_gate": cm.dense_init(ks[4], (w, w), dt),
+        "rg_input_gate_b": cm.zeros((w,), jnp.float32),
+        "rg_a_gate_b": cm.zeros((w,), jnp.float32),
+        "rg_a_param": a_param,
+        "rg_wy": cm.dense_init(ks[6], (w, d), dt),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B,S,W) depthwise causal conv, kernel (CW, W).
+    state: (B, CW-1, W) trailing context for decode; returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return y, new_state
+
+
+def _gates(p, cfg, xb):
+    rg = jax.nn.sigmoid((xb @ p["rg_a_gate"].astype(jnp.float32))
+                        + p["rg_a_gate_b"])
+    ig = jax.nn.sigmoid((xb @ p["rg_input_gate"].astype(jnp.float32))
+                        + p["rg_input_gate_b"])
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["rg_a_param"]) * rg
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return a, mult * ig * xb
+
+
+def rglru_scan(p, cfg: ModelConfig, xb, h0=None):
+    """xb: (B,S,W) f32 branch input -> (y (B,S,W), h_last (B,W))."""
+    a, b = _gates(p, cfg, xb)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_block(p, cfg: ModelConfig, x, *, cache=None, collect=False):
+    """Griffin recurrent block.  cache: {'h': (B,W), 'conv': (B,CW-1,W)}."""
+    gate = jax.nn.gelu(x @ p["rg_wgate"], approximate=True)
+    u = x @ p["rg_wx"]
+    conv_state = cache["conv"] if cache is not None else None
+    raw_u = u
+    u, new_conv = _causal_conv1d(u, p["rg_conv_w"], p["rg_conv_b"], conv_state)
+    uf = u.astype(jnp.float32)
+    if cache is None:
+        y, h_last = rglru_scan(p, cfg, uf)
+        new_cache = None
+        if collect:
+            cw = p["rg_conv_w"].shape[0]
+            tail = raw_u[:, -(cw - 1):]
+            pad = (cw - 1) - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_cache = {"h": h_last, "conv": tail}
+    else:
+        a, b = _gates(p, cfg, uf)
+        h = a[:, 0] * cache["h"] + b[:, 0]
+        y, h_last = h[:, None], h
+        new_cache = {"h": h_last, "conv": new_conv}
+    y = y.astype(x.dtype) * gate
+    return y @ p["rg_wy"], new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.rglru.lru_width or cfg.d_model
+    cw = cfg.rglru.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype)}

@@ -1,0 +1,201 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): data-dependent decay linear attention.
+
+Time mix (per head, head size N):
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+    y_t[j]   = Σ_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+
+with data-dependent decay  w_t = exp(-exp(w0 + tanh(x_w @ A) @ B))  and
+DD-lerp token-shift mixing (5-way LoRA).  Train/prefill runs the recurrence
+as a ``lax.scan`` over *time chunks* with an intra-chunk parallel form
+(matching the Pallas kernel in kernels/wkv6.py); decode is one step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+MIX_KEYS = ("r", "k", "v", "g", "w")
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig):
+    dt = cm.dtype_of(cfg.dtype)
+    d = cfg.d_model
+    r = cfg.rwkv
+    n_heads = d // r.head_size
+    ks = jax.random.split(key, 16)
+    p = {
+        "wkv_wr": cm.dense_init(ks[0], (d, d), dt),
+        "wkv_wk": cm.dense_init(ks[1], (d, d), dt),
+        "wkv_wv": cm.dense_init(ks[2], (d, d), dt),
+        "wkv_wg": cm.dense_init(ks[3], (d, d), dt),
+        "wkv_wo": cm.dense_init(ks[4], (d, d), dt),
+        "mix_x": cm.zeros((d,), jnp.float32) + 0.5,
+        "mix_base": (jax.random.uniform(ks[5], (5, d), jnp.float32) * 0.2 + 0.4),
+        "mix_lora_a": cm.dense_init(ks[6], (d, 5 * r.mix_lora), jnp.float32),
+        "mix_lora_b": (jax.random.normal(ks[7], (5, r.mix_lora, d), jnp.float32) * 0.01),
+        "decay_base": jnp.log(0.3 + 0.6 * jax.random.uniform(ks[8], (d,), jnp.float32)) * -1.0,
+        "decay_lora_a": cm.dense_init(ks[9], (d, r.decay_lora), jnp.float32),
+        "decay_lora_b": (jax.random.normal(ks[10], (r.decay_lora, d), jnp.float32) * 0.01),
+        "bonus_u": (jax.random.normal(ks[11], (n_heads, r.head_size), jnp.float32) * 0.1),
+        "ln_x_scale": cm.ones((d,), jnp.float32),
+        "ln_x_bias": cm.zeros((d,), jnp.float32),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """previous-token tensor: (B,S,D) shifted right; `last` fills slot 0."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1) \
+        if last is not None else jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return prev
+
+
+def _ddlerp(p, x, prev):
+    """Finch data-dependent lerp -> dict of mixed inputs for r,k,v,g,w."""
+    xf, pf = x.astype(jnp.float32), prev.astype(jnp.float32)
+    dx = pf - xf
+    xxx = xf + dx * p["mix_x"]
+    lora = jnp.tanh(xxx @ p["mix_lora_a"])
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    adj = jnp.einsum("bsld,ldk->bslk", lora, p["mix_lora_b"])  # (B,S,5,D)
+    out = {}
+    for i, name in enumerate(MIX_KEYS):
+        mu = p["mix_base"][i] + adj[..., i, :]
+        out[name] = (xf + dx * mu).astype(x.dtype)
+    return out
+
+
+def _decay(p, xw):
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    return jnp.exp(-jnp.exp(p["decay_base"] + lora))  # (B,S,D) in (0,1)
+
+
+def wkv_recurrence(r, k, v, w, u, state):
+    """Sequential scan.  r,k,v,w: (B,S,H,N) f32; u: (H,N); state: (B,H,N,N)."""
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,N,N)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state                  # (B,S,H,N)
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunk-parallel form: O(S/C) sequential steps of dense (N,N) math.
+    Matches kernels/wkv6.py; used when S % chunk == 0."""
+    b, s, h, n = r.shape
+    c = chunk
+    nc = s // c
+    rs = r.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)  # (nc,B,H,C,N)
+    ks_ = k.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+    ws = w.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+
+    def step(st, xs):
+        rc, kc, vc, wc = xs                                  # (B,H,C,N)
+        logw = jnp.log(jnp.maximum(wc, 1e-30))
+        cw = jnp.cumsum(logw, axis=2)                        # prod w_1..t
+        wtot = jnp.exp(cw[:, :, -1])                         # (B,H,N)
+        # inter-chunk: state contribution, decayed to step t-1
+        dec_q = jnp.exp(cw - logw)                           # prod w_1..t-1
+        y_inter = jnp.einsum("bhcn,bhnm->bhcm", rc * dec_q, st)
+        # intra-chunk: pair (t, s<t) decay prod_{s+1..t-1} w; clamp the
+        # exponent at 0 — anti-causal entries are masked but would
+        # overflow (0*inf=NaN) at extreme decay
+        ratio = jnp.exp(jnp.minimum(
+            cw[:, :, :, None, :] - logw[:, :, :, None, :]
+            - cw[:, :, None, :, :], 0.0))                    # (B,H,C,C,N) t,s
+        tri = jnp.tril(jnp.ones((c, c)), -1)[None, None, :, :, None]
+        att = jnp.einsum("bhtn,bhtsn,bhsn->bhts", rc, ratio * tri, kc)
+        diag = jnp.einsum("bhtn,bhtn->bht", rc * u[None, :, None, :], kc)
+        att = att + jnp.eye(c)[None, None] * diag[..., None]
+        y_intra = jnp.einsum("bhts,bhsm->bhtm", att, vc)
+        # state update: S' = diag(wtot) S + Σ_s (prod_{s+1..C} w) k_s v_s^T
+        dec_k = jnp.exp(cw[:, :, -1:, :] - cw)               # prod w_{s+1..C}
+        st = wtot[..., None] * st + jnp.einsum(
+            "bhsn,bhsm->bhnm", kc * dec_k, vc)
+        return st, y_inter + y_intra
+
+    state, ys = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, n)
+    return y, state
+
+
+def rwkv_tmix(p, cfg: ModelConfig, x, *, cache=None, chunk: int = 0,
+              collect=False):
+    """cache: {'state': (B,H,N,N) f32, 'shift': (B,D)} for decode."""
+    b, s, d = x.shape
+    n = cfg.rwkv.head_size
+    h = d // n
+    last = cache["shift"] if cache is not None else None
+    prev = _token_shift(x, last)
+    mixed = _ddlerp(p, x, prev)
+    r = (mixed["r"] @ p["wkv_wr"]).astype(jnp.float32).reshape(b, s, h, n)
+    k = (mixed["k"] @ p["wkv_wk"]).astype(jnp.float32).reshape(b, s, h, n)
+    v = (mixed["v"] @ p["wkv_wv"]).astype(jnp.float32).reshape(b, s, h, n)
+    g = jax.nn.silu(mixed["g"] @ p["wkv_wg"])
+    w = _decay(p, mixed["w"]).reshape(b, s, h, n)
+    u = p["bonus_u"]
+    state = cache["state"] if cache is not None else \
+        jnp.zeros((b, h, n, n), jnp.float32)
+    if cache is None and chunk and s % chunk == 0 and s > chunk:
+        y, new_state = wkv_chunked(r, k, v, w, u, state, chunk)
+    else:
+        y, new_state = wkv_recurrence(r, k, v, w, u, state)
+    y = y.reshape(b, s, d)
+    # group-norm over heads (ln_x in reference impl)
+    y = y.reshape(b, s, h, n)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, s, d) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = (y.astype(x.dtype) * g) @ p["wkv_wo"]
+    new_cache = {"state": new_state, "shift": x[:, -1]} \
+        if (cache is not None or collect) else None
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv_cmix(key, cfg: ModelConfig):
+    dt = cm.dtype_of(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "cm_wk": cm.dense_init(ks[0], (d, f), dt),
+        "cm_wv": cm.dense_init(ks[1], (f, d), dt),
+        "cm_wr": cm.dense_init(ks[2], (d, d), dt),
+        "cm_mix_k": cm.zeros((d,), jnp.float32) + 0.5,
+        "cm_mix_r": cm.zeros((d,), jnp.float32) + 0.5,
+    }
+
+
+def rwkv_cmix(p, cfg: ModelConfig, x, *, cache=None, collect=False):
+    last = cache["shift"] if cache is not None else None
+    prev = _token_shift(x, last)
+    xf, pf = x.astype(jnp.float32), prev.astype(jnp.float32)
+    xk = (xf + (pf - xf) * p["cm_mix_k"]).astype(x.dtype)
+    xr = (xf + (pf - xf) * p["cm_mix_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    y = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    new_cache = {"shift": x[:, -1]} \
+        if (cache is not None or collect) else None
+    return y, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    n = cfg.rwkv.head_size
+    h = d // n
+    return {"tmix": {"state": jnp.zeros((batch, h, n, n), jnp.float32),
+                     "shift": jnp.zeros((batch, d), dtype)},
+            "cmix": {"shift": jnp.zeros((batch, d), dtype)}}

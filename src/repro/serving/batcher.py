@@ -1,0 +1,47 @@
+"""Request batching: queue requests, group by backend, emit fixed-size
+padded batches for the decode loop (continuous-batching-lite)."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict, deque
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    text: str
+    metadata: Optional[Dict[str, Any]] = None
+    max_new_tokens: int = 16
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    # filled by the router:
+    route: str = ""
+    action: str = ""
+    backend: str = ""
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Batcher:
+    def __init__(self, max_batch: int = 8):
+        self.max_batch = max_batch
+        self.queues: Dict[str, deque] = defaultdict(deque)
+
+    def submit(self, req: Request) -> None:
+        self.queues[req.backend].append(req)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def next_batch(self) -> Optional[tuple]:
+        """-> (backend, [requests]) with the fullest queue first."""
+        if not self.pending():
+            return None
+        backend = max(self.queues, key=lambda b: len(self.queues[b]))
+        q = self.queues[backend]
+        batch = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        if not self.queues[backend]:
+            del self.queues[backend]
+        return backend, batch

@@ -1,0 +1,162 @@
+"""RouterService: the end-to-end serving pipeline.
+
+    DSL text ──parse/compile──► RouterConfig ──validate──► diagnostics
+         │                                              (errors abort)
+         └──bind──► SignalEngine (embedder + centroids)
+                          │
+    requests ──embed──► signal scores ──group norm──► activations
+                          │
+                  tensorized policy eval (serving/policy.py)
+                          │
+                  Batcher ──► backend models (models/) decode loop
+
+Backends are real JAX models (reduced configs on CPU; the full configs
+are exercised by launch/dryrun.py on the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.dsl.compiler import RouterConfig, compile_text
+from repro.dsl.validate import Diagnostic, Validator, has_errors
+from repro.models.model import build_model
+from repro.serving import policy as policy_mod
+from repro.serving.batcher import Batcher, Request
+from repro.signals.embedder import HashEmbedder
+
+
+@dataclasses.dataclass
+class BackendRuntime:
+    name: str
+    arch: str
+    model: Any
+    params: Any
+    decode: Any                    # jitted decode_step
+    prefill: Any                   # jitted prefill
+    max_seq: int = 128
+
+
+class RouterService:
+    def __init__(self, dsl_text: str, *, embedder=None,
+                 load_backends: bool = True, max_batch: int = 8,
+                 use_pallas_voronoi: bool = False,
+                 validate: bool = True, run_taxonomy: bool = False):
+        from repro.signals.engine import SignalEngine
+        self.config: RouterConfig = compile_text(dsl_text)
+        self.diagnostics: List[Diagnostic] = []
+        if validate:
+            self.diagnostics = Validator(self.config).validate(
+                run_taxonomy=run_taxonomy)
+            if has_errors(self.diagnostics):
+                msgs = "\n".join(str(d) for d in self.diagnostics
+                                 if d.severity == "error")
+                raise ValueError(f"config has validation errors:\n{msgs}")
+        self.embedder = embedder or HashEmbedder()
+        self.engine = SignalEngine(self.config, self.embedder,
+                                   use_pallas=use_pallas_voronoi)
+        self.tables = policy_mod.build_tables(self.config)
+        self.batcher = Batcher(max_batch=max_batch)
+        self.backends: Dict[str, BackendRuntime] = {}
+        if load_backends:
+            self._load_backends()
+
+    # ---- backends -------------------------------------------------------------
+    def _load_backends(self):
+        for name, fields in self.config.backends.items():
+            arch = str(fields.get("arch", "internlm2-1.8b"))
+            cfg = get_config(arch, smoke=True)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(hash(name) & 0xFFFF))
+            self.backends[name] = BackendRuntime(
+                name=name, arch=arch, model=model, params=params,
+                decode=jax.jit(model.decode_step,
+                               static_argnames=()),
+                prefill=jax.jit(
+                    lambda p, t, m=model: m.prefill(p, t, max_seq=128)),
+                max_seq=int(fields.get("max_seq", 128)))
+
+    # ---- routing ---------------------------------------------------------------
+    def route(self, texts: Sequence[str],
+              metadata: Optional[Sequence[Dict[str, Any]]] = None
+              ) -> List[str]:
+        """-> winning route name per request."""
+        res = self.engine.evaluate(texts, metadata)
+        return policy_mod.route_names(self.tables, res.fired, res.confidence)
+
+    def route_actions(self, texts: Sequence[str], metadata=None) -> List[str]:
+        res = self.engine.evaluate(texts, metadata)
+        return policy_mod.route_batch(self.tables, res.fired, res.confidence)
+
+    def run_test_blocks(self) -> List[Diagnostic]:
+        """The M4 empirical half: TEST assertions via the live pipeline."""
+        return Validator(self.config).run_tests(
+            lambda q: self.route([q])[0])
+
+    # ---- serving ---------------------------------------------------------------
+    def submit(self, texts: Sequence[str], metadata=None,
+               max_new_tokens: int = 8) -> List[Request]:
+        metadata = metadata or [None] * len(texts)
+        actions = self.route_actions(texts, metadata)
+        names = self.route(texts, metadata)
+        reqs = []
+        for text, meta, action, rname in zip(texts, metadata, actions, names):
+            kind, _, target = action.partition(":")
+            req = Request(text=text, metadata=meta,
+                          max_new_tokens=max_new_tokens)
+            req.route, req.action = rname, action
+            if kind == "model" and target in self.backends:
+                req.backend = target
+            elif kind == "plugin":
+                req.backend = "__plugin__:" + target
+                req.done = True          # plugins are terminal here
+            else:
+                req.backend = "__reject__"
+                req.done = True
+            if not req.done:
+                self.batcher.submit(req)
+            reqs.append(req)
+        return reqs
+
+    def step(self) -> int:
+        """Serve one batch from the fullest backend queue.  -> #completed."""
+        nb = self.batcher.next_batch()
+        if nb is None:
+            return 0
+        backend, batch = nb
+        rt = self.backends[backend]
+        cfg = rt.model.cfg
+        # tokenize: byte-level prompt, pad to common length
+        toks = [list(t.encode("utf-8"))[: rt.max_seq // 2] for t in
+                (r.text for r in batch)]
+        plen = max(max(len(t) for t in toks), 1)
+        prompt = np.zeros((len(batch), plen), np.int32)
+        for i, t in enumerate(toks):
+            prompt[i, plen - len(t):] = [b % cfg.vocab_size for b in t]
+        logits, cache = rt.model.prefill(rt.params, jnp.asarray(prompt),
+                                         max_seq=rt.max_seq)
+        pos = plen
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        steps = max(r.max_new_tokens for r in batch)
+        for _ in range(steps):
+            for i, r in enumerate(batch):
+                if len(r.output_tokens) < r.max_new_tokens:
+                    r.output_tokens.append(int(tok[i, 0]))
+            logits, cache = rt.decode(rt.params, cache, tok, pos)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+        for r in batch:
+            r.done = True
+        return len(batch)
+
+    def drain(self) -> int:
+        n = 0
+        while self.batcher.pending():
+            n += self.step()
+        return n

@@ -1,0 +1,66 @@
+"""Crisp signals: deterministic 0/1 predicates (keyword, token_count,
+authz, regex, header).  These are the SAT-decidable layer of Theorem 1."""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence
+
+
+def keyword_score(text: str, fields: Dict[str, Any]) -> float:
+    kws = [str(k).lower() for k in fields.get("keywords", [])]
+    tl = text.lower()
+    return 1.0 if any(k in tl for k in kws) else 0.0
+
+
+def regex_score(text: str, fields: Dict[str, Any]) -> float:
+    pat = fields.get("pattern", "")
+    try:
+        return 1.0 if pat and re.search(pat, text) else 0.0
+    except re.error:
+        return 0.0
+
+
+def token_count_score(text: str, fields: Dict[str, Any]) -> float:
+    n = len(text.split())
+    lo = int(fields.get("min_tokens", 0))
+    hi = int(fields.get("max_tokens", 1 << 30))
+    return 1.0 if lo <= n <= hi else 0.0
+
+
+def authz_score(metadata: Optional[Dict[str, Any]],
+                fields: Dict[str, Any]) -> float:
+    """subjects: [{kind: Group, name: staff}, ...]; metadata carries the
+    request's groups/users."""
+    if not metadata:
+        return 0.0
+    subjects = fields.get("subjects", [])
+    groups = set(metadata.get("groups", ()))
+    user = metadata.get("user")
+    for s in subjects:
+        if not isinstance(s, dict):
+            continue
+        if s.get("kind") == "Group" and s.get("name") in groups:
+            return 1.0
+        if s.get("kind") == "User" and s.get("name") == user:
+            return 1.0
+    return 0.0
+
+
+def header_score(metadata: Optional[Dict[str, Any]],
+                 fields: Dict[str, Any]) -> float:
+    if not metadata:
+        return 0.0
+    want = fields.get("equals", {})
+    headers = metadata.get("headers", {})
+    return 1.0 if all(headers.get(k) == v for k, v in want.items()) else 0.0
+
+
+CRISP_EVALUATORS = {
+    "keyword": lambda text, meta, f: keyword_score(text, f),
+    "regex": lambda text, meta, f: regex_score(text, f),
+    "token_count": lambda text, meta, f: token_count_score(text, f),
+    "authz": lambda text, meta, f: authz_score(meta, f),
+    "header": lambda text, meta, f: header_score(meta, f),
+    "tenant": lambda text, meta, f: 1.0 if meta and meta.get("tenant") ==
+    f.get("name") else 0.0,
+}

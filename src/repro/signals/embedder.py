@@ -1,0 +1,116 @@
+"""Text embedders producing unit vectors on S^{d-1}.
+
+Two backends, one interface:
+
+* ``HashEmbedder`` — fastText-style hashed character n-grams projected
+  through a fixed random matrix, mean-pooled, L2-normalized.  Deterministic
+  and lexically meaningful without any training — the default for the
+  validator's Monte-Carlo passes, TEST blocks, and examples.
+* ``TransformerEmbedder`` — a tiny JAX transformer encoder (reuses
+  models/pattern.py blocks) over byte tokens, mean-pooled + normalized.
+  Exercises the same model substrate the backends use; can be trained
+  with train/ if desired.
+
+Both are pure-JAX after construction: ``embed(token_ids | texts)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, GELU_MLP, LayerSpec, ModelConfig
+from repro.models import common as cm
+from repro.models import pattern
+
+
+def _ngrams(text: str, lo: int = 3, hi: int = 5):
+    t = f"<{text.lower()}>"
+    for n in range(lo, hi + 1):
+        for i in range(max(0, len(t) - n + 1)):
+            yield t[i: i + n]
+    for w in text.lower().split():
+        yield f"w:{w}"
+
+
+class HashEmbedder:
+    def __init__(self, dim: int = 256, n_buckets: int = 1 << 15,
+                 seed: int = 0):
+        self.dim = dim
+        self.n_buckets = n_buckets
+        key = jax.random.PRNGKey(seed)
+        self.table = np.asarray(
+            jax.random.normal(key, (n_buckets, dim), jnp.float32)
+        ) / np.sqrt(dim)
+
+    def _bucket(self, g: str) -> int:
+        h = 2166136261
+        for ch in g.encode("utf-8"):
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        return h % self.n_buckets
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            ids = [self._bucket(g) for g in _ngrams(t)]
+            if ids:
+                out[i] = self.table[np.asarray(ids)].mean(axis=0)
+        norm = np.linalg.norm(out, axis=1, keepdims=True)
+        return out / np.maximum(norm, 1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Transformer embedder (byte-level)
+# ---------------------------------------------------------------------------
+
+def _encoder_cfg(dim: int) -> ModelConfig:
+    return ModelConfig(
+        name="query-encoder", family="dense",
+        n_layers=2, d_model=dim, n_heads=4, n_kv_heads=4, head_dim=dim // 4,
+        d_ff=dim * 4, vocab_size=256,
+        unit=(LayerSpec(mixer=ATTN, ffn=GELU_MLP, causal=False),),
+        norm="layernorm", norm_eps=1e-5, dtype="float32")
+
+
+class TransformerEmbedder:
+    def __init__(self, dim: int = 128, max_len: int = 64, seed: int = 0):
+        self.cfg = _encoder_cfg(dim)
+        self.max_len = max_len
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        dt = jnp.float32
+        self.params = {
+            "tok_embed": cm.embed_init(k1, (256, dim), dt),
+            "stack": pattern.init_stack(k2, self.cfg),
+            "final_norm": cm.init_norm("layernorm", dim, dt),
+        }
+        self._fwd = jax.jit(self._forward)
+
+    def _forward(self, params, tokens, mask):
+        x = cm.take_embedding(params["tok_embed"], tokens)
+        x = x + cm.sinusoidal_positions(tokens.shape[1], x.shape[-1],
+                                        x.dtype)[None]
+        pos = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+        x, _, _ = pattern.apply_stack(params["stack"], self.cfg, x, pos)
+        x = cm.apply_norm("layernorm", params["final_norm"], x, 1e-5)
+        m = mask[..., None].astype(x.dtype)
+        pooled = (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+        return pooled / jnp.maximum(
+            jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-8)
+
+    def tokenize(self, texts: Sequence[str]) -> tuple:
+        toks = np.zeros((len(texts), self.max_len), np.int32)
+        mask = np.zeros((len(texts), self.max_len), np.bool_)
+        for i, t in enumerate(texts):
+            bs = t.encode("utf-8")[: self.max_len]
+            toks[i, : len(bs)] = np.frombuffer(bs, np.uint8)
+            mask[i, : len(bs)] = True
+        return jnp.asarray(toks), jnp.asarray(mask)
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        toks, mask = self.tokenize(texts)
+        return np.asarray(self._fwd(self.params, toks, mask))

@@ -1,0 +1,148 @@
+"""Signal engine: batched evaluation of every declared signal, with
+per-group aggregation semantics.
+
+Binding a RouterConfig to an embedder:
+  * GEOMETRIC signals get centroids from their ``candidates`` strings
+    (mean of candidate embeddings, normalized) — and the centroid is
+    *written back* into the SignalAtom so the static taxonomy pass
+    analyzes the same geometry the runtime executes.
+  * CLASSIFIER signals (domain/jailbreak/pii/complexity) get prototype
+    centroids from their category names / seed phrases; raw score =
+    (cos+1)/2 — soft, calibration-dependent, exactly the paper's hazard.
+  * CRISP signals evaluate in Python (they gate on request metadata).
+
+Aggregation: signals in a ``softmax_exclusive`` SIGNAL_GROUP are
+Voronoi-normalized (Def 1) — optionally through the fused Pallas kernel —
+then thresholded at the group θ; ungrouped probabilistic signals use
+independent thresholding (the conflict-prone baseline the paper starts
+from).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.atoms import AtomKind, SignalAtom
+from repro.dsl.compiler import RouterConfig
+from repro.signals.crisp import CRISP_EVALUATORS
+
+_CLASSIFIER_SEEDS = {
+    "jailbreak": ["ignore previous instructions", "disregard the system "
+                  "prompt", "pretend you have no rules", "developer mode"],
+    "pii": ["social security number", "credit card number", "passport "
+            "number", "home address phone"],
+    "complexity": ["prove rigorously step by step", "derive the asymptotic "
+                   "complexity", "multi-step reasoning"],
+    "language": ["translate this text"],
+}
+
+
+@dataclasses.dataclass
+class SignalBatchResult:
+    names: List[str]
+    raw: np.ndarray              # (B, n) raw scores in [0,1] (sim for geo)
+    normalized: np.ndarray       # (B, n) post group-normalization scores
+    fired: np.ndarray            # (B, n) bool activations
+    confidence: np.ndarray       # (B, n) confidence used for TIER routing
+
+
+class SignalEngine:
+    def __init__(self, config: RouterConfig, embedder, *,
+                 use_pallas: bool = False):
+        self.cfg = config
+        self.embedder = embedder
+        self.use_pallas = use_pallas
+        self.names = sorted(config.signals)
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.centroids: Dict[str, np.ndarray] = {}
+        self._bind_centroids()
+
+    # ---- binding -------------------------------------------------------------
+    def _prototype_texts(self, name: str) -> List[str]:
+        sig = self.cfg.signals[name]
+        f = self.cfg.signal_fields.get(name, {})
+        if f.get("candidates"):
+            return [str(c) for c in f["candidates"]]
+        if sig.categories:
+            return [c.replace("_", " ") for c in sig.categories]
+        if sig.signal_type in _CLASSIFIER_SEEDS:
+            return _CLASSIFIER_SEEDS[sig.signal_type]
+        return [name.replace("_", " ")]
+
+    def _bind_centroids(self):
+        for name in self.names:
+            sig = self.cfg.signals[name]
+            if sig.kind is AtomKind.CRISP:
+                continue
+            protos = self.embedder.embed(self._prototype_texts(name))
+            c = protos.mean(axis=0)
+            c = c / max(np.linalg.norm(c), 1e-8)
+            self.centroids[name] = c.astype(np.float32)
+            if sig.kind is AtomKind.GEOMETRIC:
+                # write the live geometry back into the static atom so the
+                # taxonomy pass and the runtime agree (paper fig. 3)
+                self.cfg.signals[name] = dataclasses.replace(
+                    sig, centroid=tuple(float(v) for v in c))
+
+    # ---- evaluation ------------------------------------------------------------
+    def evaluate(self, texts: Sequence[str],
+                 metadata: Optional[Sequence[Dict[str, Any]]] = None
+                 ) -> SignalBatchResult:
+        b = len(texts)
+        n = len(self.names)
+        raw = np.zeros((b, n), np.float32)
+        emb = self.embedder.embed(texts)          # (B, d)
+        meta = metadata or [None] * b
+        for j, name in enumerate(self.names):
+            sig = self.cfg.signals[name]
+            f = self.cfg.signal_fields.get(name, {})
+            if sig.kind is AtomKind.CRISP:
+                fn = CRISP_EVALUATORS.get(sig.signal_type)
+                for i, t in enumerate(texts):
+                    raw[:, j][i] = fn(t, meta[i], f) if fn else 0.0
+            else:
+                sims = emb @ self.centroids[name]
+                if sig.kind is AtomKind.GEOMETRIC:
+                    raw[:, j] = sims              # cosine, thresholded as-is
+                else:                             # classifier: calibrated soft
+                    raw[:, j] = (sims + 1.0) / 2.0
+        normalized, fired = self._aggregate(emb, raw)
+        conf = np.where(fired, normalized, 0.0)
+        return SignalBatchResult(list(self.names), raw, normalized,
+                                 fired, conf)
+
+    def _aggregate(self, emb: np.ndarray, raw: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        normalized = raw.copy()
+        thresholds = np.array(
+            [self.cfg.signals[n].threshold for n in self.names], np.float32)
+        fired = raw >= thresholds[None, :]
+        for gname, group in self.cfg.groups.items():
+            idx = [self.index[m] for m in group.names if m in self.index]
+            if not idx:
+                continue
+            members = [m for m in group.names if m in self.index]
+            C = np.stack([self.centroids[m] for m in members])
+            sims = emb @ C.T                       # raw cosine for the group
+            scores = self._voronoi(sims, group.temperature)
+            for k, j in enumerate(idx):
+                normalized[:, j] = scores[:, k]
+                fired[:, j] = scores[:, k] > group.threshold
+            if group.default is not None and group.default in self.index:
+                jd = self.index[group.default]
+                none_fired = ~np.any(
+                    np.stack([fired[:, j] for j in idx], axis=1), axis=1)
+                fired[:, jd] |= none_fired
+        return normalized, fired
+
+    def _voronoi(self, sims: np.ndarray, temperature: float) -> np.ndarray:
+        if self.use_pallas:
+            from repro.kernels import ops
+            return np.asarray(ops.voronoi_normalize_sims(
+                sims, temperature, interpret=True))
+        z = sims / temperature
+        z = z - z.max(axis=-1, keepdims=True)
+        e = np.exp(z)
+        return e / e.sum(axis=-1, keepdims=True)

@@ -1,0 +1,71 @@
+"""Checkpointing: pytree <-> .npz + JSON manifest (no orbax offline).
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json
+Leaves are addressed by '/'-joined tree paths; restore rebuilds the exact
+structure against a template (shape/dtype-checked)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def save(ckpt_dir, step: int, tree: Any, extra: Optional[Dict] = None):
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    arrays: Dict[str, np.ndarray] = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        arrays[_path_str(path)] = np.asarray(leaf)
+    np.savez(d / "arrays.npz", **arrays)
+    manifest = {"step": step, "n_leaves": len(arrays),
+                "extra": extra or {},
+                "leaves": {k: {"shape": list(v.shape),
+                               "dtype": str(v.dtype)}
+                           for k, v in arrays.items()}}
+    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return str(d)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for p in d.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)", p.name))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, template: Any) -> Any:
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    with np.load(d / "arrays.npz") as data:
+        arrays = {k: data[k] for k in data.files}
+
+    def rebuild(path, leaf):
+        key = _path_str(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        return jax.numpy.asarray(arr, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(rebuild, template)

@@ -1,0 +1,54 @@
+"""Synthetic data pipeline: deterministic, seekable token streams.
+
+A Markov-chain-ish synthetic corpus with enough structure that loss
+visibly drops within ~100 steps on CPU (pure-noise tokens would not).
+Sharding-aware: each (data, pod) shard reads its own slice of the stream
+by index arithmetic — no host coordination needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 1234
+    n_states: int = 64           # Markov states -> learnable structure
+
+
+class SyntheticStream:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v, s = cfg.vocab_size, cfg.n_states
+        # sparse-ish row-stochastic transition over states
+        trans = rng.dirichlet(np.full(s, 0.2), size=s)
+        self.trans_cdf = np.cumsum(trans, axis=1)
+        # each state emits from a small bag of tokens
+        self.emit = rng.integers(0, v, size=(s, 8))
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        out = np.empty((cfg.batch_size, cfg.seq_len), np.int32)
+        for i in range(cfg.batch_size):
+            rng = np.random.default_rng(
+                (cfg.seed, step, i))           # seekable: O(1) to any batch
+            state = int(rng.integers(0, self.emit.shape[0]))
+            u = rng.random(cfg.seq_len)
+            pick = rng.integers(0, 8, cfg.seq_len)
+            for t in range(cfg.seq_len):
+                out[i, t] = self.emit[state, pick[t]]
+                state = int(np.searchsorted(self.trans_cdf[state], u[t]))
+        return {"tokens": out}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# src/ onto the path so `PYTHONPATH=src pytest tests/` and bare pytest both work
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,106 @@
+"""Assigned-architecture configs: exact spec values + pattern algebra."""
+import pytest
+
+from repro.configs import archs
+from repro.configs.base import INPUT_SHAPES, smoke_variant
+from repro.configs.registry import get_config, input_specs, list_archs
+
+SPEC = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, None, 102400),
+    "rwkv6-1.6b": (24, 2048, None, None, 7168, 65536),
+    "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+}
+
+
+def test_all_ten_archs_present():
+    assert len(list_archs()) == 10
+    assert set(list_archs()) == set(SPEC)
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_exact_spec(arch):
+    cfg = get_config(arch)
+    layers, d, h, kv, ff, vocab = SPEC[arch]
+    assert cfg.n_layers == layers
+    assert cfg.d_model == d
+    if h is not None and cfg.family != "ssm":
+        assert cfg.n_heads == h
+        assert cfg.n_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == vocab
+    assert cfg.source  # pool citation present
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_pattern_covers_all_layers(arch):
+    cfg = get_config(arch)
+    prefix, n_units, suffix = cfg.pattern_decomposition()
+    assert len(prefix) + n_units * len(cfg.unit) + len(suffix) == cfg.n_layers
+    assert len(cfg.layer_specs()) == cfg.n_layers
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.moe.n_routed == 64 and ds.moe.top_k == 6 and ds.moe.n_shared == 2
+    assert ds.mla.kv_lora_rank == 512
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.moe.n_routed == 16 and l4.moe.top_k == 1
+
+
+def test_param_counts_plausible():
+    # analytic counts should land near the nameplate sizes
+    approx = {
+        "deepseek-7b": 7e9, "gemma3-27b": 27e9, "rwkv6-1.6b": 1.6e9,
+        "stablelm-1.6b": 1.6e9, "internlm2-1.8b": 1.8e9,
+        "recurrentgemma-9b": 9e9, "llama-3.2-vision-90b": 90e9,
+        "deepseek-v2-lite-16b": 16e9, "llama4-scout-17b-a16e": 109e9,
+        "whisper-large-v3": 1.5e9,
+    }
+    for arch, target in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * target < n < 1.7 * target, (arch, n, target)
+
+
+def test_active_params_moe():
+    cfg = get_config("llama4-scout-17b-a16e")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_smoke_variant_bounds(arch):
+    cfg = smoke_variant(get_config(arch))
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_routed <= 4
+
+
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_input_specs_shapes(shape):
+    cfg = get_config("whisper-large-v3")
+    sh = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    if sh.kind == "decode":
+        assert specs["tokens"].shape == (sh.global_batch, 1)
+    else:
+        assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+    assert specs["extras"]["audio_features"].shape == (sh.global_batch, 1500, 1280)
+
+
+def test_assigned_shape_table():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,201 @@
+"""Property-based tests (hypothesis) for the ProbPol core invariants."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry, sat, voronoi
+from repro.core.conditions import And, Atom, CNFBuilder, Cond, Not, Or, to_dnf_atoms
+
+# ---------------------------------------------------------------------------
+# Condition / SAT properties
+# ---------------------------------------------------------------------------
+
+ATOM_NAMES = ["a", "b", "c", "d", "e"]
+
+
+def conditions(depth=3):
+    leaf = st.sampled_from(ATOM_NAMES).map(Atom)
+    return st.recursive(
+        leaf,
+        lambda ch: st.one_of(
+            ch.map(Not),
+            st.lists(ch, min_size=1, max_size=3).map(
+                lambda cs: And(tuple(cs))),
+            st.lists(ch, min_size=1, max_size=3).map(
+                lambda cs: Or(tuple(cs)))),
+        max_leaves=8)
+
+
+@given(conditions())
+@settings(max_examples=150, deadline=None)
+def test_sat_witness_satisfies_condition(cond):
+    b = CNFBuilder()
+    b.add([b.tseitin(cond)])
+    model = sat.solve(b.clauses, b.n_vars())
+    if model is None:
+        # UNSAT: brute force over all assignments must agree
+        atoms = sorted(cond.atoms())
+        for bits in range(2 ** len(atoms)):
+            asg = {a: bool(bits >> i & 1) for i, a in enumerate(atoms)}
+            assert not cond.evaluate(asg)
+    else:
+        asg = {name: model.get(var, False)
+               for name, var in b.var_of.items()}
+        assert cond.evaluate(asg)
+
+
+@given(conditions(), conditions())
+@settings(max_examples=80, deadline=None)
+def test_implication_brute_force_agreement(c1, c2):
+    atoms = sorted(set(c1.atoms()) | set(c2.atoms()))
+    brute = all(
+        (not c1.evaluate({a: bool(b >> i & 1)
+                          for i, a in enumerate(atoms)}))
+        or c2.evaluate({a: bool(b >> i & 1) for i, a in enumerate(atoms)})
+        for b in range(2 ** len(atoms)))
+    assert sat.implies(c1, c2) == brute
+
+
+@given(conditions())
+@settings(max_examples=60, deadline=None)
+def test_dnf_equivalent_to_condition(cond):
+    atoms = sorted(cond.atoms())
+    terms = to_dnf_atoms(cond)
+    for bits in range(2 ** len(atoms)):
+        asg = {a: bool(bits >> i & 1) for i, a in enumerate(atoms)}
+        dnf_val = any(all(asg.get(p, False) for p in pos)
+                      and not any(asg.get(n, False) for n in neg)
+                      for pos, neg in terms)
+        assert dnf_val == cond.evaluate(asg)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: Voronoi at-most-one property
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 8), st.floats(0.01, 2.0), st.integers(0, 10_000))
+@settings(max_examples=120, deadline=None)
+def test_thm2_corrected_at_most_one_fires(k, tau, seed):
+    """The CORRECT finite-τ guarantee: for θ > 1/2, at most one
+    normalized score exceeds θ — any k, τ, centroids, query."""
+    rng = np.random.default_rng(seed)
+    d = 16
+    x = rng.normal(size=(32, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    c = rng.normal(size=(k, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    scores = np.asarray(voronoi.voronoi_scores(
+        jnp.asarray(x), jnp.asarray(c), tau))
+    fired = scores > 0.5 + 1e-6
+    assert fired.sum(axis=1).max() <= 1
+    np.testing.assert_allclose(scores.sum(axis=1), 1.0, atol=1e-5)
+
+
+@given(st.floats(0.01, 2.0), st.integers(0, 10_000))
+@settings(max_examples=80, deadline=None)
+def test_thm2_paper_statement_holds_for_k2(tau, seed):
+    """The paper's θ > 1/k bound IS correct for k = 2 (1/k = 1/2)."""
+    rng = np.random.default_rng(seed)
+    d = 16
+    x = rng.normal(size=(32, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    c = rng.normal(size=(2, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    scores = np.asarray(voronoi.voronoi_scores(
+        jnp.asarray(x), jnp.asarray(c), tau))
+    assert (scores > 0.5 + 1e-6).sum(axis=1).max() <= 1
+
+
+def test_thm2_paper_statement_refuted_for_k3():
+    """Soundness finding (EXPERIMENTS.md §Thm2): Theorem 2's claim
+    "at most one score can exceed 1/k" is FALSE for k ≥ 3 — constructive
+    counterexample with two scores > 1/3 at τ = 1."""
+    # pick sims so softmax(sims) ≈ (0.4, 0.4, 0.2)
+    target = np.log(np.asarray([0.4, 0.4, 0.2]))
+    scores = np.asarray(voronoi.normalize_scores(jnp.asarray(target), 1.0))
+    theta = 1.0 / 3 + 1e-3
+    assert (scores > theta).sum() == 2        # two members fire
+    np.testing.assert_allclose(scores.sum(), 1.0, atol=1e-6)
+    assert voronoi.paper_thm2_guarantee(3, theta)          # paper says safe
+    assert not voronoi.at_most_one_guarantee(3, theta)     # it is not
+
+
+@given(st.integers(2, 6), st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_thm2_tau_to_zero_argmax(k, seed):
+    """As τ→0 the winner's score → 1 (hard Voronoi partition)."""
+    rng = np.random.default_rng(seed)
+    d = 8
+    x = rng.normal(size=(8, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    c = rng.normal(size=(k, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    sims = x @ c.T
+    # ensure a unique argmax with a safe margin for τ=1e-3
+    if np.sort(sims, axis=1)[:, -1].min() - \
+       np.sort(sims, axis=1)[:, -2].max() < 0.05:
+        return
+    scores = np.asarray(voronoi.voronoi_scores(
+        jnp.asarray(x), jnp.asarray(c), 1e-3))
+    assert (scores.max(axis=1) > 0.999).all()
+    assert (scores.argmax(axis=1) == sims.argmax(axis=1)).all()
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 case 2: cap intersection decision procedure
+# ---------------------------------------------------------------------------
+
+@given(st.floats(5, 85), st.floats(5, 85), st.floats(1, 179),
+       st.integers(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_cap_intersection_vs_sampling(r1_deg, r2_deg, sep_deg, seed):
+    d = 8
+    r1, r2, sep = map(math.radians, (r1_deg, r2_deg, sep_deg))
+    c1 = np.zeros(d)
+    c1[0] = 1.0
+    c2 = np.zeros(d)
+    c2[0], c2[1] = math.cos(sep), math.sin(sep)
+    a = geometry.SphericalCap(c1, math.cos(r1))
+    b = geometry.SphericalCap(c2, math.cos(r2))
+    pred = geometry.caps_intersect(a, b)
+    margin = geometry.cap_separation_margin(a, b)
+    if abs(margin) < math.radians(3):
+        return  # skip near-boundary (sampling can't resolve)
+    if pred:
+        # a point on the geodesic between centroids inside both caps exists
+        t = r1 / (r1 + r2)
+        ang = t * sep
+        x = math.cos(ang) * c1 + math.sin(ang) * (
+            (c2 - math.cos(sep) * c1) / math.sin(sep))
+        assert x @ c1 >= math.cos(r1) - 1e-9
+        assert x @ c2 >= math.cos(r2) - 1e-9
+    else:
+        # Monte-Carlo: no sampled point in both caps
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(5000, d))
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+        both = (x @ c1 >= math.cos(r1)) & (x @ c2 >= math.cos(r2))
+        assert not both.any()
+
+
+def test_cap_fraction_against_montecarlo():
+    rng = np.random.default_rng(0)
+    d = 6
+    for r_deg in (20, 45, 80, 110):
+        r = math.radians(r_deg)
+        frac = geometry.cap_fraction(r, d)
+        x = rng.normal(size=(200_000, d))
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+        mc = float((x[:, 0] >= math.cos(r)).mean())
+        assert abs(frac - mc) < 5e-3, (r_deg, frac, mc)
+
+
+def test_required_temperature_helper():
+    tau = voronoi.required_temperature(margin=0.1, k=4, threshold=0.5)
+    # with that τ, a 0.1-margin winner clears θ
+    sims = jnp.asarray([[0.8, 0.7, 0.2, 0.1]])
+    s = np.asarray(voronoi.normalize_scores(sims, tau))
+    assert s[0, 0] > 0.5

@@ -1,0 +1,167 @@
+"""§6 conflict-elimination-by-construction: FDD trees, the ⊕ algebra, and
+the coherent head."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fdd
+from repro.core.algebra import DisjointnessError, PolicyAlgebra
+from repro.core.atoms import SignalAtom
+from repro.core.coherent import (Hierarchy, coherence_violations,
+                                 coherent_scores, init_coherent_head)
+from repro.core.conditions import And, Atom, Not
+from repro.core.taxonomy import Rule
+
+
+def _geo(name, deg, radius_deg, d=16):
+    c = np.zeros(d)
+    th = math.radians(deg)
+    c[0], c[1] = math.cos(th), math.sin(th)
+    return SignalAtom(name, "embedding", math.cos(math.radians(radius_deg)),
+                      tuple(c.tolist()))
+
+
+SIGNALS = {
+    "jb": SignalAtom("jb", "keyword", 0.5),
+    "math": _geo("math", 0, 40),
+    "science": _geo("science", 25, 40),
+    "far": _geo("far", 170, 10),
+}
+
+
+# ---------------------------------------------------------------------------
+# FDD
+# ---------------------------------------------------------------------------
+
+def _tree(branches):
+    return fdd.DecisionTree("t", tuple(branches))
+
+
+def test_missing_else_is_error():
+    t = _tree([fdd.Branch(Atom("jb"), "m1")])
+    with pytest.raises(fdd.FDDError, match="ELSE"):
+        fdd.validate_tree(t)
+
+
+def test_unreachable_branch_is_error():
+    t = _tree([
+        fdd.Branch(Atom("jb"), "m1"),
+        fdd.Branch(And((Atom("jb"), Atom("math"))), "m2"),  # subsumed
+        fdd.Branch(None, "default"),
+    ])
+    with pytest.raises(fdd.FDDError, match="unreachable"):
+        fdd.validate_tree(t)
+
+
+def test_group_exclusivity_makes_branch_unreachable():
+    """The paper's physics-overlap branch is unreachable once the group is
+    softmax_exclusive — validated by SAT under at-most-one constraints."""
+    t = _tree([
+        fdd.Branch(And((Atom("math"), Atom("science"))), "physics"),
+        fdd.Branch(Atom("math"), "m"),
+        fdd.Branch(None, "default"),
+    ])
+    fdd.validate_tree(t)  # fine without groups
+    with pytest.raises(fdd.FDDError, match="unreachable"):
+        fdd.validate_tree(t, exclusive_groups=[("math", "science")])
+
+
+def test_path_conditions_are_pairwise_disjoint():
+    t = _tree([
+        fdd.Branch(Atom("jb"), "m1"),
+        fdd.Branch(And((Atom("math"), Atom("science"))), "physics"),
+        fdd.Branch(Atom("math"), "m2"),
+        fdd.Branch(Atom("science"), "m3"),
+        fdd.Branch(None, "default"),
+    ])
+    fdd.validate_tree(t)
+    rules = fdd.to_rules(t)
+    # brute-force: no assignment satisfies two different path conditions
+    atoms = sorted({a for r in rules for a in r.condition.atoms()})
+    for bits in range(2 ** len(atoms)):
+        asg = {a: bool(bits >> i & 1) for i, a in enumerate(atoms)}
+        hits = [r.name for r in rules if r.condition.evaluate(asg)]
+        assert len(hits) <= 1 or (len(hits) == 1)
+        assert len(hits) <= 1
+
+
+def test_evaluate_first_match_and_normalization():
+    rules = [Rule("a", Atom("jb"), "reject", 300),
+             Rule("b", Atom("math"), "math", 200),
+             Rule("c", Atom("science"), "sci", 100)]
+    tree = fdd.normalize_rules(rules)
+    assert tree.branches[-1].guard is None  # catch-all appended
+    act = fdd.evaluate(tree, {"jb": True, "math": True})
+    assert act == "reject"
+    act = fdd.evaluate(tree, {"math": True, "science": True})
+    assert act == "math"
+    act = fdd.evaluate(tree, {})
+    assert act == "__default_reject__"
+
+
+# ---------------------------------------------------------------------------
+# ⊕ algebra
+# ---------------------------------------------------------------------------
+
+def test_xunion_rejects_overlapping_embeddings():
+    alg = PolicyAlgebra(SIGNALS)
+    p1 = alg.atomic(Atom("math"), "qwen-math")
+    p2 = alg.atomic(Atom("science"), "qwen-science")
+    with pytest.raises(DisjointnessError, match="intersecting"):
+        alg.xunion(p1, p2)
+
+
+def test_xunion_accepts_disjoint_caps():
+    alg = PolicyAlgebra(SIGNALS)
+    p1 = alg.atomic(Atom("math"), "qwen-math")
+    p2 = alg.atomic(Atom("far"), "qwen-far")
+    p = alg.xunion(p1, p2)
+    assert len(p.stages[0]) == 2
+
+
+def test_xunion_accepts_grouped_members():
+    alg = PolicyAlgebra(SIGNALS, exclusive_groups=[("math", "science")])
+    p = alg.xunion(alg.atomic(Atom("math"), "m"),
+                   alg.atomic(Atom("science"), "s"))
+    assert len(p.stages[0]) == 2
+
+
+def test_xunion_crisp_certificate():
+    alg = PolicyAlgebra(SIGNALS)
+    p = alg.xunion(alg.atomic(Atom("jb"), "reject"),
+                   alg.atomic(Not(Atom("jb")), "allow"))
+    assert len(p.stages[0]) == 2
+
+
+def test_seq_composition_tiers():
+    alg = PolicyAlgebra(SIGNALS, exclusive_groups=[("math", "science")])
+    sec = alg.atomic(Atom("jb"), "reject", "security")
+    dom = alg.xunion(alg.atomic(Atom("math"), "m", "math"),
+                     alg.atomic(Atom("science"), "s", "sci"))
+    full = alg.seq(sec, dom)
+    rules = alg.to_rules(full)
+    sec_rule = next(r for r in rules if r.name == "security")
+    dom_rules = [r for r in rules if r.name in ("math", "sci")]
+    assert all(sec_rule.tier > r.tier for r in dom_rules)
+
+
+# ---------------------------------------------------------------------------
+# Coherent head
+# ---------------------------------------------------------------------------
+
+def test_coherent_head_zero_violations_and_exclusive_leaves():
+    hier = Hierarchy(parents=("STEM", "humanities"),
+                     children=(("math", "physics", "chemistry"),
+                               ("history", "law")))
+    params = init_coherent_head(jax.random.PRNGKey(0), 32, hier)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    scores = coherent_scores(params, hier, x)
+    assert int(coherence_violations(scores, hier)) == 0
+    # within-parent leaves sum to 1 => at-most-one fires above 1/2 per
+    # family (the corrected Thm-2 bound; 1/k is insufficient for k ≥ 3)
+    s = np.asarray(scores["leaf"][:, :3])
+    np.testing.assert_allclose(s.sum(axis=1), 1.0, atol=1e-5)
+    assert ((s > 0.5).sum(axis=1) <= 1).all()

@@ -1,0 +1,49 @@
+"""Fuzzing the DSL front-end: arbitrary input must either parse or raise
+a *diagnosable* error (LexError/ParseError/CompileError with a message) —
+never crash with an internal exception.  Production-language hygiene."""
+import string
+
+from hypothesis import given, settings, strategies as st
+
+from repro.dsl.compiler import CompileError, compile_text
+from repro.dsl.lexer import LexError
+from repro.dsl.parser import ParseError
+
+DIAGNOSABLE = (LexError, ParseError, CompileError, RecursionError)
+
+
+@given(st.text(max_size=300))
+@settings(max_examples=300, deadline=None)
+def test_arbitrary_text_never_crashes_internally(text):
+    try:
+        compile_text(text)
+    except DIAGNOSABLE as e:
+        assert str(e)
+    except ValueError as e:       # numeric field coercions
+        assert str(e)
+
+
+@given(st.text(alphabet=string.printable, max_size=200))
+@settings(max_examples=200, deadline=None)
+def test_printable_fuzz(text):
+    try:
+        compile_text("SIGNAL domain d {}\n" + text)
+    except DIAGNOSABLE as e:
+        assert str(e)
+    except ValueError:
+        pass
+
+
+@given(st.lists(st.sampled_from(
+    ["SIGNAL", "ROUTE", "{", "}", "(", ")", "WHEN", "MODEL", "PRIORITY",
+     '"x"', "domain", "123", ":", ",", "AND", "NOT", "->", "TEST",
+     "SIGNAL_GROUP", "[", "]"]), max_size=40).map(" ".join))
+@settings(max_examples=300, deadline=None)
+def test_token_soup_fuzz(text):
+    """Valid tokens in invalid orders — the parser must stay diagnosable."""
+    try:
+        compile_text(text)
+    except DIAGNOSABLE as e:
+        assert str(e)
+    except ValueError:
+        pass

@@ -1,0 +1,73 @@
+"""Unit tests for the structural HLO analyzer that feeds the roofline
+(trip-count multipliers, dot FLOPs via symbol table, collective bytes)."""
+import textwrap
+
+from repro.launch import hlo_analysis as ha
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16] get-tuple-element(%p), index=1
+      %w = f32[16,16] constant({...})
+      %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16] all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add.1
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+    }
+
+    %cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16] parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%zero, %a)
+      %while.1 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+      %out = f32[8,16] get-tuple-element(%while.1), index=1
+      %b = f32[16,8] constant({...})
+      %dot.2 = f32[8,8] dot(%out, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ag = f32[8,128] all-gather(%out), replica_groups=[16,16]<=[256], dimensions={1}
+      ROOT %r = f32[8,16] get-tuple-element(%while.1), index=1
+    }
+    """)
+
+
+def test_trip_count_multiplies_loop_body():
+    res = ha.analyze(HLO)
+    # dot.1: 2*8*16*16 = 4096 flops, x12 trips; dot.2: 2*8*8*16 = 2048
+    assert res["dot_flops"] == 4096 * 12 + 2048
+    assert res["trip_counts"] == [12]
+    assert res["n_while"] == 1
+
+
+def test_collective_bytes_with_multiplier():
+    res = ha.analyze(HLO)
+    # all-reduce f32[8,16] = 512B x12; all-gather f32[8,128] = 4096B x1
+    assert res["collectives"]["all-reduce"] == 512 * 12
+    assert res["collectives"]["all-gather"] == 4096
+    assert res["collective_bytes"] == 512 * 12 + 4096
+
+
+def test_shape_bytes_dtypes():
+    assert ha._shape_bytes("bf16[4,4]") == 32
+    assert ha._shape_bytes("f32[2,2]{1,0}") == 16
+    assert ha._shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert ha._shape_bytes("pred[8]") == 8
+    assert ha._shape_bytes("token[]") == 0
+
+
+def test_traffic_skips_layout_ops():
+    res = ha.analyze(HLO)
+    # parameters/constants/tuples/gte excluded; dot + all-reduce + add
+    # results count (x2 rw), loop-weighted
+    assert res["traffic_bytes"] > 0
+    # dot.1 result 512B appears 12x at least
+    assert res["traffic_bytes"] >= 512 * 12 * 2

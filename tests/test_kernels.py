@@ -1,0 +1,156 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the pure-jnp
+oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _unit_rows(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# voronoi
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", [1, 7, 128, 200])
+@pytest.mark.parametrize("k", [2, 5, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_voronoi_scores_sweep(b, k, dtype):
+    d = 64
+    x = _unit_rows(jax.random.PRNGKey(0), (b, d), dtype)
+    c = _unit_rows(jax.random.PRNGKey(1), (k, d), dtype)
+    got = ops.voronoi_scores(x, c, 0.1, interpret=True)
+    want = ref.voronoi_scores_ref(x, c, 0.1)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol)
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("tau", [0.05, 0.1, 1.0, 10.0])
+def test_voronoi_normalize_sims_sweep(tau):
+    sims = jax.random.uniform(jax.random.PRNGKey(2), (33, 6), minval=-1,
+                              maxval=1)
+    got = ops.voronoi_normalize_sims(sims, tau, interpret=True)
+    want = ref.voronoi_normalize_sims_ref(sims, tau)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_voronoi_thm2_property_through_kernel():
+    # corrected Thm 2 bound (see EXPERIMENTS.md §Thm2): θ > 1/2
+    x = _unit_rows(jax.random.PRNGKey(3), (64, 32), jnp.float32)
+    c = _unit_rows(jax.random.PRNGKey(4), (4, 32), jnp.float32)
+    s = np.asarray(ops.voronoi_scores(x, c, 0.1, interpret=True))
+    assert ((s > 0.5 + 1e-6).sum(axis=1) <= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# decode GQA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv,hd,s", [
+    (1, 4, 4, 32, 64),        # MHA
+    (2, 8, 2, 64, 128),       # GQA
+    (3, 8, 1, 32, 300),       # MQA, ragged S
+    (2, 16, 4, 128, 1024),    # bigger, aligned
+])
+@pytest.mark.parametrize("block_s", [64, 128])
+def test_decode_gqa_sweep(b, h, kv, hd, s, block_s):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    n_valid = s - 7 if s > 8 else s
+    got = ops.decode_gqa(q, k, v, n_valid, interpret=True, block_s=block_s)
+    want = ref.decode_gqa_ref(q, k, v, n_valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_gqa_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 96, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 96, 2, 32)).astype(dtype)
+    got = ops.decode_gqa(q, k, v, 96, interpret=True, block_s=32)
+    want = ref.decode_gqa_ref(q, k, v, 96)
+    atol = 5e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=atol, rtol=1e-2)
+
+
+def test_decode_gqa_masks_invalid_slots():
+    """Garbage beyond n_valid must not leak into the output."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 1, 16))
+    v = jax.random.normal(ks[2], (1, 64, 1, 16))
+    k2 = k.at[:, 40:].set(1e3)
+    v2 = v.at[:, 40:].set(-1e3)
+    a = ops.decode_gqa(q, k, v, 40, interpret=True, block_s=32)
+    b_ = ops.decode_gqa(q, k2, v2, 40, interpret=True, block_s=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,n,chunk", [
+    (1, 64, 2, 32, 32),
+    (2, 128, 4, 64, 64),
+    (2, 96, 1, 16, 32),
+    (1, 256, 2, 64, 128),
+])
+def test_wkv6_sweep(b, s, h, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n))) * 0.55 + 0.4
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    got = ops.wkv6(r, k, v, w, u, interpret=True, chunk=chunk)
+    want = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_wkv6_decay_extremes():
+    """w→1 (no decay) and w→small must both stay finite and correct."""
+    b, s, h, n = 1, 64, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    u = jnp.zeros((h, n))
+    for wval in (0.999, 0.05):
+        w = jnp.full((b, s, h, n), wval)
+        got = ops.wkv6(r, k, v, w, u, interpret=True, chunk=32)
+        want = ref.wkv6_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-3, rtol=5e-3)
+
+
+def test_wkv6_matches_model_chunked_path():
+    """models/rwkv6.wkv_chunked (the jnp chunked form) and the Pallas
+    kernel implement the same closed form."""
+    from repro.models.rwkv6 import wkv_chunked
+    b, s, h, n = 2, 128, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(10), 5)
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    state = jnp.zeros((b, h, n, n))
+    y_jnp, _ = wkv_chunked(r, k, v, w, u, state, 32)
+    y_pl = ops.wkv6(r, k, v, w, u, interpret=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pl),
+                               atol=2e-3, rtol=1e-3)

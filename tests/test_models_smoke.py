@@ -1,0 +1,72 @@
+"""Deliverable (f): per-arch smoke tests — a REDUCED variant of the same
+family runs one forward and one train step on CPU; output shapes checked,
+no NaNs anywhere."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config, list_archs
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.train import optimizer as opt
+
+B, S = 2, 16
+
+
+def _extras(cfg, key=42):
+    extras = {}
+    k = jax.random.PRNGKey(key)
+    if cfg.encoder:
+        extras["audio_features"] = jax.random.normal(
+            k, (B, cfg.encoder.n_frames, cfg.encoder.d_input))
+    if cfg.vision:
+        extras["vision_embeds"] = jax.random.normal(
+            k, (B, cfg.vision.n_tokens, cfg.vision.d_input))
+    return extras
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    logits, aux = model.forward(params, toks, _extras(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_one_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init_opt(params)
+    step = make_train_step(model, opt.AdamWConfig(total_steps=10))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)}
+    if _extras(cfg):
+        batch["extras"] = _extras(cfg)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert float(metrics["loss"]) > 0
+    assert not bool(jnp.isnan(metrics["loss"]))
+    assert not bool(jnp.isnan(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_loss_is_finite_and_reasonable(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    loss, metrics = model.loss(params, toks, _extras(cfg))
+    # random init ≈ uniform: CE close to log(V)
+    import math
+    assert abs(float(metrics["ce"]) - math.log(cfg.vocab_size)) < 2.0

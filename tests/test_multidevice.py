@@ -1,0 +1,94 @@
+"""Multi-device behaviours that need >1 device: run in a subprocess with
+XLA_FLAGS so the main test session keeps its single CPU device."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, n_dev: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_ep_moe_sharded_matches_dense():
+    stdout = _run("""
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs.registry import get_config
+from repro.models import moe as moe_mod
+from repro.distributed import sharding as shd
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+y0, _ = moe_mod.apply_moe(p, cfg, x)
+shd.set_current_mesh(mesh)
+with mesh:
+    y1, _ = jax.jit(lambda p, x: moe_mod.apply_moe(
+        p, dataclasses.replace(cfg, moe_impl="ep"), x))(p, x)
+rel = float(jnp.abs(y0 - y1).max()) / float(jnp.abs(y0).max())
+print("REL", rel)
+assert rel < 1e-5
+""")
+    assert "REL" in stdout
+
+
+def test_data_parallel_train_step_agrees_with_single_device():
+    stdout = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import get_config
+from repro.distributed import sharding as shd
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.train import optimizer as opt
+cfg = get_config("internlm2-1.8b", smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt_state = opt.init_opt(params)
+step = make_train_step(model, opt.AdamWConfig(total_steps=10))
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                      cfg.vocab_size)}
+# single-device reference
+p1, _, m1 = jax.jit(step)(params, opt_state, batch)
+# 8-way (4 data x 2 model) sharded
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+ps = shd.tree_shardings(mesh, jax.eval_shape(lambda: params))
+bs = {"tokens": shd.batch_sharding(mesh, batch["tokens"].shape)}
+with mesh:
+    p8, _, m8 = jax.jit(step, in_shardings=(ps, None, bs))(
+        params, opt_state, batch)
+dl = abs(float(m1["loss"]) - float(m8["loss"]))
+dp = max(float(jnp.abs(a - b).max())
+         for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)))
+print("DLOSS", dl, "DPARAM", dp)
+assert dl < 1e-4 and dp < 1e-3
+""")
+    assert "DLOSS" in stdout
+
+
+def test_roofline_consistent_with_artifacts():
+    """bench_roofline rows must be derivable from the dryrun artifacts."""
+    art = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    if not art.exists():
+        pytest.skip("no artifacts")
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks import bench_roofline as br
+    rows = br.build_table()
+    lowered = [r for r in rows if r.get("status") != "skipped"]
+    assert len(lowered) >= 34
+    for r in lowered:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= r["useful_ratio"] <= 1.5, r
+        assert r["compute_s"] > 0 and r["memory_s"] > 0
+    skips = [r for r in rows if r.get("status") == "skipped"]
+    assert len(skips) == 6

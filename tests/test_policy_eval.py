@@ -1,0 +1,141 @@
+"""Tensorized policy evaluation ≡ the first-match interpreter, property-
+tested over random rule sets and activations (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conditions import And, Atom, Not, Or
+from repro.dsl.compiler import compile_text
+from repro.serving import policy
+
+ATOMS = ["s0", "s1", "s2", "s3"]
+
+
+def interpreter(cfg, fired_row, conf_row, atom_names):
+    """Reference: evaluate rules one by one; winner by (tier, priority,
+    confidence)."""
+    act = {a: bool(f) for a, f in zip(atom_names, fired_row)}
+    conf = {a: float(c) for a, c in zip(atom_names, conf_row)}
+    best = None
+    for i, rule in enumerate(cfg.rules):
+        if not rule.condition.evaluate(act):
+            continue
+        pos_conf = max((conf[a] for a in rule.condition.atoms()
+                        if act.get(a)), default=0.0)
+        key = (rule.tier, rule.priority, round(pos_conf, 6), )
+        if best is None or key > best[0]:
+            best = (key, rule.name)
+    return best[1] if best else "__default__"
+
+
+@st.composite
+def rule_sets(draw):
+    n = draw(st.integers(1, 5))
+    lines = [f"SIGNAL domain {a} {{}}" for a in ATOMS]
+    for i in range(n):
+        a = draw(st.sampled_from(ATOMS))
+        b = draw(st.sampled_from(ATOMS))
+        form = draw(st.integers(0, 3))
+        if form == 0:
+            when = f'domain("{a}")'
+        elif form == 1:
+            when = f'domain("{a}") AND NOT domain("{b}")'
+        elif form == 2:
+            when = f'domain("{a}") OR domain("{b}")'
+        else:
+            when = f'domain("{a}") AND domain("{b}")'
+        pr = draw(st.integers(0, 300))
+        tier = draw(st.integers(0, 2))
+        lines.append(f'ROUTE r{i} {{ PRIORITY {pr} TIER {tier} '
+                     f'WHEN {when} MODEL "m{i}" }}')
+    lines.append('GLOBAL { default_model: "fallback" }')
+    return "\n".join(lines)
+
+
+@given(rule_sets(), st.integers(0, 2 ** 16))
+@settings(max_examples=120, deadline=None)
+def test_tensorized_matches_interpreter(text, seed):
+    cfg = compile_text(text)
+    tables = policy.build_tables(cfg)
+    rng = np.random.default_rng(seed)
+    b = 16
+    fired = rng.random((b, len(tables.atom_names))) > 0.5
+    conf = np.where(fired, rng.random((b, len(tables.atom_names))), 0.0) \
+        .astype(np.float32)
+    got = policy.route_names(tables, fired, conf)
+    want = [interpreter(cfg, fired[i], conf[i], tables.atom_names)
+            for i in range(b)]
+    # ties in (tier, priority, confidence) may legitimately differ in
+    # rule identity; compare the full sort key instead of the name
+    def key_of(cfg, name, i):
+        if name == "__default__":
+            return None
+        rule = next(r for r in cfg.rules if r.name == name)
+        act = {a: bool(f) for a, f in
+               zip(tables.atom_names, fired[i])}
+        pc = max((float(c) for a, c in
+                  zip(tables.atom_names, conf[i])
+                  if a in rule.condition.atoms() and act.get(a)),
+                 default=0.0)
+        return (rule.tier, rule.priority, round(pc, 4))
+
+    for i in range(b):
+        assert key_of(cfg, got[i], i) == key_of(cfg, want[i], i), \
+            (got[i], want[i])
+
+
+def test_tier_beats_priority_and_confidence_breaks_ties():
+    text = """
+SIGNAL domain a {}
+SIGNAL domain b {}
+ROUTE low_tier_high_pri { PRIORITY 500 TIER 0 WHEN domain("a") MODEL "m1" }
+ROUTE high_tier_low_pri { PRIORITY 10 TIER 1 WHEN domain("a") MODEL "m2" }
+ROUTE same_pri_a { PRIORITY 100 WHEN domain("a") MODEL "m3" }
+ROUTE same_pri_b { PRIORITY 100 WHEN domain("b") MODEL "m4" }
+GLOBAL { default_model: "fallback" }
+"""
+    cfg = compile_text(text)
+    tables = policy.build_tables(cfg)
+    fired = np.array([[True, False], [False, True], [True, True]])
+    conf = np.array([[0.9, 0.0], [0.0, 0.9], [0.6, 0.8]], np.float32)
+    names = policy.route_names(tables, fired, conf)
+    assert names[0] == "high_tier_low_pri"      # tier dominates priority
+    # row 2: both same_pri rules fire at priority 100 but tier-1 rule wins
+    assert names[2] == "high_tier_low_pri"
+    # default when nothing fires
+    names2 = policy.route_names(
+        tables, np.zeros((1, 2), bool), np.zeros((1, 2), np.float32))
+    assert names2 == ["__default__"]
+
+
+def test_confidence_tie_break_at_high_tier_regression():
+    """Regression (hypothesis-found): a scalarized tier*B²+pri*B+conf
+    score loses the confidence tie-break to f32 rounding when tier > 0.
+    The staged lexicographic argmax must get this right."""
+    text = """
+SIGNAL domain s0 {}
+SIGNAL domain s1 {}
+ROUTE r0 { PRIORITY 0 TIER 1 WHEN domain("s0") MODEL "m0" }
+ROUTE r1 { PRIORITY 0 TIER 1 WHEN domain("s1") MODEL "m1" }
+GLOBAL { default_model: "fallback" }
+"""
+    cfg = compile_text(text)
+    tables = policy.build_tables(cfg)
+    fired = np.array([[True, True]])
+    conf = np.array([[0.0708, 0.0939]], np.float32)  # tiny margin
+    assert policy.route_names(tables, fired, conf) == ["r1"]
+
+
+def test_confidence_tie_break_within_priority():
+    text = """
+SIGNAL domain a {}
+SIGNAL domain b {}
+ROUTE ra { PRIORITY 100 WHEN domain("a") MODEL "m1" }
+ROUTE rb { PRIORITY 100 WHEN domain("b") MODEL "m2" }
+"""
+    cfg = compile_text(text)
+    tables = policy.build_tables(cfg)
+    fired = np.array([[True, True]])
+    conf = np.array([[0.3, 0.9]], np.float32)
+    assert policy.route_names(tables, fired, conf) == ["rb"]
+    conf = np.array([[0.9, 0.3]], np.float32)
+    assert policy.route_names(tables, fired, conf) == ["ra"]

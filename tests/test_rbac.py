@@ -1,0 +1,83 @@
+"""Paper §8: semantic RBAC — the type-4 privilege-escalation hazard and
+its SIGNAL_GROUP fix, end to end through the DSL + engine."""
+import numpy as np
+
+from repro.core.taxonomy import ConflictType
+from repro.dsl.compiler import compile_text
+from repro.dsl.validate import Validator
+from repro.serving.router import RouterService
+
+RBAC_DSL = """
+SIGNAL embedding researcher_behavior {
+  candidates: ["citing literature", "statistical analysis",
+               "scientific query"]
+  threshold: 0.55
+}
+SIGNAL embedding medical_professional_behavior {
+  candidates: ["clinical statistics", "biostatistics analysis",
+               "patient literature"]
+  threshold: 0.55
+}
+SIGNAL authz verified_employee {
+  subjects: [{ kind: "Group", name: "staff" }]
+}
+ROUTE researcher_access {
+  PRIORITY 200
+  WHEN embedding("researcher_behavior") AND authz("verified_employee")
+  PLUGIN rag { backend: "restricted_papers" }
+}
+ROUTE medical_access {
+  PRIORITY 150
+  WHEN embedding("medical_professional_behavior") AND authz("verified_employee")
+  PLUGIN rag { backend: "phi_records" }
+}
+ROUTE general_access {
+  PRIORITY 100
+  WHEN authz("verified_employee")
+  MODEL "general"
+}
+PLUGIN rag { backend: "default" }
+GLOBAL { default_model: "general" }
+"""
+
+FIX = """
+SIGNAL_GROUP behavioral_roles {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.6
+  members: [researcher_behavior, medical_professional_behavior]
+  default: researcher_behavior
+}
+"""
+
+
+def test_rbac_hazard_detected_statically():
+    svc = RouterService(RBAC_DSL, load_backends=False)   # binds centroids
+    diags = Validator(svc.config).validate()
+    t4 = [d for d in diags if d.code == "M6-probable_conflict"]
+    # biostatistics prototypes overlap -> co-fire hazard flagged
+    assert t4, [str(d) for d in diags]
+
+
+def test_rbac_group_fix_removes_hazard_and_cofire():
+    svc = RouterService(RBAC_DSL + FIX, load_backends=False)
+    diags = Validator(svc.config).validate()
+    assert not [d for d in diags if d.code == "M6-probable_conflict"]
+    # runtime: the escalation query fires at most one behavioral role
+    res = svc.engine.evaluate(
+        ["biostatistics literature analysis of patient statistics"],
+        metadata=[{"groups": ["staff"]}])
+    ri = res.names.index("researcher_behavior")
+    mi = res.names.index("medical_professional_behavior")
+    assert not (res.fired[0, ri] and res.fired[0, mi])
+
+
+def test_rbac_authz_gates_everything():
+    svc = RouterService(RBAC_DSL + FIX, load_backends=False)
+    routes = svc.route(["citing literature statistical analysis"],
+                       metadata=[{"groups": []}])   # not staff
+    assert routes[0] == "__default__"
+    routes = svc.route(["citing literature statistical analysis"],
+                       metadata=[{"groups": ["staff"]}])
+    assert routes[0] in ("researcher_access", "medical_access",
+                         "general_access")

@@ -1,0 +1,125 @@
+"""Each of the paper's six conflict types is detected on a crafted config
+(fig. 2), and the mitigations make the findings disappear."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.atoms import SignalAtom
+from repro.core.conditions import And, Atom, Not
+from repro.core.monitor import OnlineConflictMonitor
+from repro.core.taxonomy import (ConflictDetector, ConflictType,
+                                 Decidability, Rule, condition_level)
+
+
+def _geo(name, deg_from_x, radius_deg, d=32):
+    c = np.zeros(d)
+    th = math.radians(deg_from_x)
+    c[0], c[1] = math.cos(th), math.sin(th)
+    return SignalAtom(name, "embedding", math.cos(math.radians(radius_deg)),
+                      tuple(c.tolist()))
+
+
+BASE_SIGNALS = {
+    "kw": SignalAtom("kw", "keyword", 0.5),
+    "auth": SignalAtom("auth", "authz", 0.5),
+    "math": _geo("math", 0, 45),
+    "science": _geo("science", 30, 45),
+    "dom_math": SignalAtom("dom_math", "domain", 0.5,
+                           categories=("college_mathematics",)),
+    "dom_sci": SignalAtom("dom_sci", "domain", 0.5,
+                          categories=("college_physics",)),
+}
+
+
+def _kinds(findings):
+    return {f.kind for f in findings}
+
+
+def test_type1_logical_contradiction():
+    rules = [Rule("r1", And((Atom("kw"), Not(Atom("kw")))), "m1", 200),
+             Rule("r2", Atom("auth"), "m2", 100)]
+    fs = ConflictDetector(BASE_SIGNALS).analyze(rules)
+    assert ConflictType.LOGICAL_CONTRADICTION in _kinds(fs)
+    t1 = [f for f in fs if f.kind is ConflictType.LOGICAL_CONTRADICTION]
+    assert all(f.decidability is Decidability.SAT for f in t1)
+
+
+def test_type2_structural_shadowing():
+    rules = [Rule("hi", Atom("kw"), "m1", 200),
+             Rule("lo", And((Atom("kw"), Atom("auth"))), "m2", 100)]
+    fs = ConflictDetector(BASE_SIGNALS).analyze(rules)
+    assert ConflictType.STRUCTURAL_SHADOWING in _kinds(fs)
+
+
+def test_type3_structural_redundancy():
+    rules = [Rule("hi", And((Atom("kw"), Atom("auth"))), "m1", 200),
+             Rule("lo", And((Atom("auth"), Atom("kw"))), "m2", 100)]
+    fs = ConflictDetector(BASE_SIGNALS).analyze(rules)
+    assert ConflictType.STRUCTURAL_REDUNDANCY in _kinds(fs)
+
+
+def test_type4_probable_conflict_and_voronoi_fix():
+    rules = [Rule("math_route", Atom("math"), "m1", 200),
+             Rule("science_route", Atom("science"), "m2", 100)]
+    fs = ConflictDetector(BASE_SIGNALS).analyze(rules)
+    t4 = [f for f in fs if f.kind is ConflictType.PROBABLE_CONFLICT]
+    assert t4 and t4[0].decidability is Decidability.GEOMETRIC
+    assert "SIGNAL_GROUP" in t4[0].fix_hint
+    # the paper's fix: softmax_exclusive group removes the finding
+    fixed = ConflictDetector(BASE_SIGNALS,
+                             exclusive_groups=[("math", "science")])
+    assert ConflictType.PROBABLE_CONFLICT not in _kinds(fixed.analyze(rules))
+
+
+def test_type4_disjoint_caps_no_conflict():
+    sig = dict(BASE_SIGNALS)
+    sig["far"] = _geo("far", 170, 20)
+    sig["near"] = _geo("near", 0, 20)
+    rules = [Rule("a", Atom("near"), "m1", 200),
+             Rule("b", Atom("far"), "m2", 100)]
+    fs = ConflictDetector(sig).analyze(rules)
+    assert ConflictType.PROBABLE_CONFLICT not in _kinds(fs)
+
+
+def test_type5_soft_shadowing():
+    rules = [Rule("math_route", Atom("math"), "m1", 200),
+             Rule("science_route", Atom("science"), "m2", 100)]
+    fs = ConflictDetector(BASE_SIGNALS).analyze(rules)
+    t5 = [f for f in fs if f.kind is ConflictType.SOFT_SHADOWING]
+    assert t5
+    assert t5[0].evidence["against_evidence_mass"] > 0.05
+
+
+def test_type6_calibration_conflict_notice():
+    rules = [Rule("m", Atom("dom_math"), "m1", 200),
+             Rule("s", Atom("dom_sci"), "m2", 100)]
+    fs = ConflictDetector(BASE_SIGNALS).analyze(rules)
+    t6 = [f for f in fs if f.kind is ConflictType.CALIBRATION_CONFLICT]
+    assert t6 and t6[0].decidability is Decidability.UNDECIDABLE
+
+
+def test_decidability_levels():
+    assert condition_level(Atom("kw"), BASE_SIGNALS) is Decidability.SAT
+    assert condition_level(And((Atom("kw"), Atom("math"))),
+                           BASE_SIGNALS) is Decidability.GEOMETRIC
+    assert condition_level(Atom("dom_math"),
+                           BASE_SIGNALS) is Decidability.UNDECIDABLE
+
+
+def test_online_monitor_detects_calibration_conflict():
+    mon = OnlineConflictMonitor(["dom_math", "dom_sci"],
+                                priority_of={"dom_math": 200,
+                                             "dom_sci": 100},
+                                halflife=50)
+    rng = np.random.default_rng(0)
+    # physics-boundary traffic: both classifiers hot, dom_sci hotter
+    for _ in range(20):
+        s_math = rng.uniform(0.5, 0.7, size=(64, 1))
+        s_sci = rng.uniform(0.6, 0.95, size=(64, 1))
+        mon.observe_batch(np.concatenate([s_math, s_sci], axis=1),
+                          np.array([0.5, 0.5]))
+    alerts = mon.alerts()
+    kinds = {a.kind for a in alerts}
+    assert ConflictType.CALIBRATION_CONFLICT in kinds
+    assert ConflictType.SOFT_SHADOWING in kinds
