@@ -1,0 +1,157 @@
+"""Signal-pipeline benchmark: legacy per-group interpretation vs the
+fused single-GEMM pipeline vs the grouped-Voronoi Pallas kernel.
+
+Two sweeps:
+
+* normalization stage — softmax over every SIGNAL_GROUP for synthetic
+  (B, N) similarity matrices, B ∈ {1..4096} and N ∈ {4..256}, comparing
+  the legacy per-group numpy loop, the fused segment-reduction jnp path
+  (jit), and the grouped-Voronoi Pallas kernel (one launch for all
+  groups; interpret-mode on CPU, compiled on TPU);
+* end to end — SignalEngine.evaluate_legacy vs the fused
+  SignalEngine.evaluate vs the fully fused RouterService.route_indices
+  on bench_router.make_dsl configs.
+
+Emits ``BENCH_signal_pipeline.json`` (repo root) with every timing so
+CI can diff legacy-vs-fused across commits.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_signal_pipeline.json"
+
+
+def _time(fn, *, reps: int = 20, budget_s: float = 0.5) -> float:
+    """median-ish us/call: warm once, then rep until budget."""
+    fn()
+    t0 = time.perf_counter()
+    done = 0
+    while done < reps and (time.perf_counter() - t0) < budget_s:
+        fn()
+        done += 1
+    return (time.perf_counter() - t0) / max(done, 1) * 1e6
+
+
+def _group_layout(n: int, seed: int = 0):
+    """~8-wide uneven groups over n columns (shuffled, non-contiguous)."""
+    rng = np.random.default_rng(seed)
+    sizes = []
+    left = n
+    while left:
+        s = min(left, int(rng.integers(1, 9)))
+        sizes.append(s)
+        left -= s
+    gid = np.concatenate([[g] * s for g, s in enumerate(sizes)])
+    gid = gid[rng.permutation(n)].astype(np.int32)
+    member = np.zeros((len(sizes), n), np.float32)
+    member[gid, np.arange(n)] = 1.0
+    inv_tau = np.full(n, 10.0, np.float32)          # τ = 0.1 everywhere
+    return gid, member, inv_tau
+
+
+def _legacy_loop(sims: np.ndarray, gid: np.ndarray,
+                 inv_tau: np.ndarray) -> np.ndarray:
+    """The seed engine's interpretation: one numpy softmax per group."""
+    out = np.empty_like(sims)
+    for g in np.unique(gid):
+        cols = np.where(gid == g)[0]
+        z = sims[:, cols] * inv_tau[cols[0]]
+        z = z - z.max(axis=-1, keepdims=True)
+        e = np.exp(z)
+        out[:, cols] = e / e.sum(axis=-1, keepdims=True)
+    return out
+
+
+def _fused_jnp(n_groups: int):
+    @jax.jit
+    def f(sims, gid, inv_tau):
+        z = sims * inv_tau[None, :]
+        gmax = jax.ops.segment_max(z.T, gid, num_segments=n_groups).T
+        e = jnp.exp(z - jnp.take(gmax, gid, axis=1))
+        gsum = jax.ops.segment_sum(e.T, gid, num_segments=n_groups).T
+        return e / jnp.take(gsum, gid, axis=1)
+    return f
+
+
+def bench_normalization(results: dict) -> list:
+    lines = []
+    rng = np.random.default_rng(1)
+    for b in (1, 16, 256, 4096):
+        for n in (4, 32, 256):
+            gid, member, inv_tau = _group_layout(n)
+            sims = rng.uniform(-1, 1, (b, n)).astype(np.float32)
+            sims_j = jnp.asarray(sims)
+            gid_j = jnp.asarray(gid)
+            inv_j = jnp.asarray(inv_tau)
+            mem_j = jnp.asarray(member)
+            fused = _fused_jnp(member.shape[0])
+
+            t_legacy = _time(lambda: _legacy_loop(sims, gid, inv_tau))
+            t_jnp = _time(
+                lambda: fused(sims_j, gid_j, inv_j).block_until_ready())
+            t_pl = _time(lambda: ops.grouped_voronoi(
+                sims_j, inv_j, mem_j).block_until_ready())
+            for variant, us in (("legacy_loop", t_legacy),
+                                ("fused_jnp", t_jnp),
+                                ("grouped_pallas", t_pl)):
+                key = f"norm_b{b}_n{n}/{variant}"
+                results[key] = us
+                lines.append(
+                    f"signal_pipeline/{key},{us:.0f},"
+                    f"groups={member.shape[0]}")
+    return lines
+
+
+def bench_end_to_end(results: dict) -> list:
+    from benchmarks.bench_router import make_dsl
+    from repro.serving.router import RouterService
+    lines = []
+    queries = [f"query about topic {i} alpha" for i in range(64)]
+    for n_routes in (4, 16, 64):
+        svc = RouterService(make_dsl(n_routes), load_backends=False,
+                            validate=False)
+        svc.engine.evaluate(queries)        # warm jit + embed cache
+        svc.engine.evaluate_legacy(queries)
+        svc.route_indices(queries)
+        t_legacy = _time(lambda: svc.engine.evaluate_legacy(queries),
+                         reps=10)
+        t_fused = _time(lambda: svc.engine.evaluate(queries), reps=10)
+        t_route = _time(lambda: svc.route_indices(queries), reps=10)
+        for variant, us in (("engine_legacy", t_legacy),
+                            ("engine_fused", t_fused),
+                            ("route_fused", t_route)):
+            key = f"e2e_n{n_routes}_b64/{variant}"
+            results[key] = us
+            lines.append(f"signal_pipeline/{key},{us:.0f},"
+                         f"qps={64 / (us / 1e6):.0f}")
+        results[f"e2e_n{n_routes}_b64/speedup"] = t_legacy / t_fused
+        lines.append(f"signal_pipeline/e2e_n{n_routes}_b64/speedup,0,"
+                     f"x{t_legacy / t_fused:.1f}")
+    return lines
+
+
+def main():
+    results: dict = {}
+    lines = bench_normalization(results)
+    lines += bench_end_to_end(results)
+    JSON_PATH.write_text(json.dumps(
+        {"unit": "us_per_call", "results": results}, indent=2,
+        sort_keys=True) + "\n")
+    lines.append(f"signal_pipeline/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   taxonomy         — Fig. 2: detection time per conflict type
   kernels          — Pallas (interpret) vs jnp-oracle microbench
   router           — end-to-end routing throughput + validator latency
+  signal_pipeline  — legacy loop vs fused GEMM+grouped-Voronoi pipeline
+                     (also writes BENCH_signal_pipeline.json)
   moe_voronoi      — beyond-paper: MoE router as Voronoi partition
   roofline         — deliverable (g): 3-term roofline per (arch x shape)
 """
@@ -23,7 +25,8 @@ def main() -> None:
     from benchmarks import (bench_cofire, bench_hierarchy, bench_kernels,
                             bench_moe_voronoi, bench_roofline,
                             bench_router, bench_running_example,
-                            bench_table1, bench_taxonomy)
+                            bench_signal_pipeline, bench_table1,
+                            bench_taxonomy)
     suites = [
         ("table1", bench_table1.main),
         ("running_example", bench_running_example.main),
@@ -32,6 +35,7 @@ def main() -> None:
         ("taxonomy", bench_taxonomy.main),
         ("kernels", bench_kernels.main),
         ("router", bench_router.main),
+        ("signal_pipeline", bench_signal_pipeline.main),
         ("moe_voronoi", bench_moe_voronoi.main),
         ("roofline", bench_roofline.main),
     ]

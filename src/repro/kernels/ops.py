@@ -19,6 +19,13 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def default_interpret() -> bool:
+    """Platform-default interpret flag: compiled on TPU, interpreted
+    elsewhere.  Public so callers that bake the flag into a jit-static
+    argument (signals/engine.py) resolve it the same way."""
+    return _default_interpret()
+
+
 def voronoi_scores(x, centroids, temperature, *, interpret=None,
                    use_ref=False, block_b: int = 128):
     if use_ref:
@@ -35,6 +42,19 @@ def voronoi_normalize_sims(sims, temperature, *, interpret=None,
     interp = _default_interpret() if interpret is None else interpret
     return _vor.voronoi_normalize_sims(sims, temperature,
                                        block_b=block_b, interpret=interp)
+
+
+def grouped_voronoi(sims, inv_tau, member, *, interpret=None,
+                    use_ref=False, block_b: int = 128):
+    """All SIGNAL_GROUPs in one launch: sims (B, N), inv_tau (N,),
+    member (G, N) one-hot partition -> (B, N) grouped Voronoi scores."""
+    if use_ref:
+        import jax.numpy as jnp
+        group_id = jnp.argmax(jnp.asarray(member), axis=0)
+        return _ref.grouped_voronoi_ref(sims, inv_tau, group_id)
+    interp = _default_interpret() if interpret is None else interpret
+    return _vor.grouped_voronoi(sims, inv_tau, member,
+                                block_b=block_b, interpret=interp)
 
 
 def decode_gqa(q, k, v, n_valid, *, interpret=None, use_ref=False,

@@ -14,6 +14,26 @@ def voronoi_normalize_sims_ref(sims, temperature):
     return jax.nn.softmax(sims.astype(jnp.float32) / temperature, axis=-1)
 
 
+def grouped_voronoi_ref(sims, inv_tau, group_id):
+    """Per-group Voronoi normalization, one group at a time (the oracle
+    for the fused grouped kernel).
+
+    sims: (B, N) raw similarities; inv_tau: (N,) per-column 1/temperature
+    (constant within a group); group_id: (N,) int — a *partition*: every
+    column belongs to exactly one group, ids in [0, G).
+    -> (B, N) where column j holds softmax over group(j)'s columns.
+    """
+    import numpy as np
+    gid = np.asarray(group_id)
+    z = sims.astype(jnp.float32) * jnp.asarray(inv_tau)[None, :]
+    out = jnp.zeros_like(z)
+    for g in np.unique(gid):
+        mask = jnp.asarray(gid == g)
+        zg = jnp.where(mask[None, :], z, -jnp.inf)
+        out = jnp.where(mask[None, :], jax.nn.softmax(zg, axis=-1), out)
+    return out
+
+
 def decode_gqa_ref(q, k, v, n_valid):
     """q: (B,H,hd); k/v: (B,S,KV,hd); n_valid: scalar."""
     b, h, hd = q.shape

@@ -1,16 +1,29 @@
-"""Fused Voronoi-normalization Pallas kernel (the paper's §4 runtime
-mechanism as a TPU kernel).
+"""Fused Voronoi-normalization Pallas kernels (the paper's §4 runtime
+mechanism as TPU kernels).
 
-Computes softmax(X @ Cᵀ / τ) for a batch of unit query embeddings X
-(B, D) against a group's centroid matrix C (K, D):
+Three entry points:
 
-  * queries tiled over VMEM blocks of ``block_b`` rows (MXU-aligned 128),
-  * the centroid matrix is small (K ≤ 128 in any real group) and stays
-    resident in VMEM across the whole grid,
-  * similarity matmul and the numerically-stable softmax fuse in one
-    kernel — scores never round-trip to HBM.
+* ``voronoi_scores`` — softmax(X @ Cᵀ / τ) for one group's centroid
+  matrix C (K, D) against unit queries X (B, D); similarity matmul and
+  the numerically-stable softmax fuse in one kernel.
+* ``voronoi_normalize_sims`` — softmax(S / τ) over precomputed
+  similarities for a single group.
+* ``grouped_voronoi`` — the *whole policy's* groups in one launch:
+  given the stacked similarity matrix S (B, N) for every probabilistic
+  signal, a per-column 1/τ vector, and a (G, N) one-hot membership
+  partition, it computes the segment-masked softmax of every group
+  simultaneously.  Contract: membership is a partition (each column in
+  exactly one group row, groups may be uneven/singleton); per-column
+  scales are constant within a group; output column j is the softmax of
+  group(j) restricted to its member columns.  Per-group maxima use a
+  fori_loop over the static G rows; broadcasts and denominators are
+  one-hot matmuls on the MXU.  This replaces one kernel launch per
+  SIGNAL_GROUP with exactly one launch per batch.
 
-Validated on CPU with ``interpret=True`` against kernels/ref.py.
+All kernels tile queries over VMEM blocks of ``block_b`` rows
+(MXU-aligned 128) and keep the small operands (centroids, scales,
+membership) resident in VMEM across the grid.  Validated on CPU with
+``interpret=True`` against kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -19,6 +32,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _pad_rows(x: jnp.ndarray, block_b: int):
+    """Pad x's rows to a multiple of the block size so the grid really
+    tiles: -> (padded x, block rows bb, #blocks).  Batches smaller than
+    ``block_b`` become a single bb=B block; larger batches are padded up
+    to a block_b multiple instead of degrading to one whole-batch block."""
+    b = x.shape[0]
+    bb = max(1, min(block_b, b))
+    pad = (-b) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, bb, x.shape[0] // bb
 
 
 def _voronoi_kernel(x_ref, c_ref, inv_tau_ref, o_ref):
@@ -41,11 +67,7 @@ def voronoi_scores(x: jnp.ndarray, centroids: jnp.ndarray,
     """x: (B, D); centroids: (K, D) -> (B, K) Voronoi scores."""
     b, d = x.shape
     k = centroids.shape[0]
-    bb = min(block_b, b) if b % min(block_b, b) == 0 else b
-    pad = (-b) % bb
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    nb = x.shape[0] // bb
+    x, bb, nb = _pad_rows(x, block_b)
     inv_tau = jnp.asarray([1.0 / temperature], jnp.float32)
     out = pl.pallas_call(
         _voronoi_kernel,
@@ -53,13 +75,83 @@ def voronoi_scores(x: jnp.ndarray, centroids: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((bb, d), lambda i: (i, 0)),
             pl.BlockSpec((k, d), lambda i: (0, 0)),   # resident centroids
-            pl.BlockSpec(memory_space=pl.ANY)
-            if False else pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((bb, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], k), jnp.float32),
         interpret=interpret,
     )(x, centroids, inv_tau)
+    return out[:b]
+
+
+_NEG = -3e38                   # finite -inf stand-in: 0 * _NEG == 0, not nan
+
+
+def _grouped_voronoi_kernel(s_ref, scale_ref, member_ref, o_ref):
+    """Segment-masked, numerically stable softmax over every group at once.
+
+    s_ref:      (bb, N) raw similarities for this batch block
+    scale_ref:  (1, N)  per-column 1/temperature (constant within a group)
+    member_ref: (G, N)  one-hot group membership — a partition: every
+                column belongs to exactly one group row
+    o_ref:      (bb, N) per-column softmax over the column's group
+
+    The per-group max is computed with a fori_loop over the (static) G
+    group rows; the max/denominator broadcast back to columns and the
+    per-group sum both ride the MXU as one-hot matmuls, so the whole
+    batch needs exactly one kernel launch regardless of group count.
+    """
+    s = s_ref[...].astype(jnp.float32)                        # (bb, N)
+    z = s * scale_ref[...]                                    # (bb, N)
+    m = member_ref[...].astype(jnp.float32)                   # (G, N)
+    n_groups = m.shape[0]
+
+    def _gmax(g, acc):
+        row = jax.lax.dynamic_slice_in_dim(m, g, 1, axis=0)   # (1, N)
+        zg = jnp.where(row > 0.0, z, _NEG)
+        mg = jnp.max(zg, axis=-1, keepdims=True)              # (bb, 1)
+        return jax.lax.dynamic_update_slice_in_dim(acc, mg, g, axis=1)
+
+    gmax = jax.lax.fori_loop(
+        0, n_groups, _gmax,
+        jnp.full((z.shape[0], n_groups), _NEG, jnp.float32))  # (bb, G)
+    col_max = jax.lax.dot_general(                            # (bb, N)
+        gmax, m, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    e = jnp.exp(z - col_max)                                  # ≤ 1, max is 1
+    gsum = jax.lax.dot_general(                               # (bb, G)
+        e, m, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    denom = jax.lax.dot_general(                              # (bb, N) ≥ 1
+        gsum, m, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] = (e / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def grouped_voronoi(sims: jnp.ndarray, inv_tau: jnp.ndarray,
+                    member: jnp.ndarray, *,
+                    block_b: int = 128, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """sims: (B, N); inv_tau: (N,); member: (G, N) one-hot partition
+    -> (B, N) grouped Voronoi scores in one pallas_call."""
+    b, n = sims.shape
+    g = member.shape[0]
+    sims, bb, nb = _pad_rows(sims, block_b)
+    scale = jnp.asarray(inv_tau, jnp.float32).reshape(1, n)
+    memberf = jnp.asarray(member, jnp.float32)
+    out = pl.pallas_call(
+        _grouped_voronoi_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),   # resident scales
+            pl.BlockSpec((g, n), lambda i: (0, 0)),   # resident membership
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sims.shape[0], n), jnp.float32),
+        interpret=interpret,
+    )(sims, scale, memberf)
     return out[:b]
 
 
@@ -77,11 +169,7 @@ def voronoi_normalize_sims(sims: jnp.ndarray,
                            ) -> jnp.ndarray:
     """sims: (B, K) raw cosine similarities -> (B, K) Voronoi scores."""
     b, k = sims.shape
-    bb = min(block_b, b) if b % min(block_b, b) == 0 else b
-    pad = (-b) % bb
-    if pad:
-        sims = jnp.pad(sims, ((0, pad), (0, 0)))
-    nb = sims.shape[0] // bb
+    sims, bb, nb = _pad_rows(sims, block_b)
     inv_tau = jnp.asarray([1.0 / temperature], jnp.float32)
     out = pl.pallas_call(
         _softmax_kernel,

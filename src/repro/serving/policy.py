@@ -12,6 +12,10 @@ first-match interpreter (DESIGN §3).  Semantics preserved exactly:
 TIER routing (paper §5, item 5): tiers dominate priority; within a tier,
 priority dominates confidence; equal-priority ties break on confidence —
 "priority-then-confidence".
+
+The jitted evaluator is cached at module level and ``PolicyTables``
+caches its device-resident view, so per-batch work is exactly one cached
+XLA call — no retracing, no host->device table transfer.
 """
 from __future__ import annotations
 
@@ -39,10 +43,24 @@ class PolicyTables:
     priority: np.ndarray          # (R,)
     tier: np.ndarray              # (R,)
     n_rules: int
+    _jax: Optional[Dict[str, jnp.ndarray]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
-    def as_jax(self):
-        return {k: jnp.asarray(getattr(self, k))
-                for k in ("pos", "neg", "term_rule", "priority", "tier")}
+    def as_jax(self) -> Dict[str, jnp.ndarray]:
+        """Device-resident view, transferred once and cached — callers
+        hit the same buffers on every batch."""
+        if self._jax is None:
+            self._jax = {k: jnp.asarray(getattr(self, k))
+                         for k in ("pos", "neg", "term_rule", "priority",
+                                   "tier")}
+        return self._jax
+
+    def action_key(self, i: int) -> str:
+        return self.actions[int(i)]
+
+    def rule_name(self, i: int) -> str:
+        return (self.rule_names[int(i)] if int(i) < self.n_rules
+                else "__default__")
 
 
 def build_tables(cfg: RouterConfig) -> PolicyTables:
@@ -101,12 +119,12 @@ def evaluate_policy(tables: Dict[str, jnp.ndarray], n_rules: int,
     # a single scalarized score (tier*B^2 + pri*B + conf) loses the
     # confidence tie-break to f32 rounding at high tiers (found by
     # hypothesis — see tests/test_policy_eval.py)
-    neg = -jnp.inf
-    t = jnp.where(rule_ok, tables["tier"][None], neg)
+    ninf = -jnp.inf
+    t = jnp.where(rule_ok, tables["tier"][None], ninf)
     m1 = rule_ok & (t >= t.max(axis=-1, keepdims=True))
-    pr = jnp.where(m1, tables["priority"][None], neg)
+    pr = jnp.where(m1, tables["priority"][None], ninf)
     m2 = m1 & (pr >= pr.max(axis=-1, keepdims=True))
-    c = jnp.where(m2, jnp.clip(rule_conf, 0.0, 1.0), neg)
+    c = jnp.where(m2, jnp.clip(rule_conf, 0.0, 1.0), ninf)
     best = jnp.argmax(c, axis=-1)
     best_score = jnp.take_along_axis(c, best[:, None], axis=1)[:, 0]
     none = ~jnp.any(rule_ok, axis=-1)
@@ -114,21 +132,27 @@ def evaluate_policy(tables: Dict[str, jnp.ndarray], n_rules: int,
     return route, jnp.where(none, -jnp.inf, best_score)
 
 
+# one persistent jit cache for every caller — rebuilding jax.jit(...) per
+# batch (the old route_batch/route_names) retraced on every request
+_EVAL_JIT = jax.jit(evaluate_policy, static_argnums=(1,))
+
+
+def evaluate_indices(tables: PolicyTables, fired, confidence
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """(route index, score) per request via the cached jit + cached
+    device tables.  index == n_rules means the default action."""
+    idx, score = _EVAL_JIT(tables.as_jax(), tables.n_rules,
+                           jnp.asarray(fired), jnp.asarray(confidence))
+    return np.asarray(idx), np.asarray(score)
+
+
 def route_batch(tables: PolicyTables, fired: np.ndarray,
                 confidence: np.ndarray) -> List[str]:
     """Convenience numpy wrapper -> winning action key per request."""
-    jt = tables.as_jax()
-    idx, _ = jax.jit(evaluate_policy, static_argnums=(1,))(
-        jt, tables.n_rules, jnp.asarray(fired), jnp.asarray(confidence))
-    return [tables.actions[int(i)] for i in np.asarray(idx)]
+    idx, _ = evaluate_indices(tables, fired, confidence)
+    return [tables.action_key(i) for i in idx]
 
 
 def route_names(tables: PolicyTables, fired, confidence) -> List[str]:
-    jt = tables.as_jax()
-    idx, _ = jax.jit(evaluate_policy, static_argnums=(1,))(
-        jt, tables.n_rules, jnp.asarray(fired), jnp.asarray(confidence))
-    out = []
-    for i in np.asarray(idx):
-        out.append(tables.rule_names[int(i)] if int(i) < tables.n_rules
-                   else "__default__")
-    return out
+    idx, _ = evaluate_indices(tables, fired, confidence)
+    return [tables.rule_name(i) for i in idx]

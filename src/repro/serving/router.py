@@ -10,13 +10,21 @@
                           │
                   Batcher ──► backend models (models/) decode loop
 
+Routing is one fused, jit-cached program: embeddings and crisp scores
+enter ``_route_core`` (signal GEMM + grouped Voronoi normalization +
+thresholds/default fallback + policy argmax) and route *indices* come
+out — ``route``, ``route_actions`` and ``submit`` all derive their
+strings from that single evaluation, so a ``submit`` batch embeds and
+scores exactly once.  The jitted callable and the device-resident
+``PolicyTables`` are cached on the service across request batches.
+
 Backends are real JAX models (reduced configs on CPU; the full configs
 are exercised by launch/dryrun.py on the production mesh).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import functools
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -29,7 +37,20 @@ from repro.dsl.validate import Diagnostic, Validator, has_errors
 from repro.models.model import build_model
 from repro.serving import policy as policy_mod
 from repro.serving.batcher import Batcher, Request
+from repro.signals import engine as engine_mod
 from repro.signals.embedder import HashEmbedder
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_rules", "use_pallas", "interpret"))
+def _route_core(emb, crisp_raw, tensors, jt, n_rules, use_pallas,
+                interpret):
+    """embeddings + crisp scores -> (route index, score): the whole
+    signal pipeline and the policy argmax as one XLA program."""
+    _, _, fired, conf = engine_mod._signal_eval_core(
+        emb, crisp_raw, tensors, use_pallas=use_pallas,
+        interpret=interpret)
+    return policy_mod.evaluate_policy(jt, n_rules, fired, conf)
 
 
 @dataclasses.dataclass
@@ -62,6 +83,7 @@ class RouterService:
         self.engine = SignalEngine(self.config, self.embedder,
                                    use_pallas=use_pallas_voronoi)
         self.tables = policy_mod.build_tables(self.config)
+        self._jt = self.tables.as_jax()       # device-resident, cached
         self.batcher = Batcher(max_batch=max_batch)
         self.backends: Dict[str, BackendRuntime] = {}
         if load_backends:
@@ -83,16 +105,45 @@ class RouterService:
                 max_seq=int(fields.get("max_seq", 128)))
 
     # ---- routing ---------------------------------------------------------------
+    def route_indices(self, texts: Sequence[str],
+                      metadata: Optional[Sequence[Dict[str, Any]]] = None
+                      ) -> np.ndarray:
+        """-> winning route index per request (n_rules == default), from
+        ONE evaluation of the fused signal+policy program.
+
+        Batches are padded up to the next power-of-two bucket so the
+        jit cache compiles one variant per power of two up to the
+        largest batch seen (instead of one per distinct batch size)."""
+        if self.engine.fused_ok:
+            b = len(texts)
+            emb = self.engine.embed(texts)
+            crisp = self.engine.crisp_scores(texts, metadata)
+            bucket = 1 << max(0, (b - 1).bit_length())
+            if bucket != b:
+                pad = ((0, bucket - b), (0, 0))
+                emb = np.pad(emb, pad)
+                crisp = np.pad(crisp, pad)
+            idx, _ = _route_core(
+                jnp.asarray(emb), jnp.asarray(crisp), self.engine.tensors,
+                self._jt, self.tables.n_rules,
+                use_pallas=self.engine.use_pallas,
+                interpret=self.engine.interpret)
+            return np.asarray(idx)[:b]
+        res = self.engine.evaluate(texts, metadata)
+        idx, _ = policy_mod.evaluate_indices(self.tables, res.fired,
+                                             res.confidence)
+        return idx
+
     def route(self, texts: Sequence[str],
               metadata: Optional[Sequence[Dict[str, Any]]] = None
               ) -> List[str]:
         """-> winning route name per request."""
-        res = self.engine.evaluate(texts, metadata)
-        return policy_mod.route_names(self.tables, res.fired, res.confidence)
+        return [self.tables.rule_name(i)
+                for i in self.route_indices(texts, metadata)]
 
     def route_actions(self, texts: Sequence[str], metadata=None) -> List[str]:
-        res = self.engine.evaluate(texts, metadata)
-        return policy_mod.route_batch(self.tables, res.fired, res.confidence)
+        return [self.tables.action_key(i)
+                for i in self.route_indices(texts, metadata)]
 
     def run_test_blocks(self) -> List[Diagnostic]:
         """The M4 empirical half: TEST assertions via the live pipeline."""
@@ -103,8 +154,11 @@ class RouterService:
     def submit(self, texts: Sequence[str], metadata=None,
                max_new_tokens: int = 8) -> List[Request]:
         metadata = metadata or [None] * len(texts)
-        actions = self.route_actions(texts, metadata)
-        names = self.route(texts, metadata)
+        # evaluate the signal pipeline ONCE; actions and route names are
+        # two string views of the same winning indices
+        indices = self.route_indices(texts, metadata)
+        actions = [self.tables.action_key(i) for i in indices]
+        names = [self.tables.rule_name(i) for i in indices]
         reqs = []
         for text, meta, action, rname in zip(texts, metadata, actions, names):
             kind, _, target = action.partition(":")

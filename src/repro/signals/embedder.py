@@ -15,6 +15,7 @@ Both are pure-JAX after construction: ``embed(token_ids | texts)``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import List, Sequence
 
@@ -37,14 +38,26 @@ def _ngrams(text: str, lo: int = 3, hi: int = 5):
 
 
 class HashEmbedder:
+    """Hashed n-gram embedder, vectorized end to end.
+
+    ``embed`` batches every text's n-gram bucket lookups into a single
+    gather from the projection table (FNV-1a runs lockstep over a padded
+    byte matrix instead of per-gram Python loops), and an LRU cache keyed
+    on the exact text makes repeated prototype/query embeddings free —
+    it was the dominant per-request cost in bench_router.py.
+    """
+
     def __init__(self, dim: int = 256, n_buckets: int = 1 << 15,
-                 seed: int = 0):
+                 seed: int = 0, cache_size: int = 8192):
         self.dim = dim
         self.n_buckets = n_buckets
         key = jax.random.PRNGKey(seed)
         self.table = np.asarray(
             jax.random.normal(key, (n_buckets, dim), jnp.float32)
         ) / np.sqrt(dim)
+        self._cache_size = cache_size
+        self._cache: "collections.OrderedDict[str, np.ndarray]" = \
+            collections.OrderedDict()
 
     def _bucket(self, g: str) -> int:
         h = 2166136261
@@ -52,14 +65,68 @@ class HashEmbedder:
             h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
         return h % self.n_buckets
 
-    def embed(self, texts: Sequence[str]) -> np.ndarray:
+    def _buckets(self, grams: List[str]) -> np.ndarray:
+        """Vectorized FNV-1a over a batch of n-grams (bit-identical to
+        ``_bucket``): pad the utf-8 bytes to a (M, L) matrix and run the
+        hash recurrence across all M grams at once, one step per byte
+        position."""
+        enc = [g.encode("utf-8") for g in grams]
+        lens = np.fromiter((len(e) for e in enc), np.int64, len(enc))
+        max_len = int(lens.max())
+        flat = np.frombuffer(b"".join(enc), np.uint8)
+        offs = np.zeros(len(enc), np.int64)
+        np.cumsum(lens[:-1], out=offs[1:])
+        rows = np.repeat(np.arange(len(enc)), lens)
+        cols = np.arange(int(lens.sum())) - np.repeat(offs, lens)
+        data = np.zeros((len(enc), max_len), np.uint64)
+        data[rows, cols] = flat
+        h = np.full(len(enc), 2166136261, np.uint64)
+        for p in range(max_len):
+            active = lens > p
+            h = np.where(active, ((h ^ data[:, p]) * 16777619)
+                         & 0xFFFFFFFF, h)
+        return (h % self.n_buckets).astype(np.intp)
+
+    def _embed_uncached(self, texts: Sequence[str]) -> np.ndarray:
         out = np.zeros((len(texts), self.dim), np.float32)
+        grams: List[str] = []
+        counts = np.zeros(len(texts), np.int64)
         for i, t in enumerate(texts):
-            ids = [self._bucket(g) for g in _ngrams(t)]
-            if ids:
-                out[i] = self.table[np.asarray(ids)].mean(axis=0)
+            before = len(grams)
+            grams.extend(_ngrams(t))
+            counts[i] = len(grams) - before
+        if grams:
+            vecs = self.table[self._buckets(grams)]   # one batched gather
+            off = 0
+            for i, c in enumerate(counts):
+                if c:
+                    out[i] = vecs[off: off + c].mean(axis=0)
+                off += c
         norm = np.linalg.norm(out, axis=1, keepdims=True)
         return out / np.maximum(norm, 1e-8)
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        out = np.empty((len(texts), self.dim), np.float32)
+        miss_pos: List[int] = []
+        miss_texts: List[str] = []
+        for i, t in enumerate(texts):
+            v = self._cache.get(t)
+            if v is None:
+                miss_pos.append(i)
+                miss_texts.append(t)
+            else:
+                self._cache.move_to_end(t)
+                out[i] = v
+        if miss_texts:
+            fresh = self._embed_uncached(miss_texts)
+            for i, t, v in zip(miss_pos, miss_texts, fresh):
+                out[i] = v
+                # copy: caching the row view would pin the whole batch
+                # array for as long as any one row survives in the LRU
+                self._cache[t] = v.copy()
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
+        return out
 
 
 # ---------------------------------------------------------------------------

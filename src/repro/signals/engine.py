@@ -1,5 +1,6 @@
 """Signal engine: batched evaluation of every declared signal, with
-per-group aggregation semantics.
+per-group aggregation semantics — lowered at bind time to one fused
+tensor program.
 
 Binding a RouterConfig to an embedder:
   * GEOMETRIC signals get centroids from their ``candidates`` strings
@@ -11,20 +12,38 @@ Binding a RouterConfig to an embedder:
     (cos+1)/2 — soft, calibration-dependent, exactly the paper's hazard.
   * CRISP signals evaluate in Python (they gate on request metadata).
 
-Aggregation: signals in a ``softmax_exclusive`` SIGNAL_GROUP are
-Voronoi-normalized (Def 1) — optionally through the fused Pallas kernel —
-then thresholded at the group θ; ungrouped probabilistic signals use
-independent thresholding (the conflict-prone baseline the paper starts
-from).
+Fused pipeline (the rule-table-lowering view: compile the whole policy
+to dense tensors once, evaluate as a single program):
+
+  * bind time stacks every probabilistic centroid into one (N, D)
+    matrix plus segment metadata — per-column classifier/geometric
+    calibration mask, signal thresholds, grouped-column indices, group
+    ids, per-column 1/temperature and group-θ vectors, a (G, N_grouped)
+    one-hot membership partition, and a default-member one-hot;
+  * evaluation is ONE (B, D) @ (D, N) GEMM followed by a grouped
+    normalization — either the segment-reduction jnp path or the
+    grouped-Voronoi Pallas kernel (kernels/voronoi.grouped_voronoi),
+    both normalizing every SIGNAL_GROUP in a single launch — then
+    thresholding, default-member fallback, and the scatter back into
+    the full (B, n_signals) layout, all inside one jit-cached function.
+
+Aggregation semantics are unchanged from the interpreted engine (kept
+as ``evaluate_legacy`` for A/B and as the fallback for overlapping
+groups): signals in a ``softmax_exclusive`` SIGNAL_GROUP are
+Voronoi-normalized (Def 1) then thresholded at the group θ; ungrouped
+probabilistic signals use independent thresholding (the conflict-prone
+baseline the paper starts from).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.atoms import AtomKind, SignalAtom
+from repro.core.atoms import AtomKind
 from repro.dsl.compiler import RouterConfig
 from repro.signals.crisp import CRISP_EVALUATORS
 
@@ -48,16 +67,88 @@ class SignalBatchResult:
     confidence: np.ndarray       # (B, n) confidence used for TIER routing
 
 
+def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
+                      t: Dict[str, jnp.ndarray], *,
+                      use_pallas: bool, interpret: bool
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                 jnp.ndarray, jnp.ndarray]:
+    """embeddings + crisp scores -> (raw, normalized, fired, confidence).
+
+    Pure/traceable; ``t`` is the bound tensor bundle from
+    ``SignalEngine._build_tensors``.  One GEMM against the stacked
+    centroids, one grouped normalization over every SIGNAL_GROUP, then
+    thresholds, default fallback and the scatter into full width.
+    """
+    f32 = jnp.float32
+    emb = emb.astype(f32)
+    sims = jax.lax.dot_general(                      # the single GEMM (B, N)
+        emb, t["centroids"], (((1,), (1,)), ((), ())),
+        preferred_element_type=f32)
+    raw_p = jnp.where(t["classifier_mask"][None, :],
+                      (sims + 1.0) * 0.5, sims)
+    fired_p = raw_p >= t["thr_prob"][None, :]
+    normalized_p = raw_p
+    n_groups = t["member"].shape[0]
+    if n_groups:
+        sims_g = jnp.take(sims, t["grouped_cols"], axis=1)
+        if use_pallas:
+            from repro.kernels import voronoi as _vor
+            scores = _vor.grouped_voronoi(
+                sims_g, t["inv_tau"], t["member"], interpret=interpret)
+        else:
+            z = sims_g * t["inv_tau"][None, :]
+            gmax = jax.ops.segment_max(
+                z.T, t["group_id"], num_segments=n_groups).T
+            e = jnp.exp(z - jnp.take(gmax, t["group_id"], axis=1))
+            gsum = jax.ops.segment_sum(
+                e.T, t["group_id"], num_segments=n_groups).T
+            scores = e / jnp.take(gsum, t["group_id"], axis=1)
+        fired_g = scores > t["group_thr"][None, :]
+        # default-member fallback: a group with no member above θ fires
+        # its declared default — one-hot matmuls keep it batched
+        group_any = jax.lax.dot_general(
+            fired_g.astype(f32), t["member"],
+            (((1,), (1,)), ((), ())), preferred_element_type=f32) > 0
+        fallback = jax.lax.dot_general(
+            (~group_any).astype(f32), t["default_onehot"],
+            (((1,), (0,)), ((), ())), preferred_element_type=f32) > 0
+        fired_g = fired_g | fallback
+        normalized_p = normalized_p.at[:, t["grouped_cols"]].set(scores)
+        fired_p = fired_p.at[:, t["grouped_cols"]].set(fired_g)
+    b = emb.shape[0]
+    n = raw_p.shape[1] + crisp_raw.shape[1]
+    raw = jnp.zeros((b, n), f32).at[:, t["prob_cols"]].set(raw_p)
+    normalized = jnp.zeros((b, n), f32).at[:, t["prob_cols"]].set(
+        normalized_p)
+    fired = jnp.zeros((b, n), bool).at[:, t["prob_cols"]].set(fired_p)
+    if crisp_raw.shape[1]:
+        crisp_raw = crisp_raw.astype(f32)
+        raw = raw.at[:, t["crisp_cols"]].set(crisp_raw)
+        normalized = normalized.at[:, t["crisp_cols"]].set(crisp_raw)
+        fired = fired.at[:, t["crisp_cols"]].set(
+            crisp_raw >= t["thr_crisp"][None, :])
+    conf = jnp.where(fired, normalized, 0.0)
+    return raw, normalized, fired, conf
+
+
+# jit-cached once per (shape-signature, flags) across every engine instance
+_SIGNAL_EVAL = jax.jit(_signal_eval_core,
+                       static_argnames=("use_pallas", "interpret"))
+
+
 class SignalEngine:
     def __init__(self, config: RouterConfig, embedder, *,
                  use_pallas: bool = False):
+        from repro.kernels import ops
         self.cfg = config
         self.embedder = embedder
         self.use_pallas = use_pallas
+        self.interpret = ops.default_interpret()
         self.names = sorted(config.signals)
         self.index = {n: i for i, n in enumerate(self.names)}
         self.centroids: Dict[str, np.ndarray] = {}
         self._bind_centroids()
+        self._build_tensors()
 
     # ---- binding -------------------------------------------------------------
     def _prototype_texts(self, name: str) -> List[str]:
@@ -86,10 +177,131 @@ class SignalEngine:
                 self.cfg.signals[name] = dataclasses.replace(
                     sig, centroid=tuple(float(v) for v in c))
 
+    def _build_tensors(self):
+        """Lower the bound policy's signal layer to dense tensors (the
+        compile-once half of the fused pipeline)."""
+        self._prob_names = [n for n in self.names if n in self.centroids]
+        self._crisp_names = [n for n in self.names
+                             if n not in self.centroids]
+        prob_index = {n: i for i, n in enumerate(self._prob_names)}
+        # overlapping groups (a signal in ≥2 groups) keep sequential
+        # last-wins semantics only the interpreted path reproduces
+        seen: Dict[str, int] = {}
+        self._fused_ok = True
+        for group in self.cfg.groups.values():
+            for m in group.names:
+                if m in prob_index:
+                    seen[m] = seen.get(m, 0) + 1
+                    if seen[m] > 1:
+                        self._fused_ok = False
+        grouped_cols: List[int] = []
+        group_id: List[int] = []
+        inv_tau: List[float] = []
+        group_thr: List[float] = []
+        member_rows: List[Tuple[int, int]] = []       # (start, count)
+        default_rows: List[Optional[int]] = []        # grouped-col index
+        gi = 0
+        for group in self.cfg.groups.values():
+            cols = [prob_index[m] for m in group.names if m in prob_index]
+            if not cols:
+                continue
+            start = len(grouped_cols)
+            grouped_cols.extend(cols)
+            group_id.extend([gi] * len(cols))
+            inv_tau.extend([1.0 / group.temperature] * len(cols))
+            group_thr.extend([group.threshold] * len(cols))
+            gi += 1
+            member_rows.append((start, len(cols)))
+            drow = None
+            if group.default is not None and group.default in self.index:
+                pd = prob_index.get(group.default)
+                if pd is not None and pd in cols:
+                    drow = start + cols.index(pd)
+                else:
+                    # default is a declared signal outside the group's
+                    # probabilistic members (crisp or non-member): only
+                    # the interpreted path expresses that fallback
+                    self._fused_ok = False
+            default_rows.append(drow)
+        ng = len(grouped_cols)
+        member = np.zeros((gi, ng), np.float32)
+        default_onehot = np.zeros((gi, ng), np.float32)
+        for g, (start, count) in enumerate(member_rows):
+            member[g, start: start + count] = 1.0
+            if default_rows[g] is not None:
+                default_onehot[g, default_rows[g]] = 1.0
+        dim = (self.centroids[self._prob_names[0]].shape[0]
+               if self._prob_names else 1)
+        centroids = (np.stack([self.centroids[n] for n in self._prob_names])
+                     if self._prob_names else np.zeros((0, dim), np.float32))
+        sigs = self.cfg.signals
+        self.tensors: Dict[str, jnp.ndarray] = {
+            k: jnp.asarray(v) for k, v in {
+                "centroids": centroids,
+                "classifier_mask": np.asarray(
+                    [sigs[n].kind is not AtomKind.GEOMETRIC
+                     for n in self._prob_names], bool),
+                "thr_prob": np.asarray(
+                    [sigs[n].threshold for n in self._prob_names],
+                    np.float32),
+                "thr_crisp": np.asarray(
+                    [sigs[n].threshold for n in self._crisp_names],
+                    np.float32),
+                "prob_cols": np.asarray(
+                    [self.index[n] for n in self._prob_names], np.int32),
+                "crisp_cols": np.asarray(
+                    [self.index[n] for n in self._crisp_names], np.int32),
+                "grouped_cols": np.asarray(grouped_cols, np.int32),
+                "group_id": np.asarray(group_id, np.int32),
+                "inv_tau": np.asarray(inv_tau, np.float32),
+                "group_thr": np.asarray(group_thr, np.float32),
+                "member": member,
+                "default_onehot": default_onehot,
+            }.items()}
+
+    @property
+    def fused_ok(self) -> bool:
+        """True when the bound config lowers to the fused tensor path
+        (always, except overlapping SIGNAL_GROUP memberships)."""
+        return self._fused_ok and bool(self._prob_names)
+
     # ---- evaluation ------------------------------------------------------------
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        return self.embedder.embed(texts)
+
+    def crisp_scores(self, texts: Sequence[str],
+                     metadata: Optional[Sequence[Dict[str, Any]]] = None
+                     ) -> np.ndarray:
+        """(B, n_crisp) crisp scores, columns in ``_crisp_names`` order."""
+        meta = metadata or [None] * len(texts)
+        out = np.zeros((len(texts), len(self._crisp_names)), np.float32)
+        for k, name in enumerate(self._crisp_names):
+            sig = self.cfg.signals[name]
+            f = self.cfg.signal_fields.get(name, {})
+            fn = CRISP_EVALUATORS.get(sig.signal_type)
+            if fn:
+                for i, t in enumerate(texts):
+                    out[i, k] = fn(t, meta[i], f)
+        return out
+
     def evaluate(self, texts: Sequence[str],
                  metadata: Optional[Sequence[Dict[str, Any]]] = None
                  ) -> SignalBatchResult:
+        if not self.fused_ok:
+            return self.evaluate_legacy(texts, metadata)
+        emb = self.embedder.embed(texts)
+        crisp = self.crisp_scores(texts, metadata)
+        raw, normalized, fired, conf = _SIGNAL_EVAL(
+            jnp.asarray(emb), jnp.asarray(crisp), self.tensors,
+            use_pallas=self.use_pallas, interpret=self.interpret)
+        return SignalBatchResult(
+            list(self.names), np.asarray(raw), np.asarray(normalized),
+            np.asarray(fired), np.asarray(conf))
+
+    # ---- legacy interpreted path (A/B oracle + overlapping-group fallback) ----
+    def evaluate_legacy(self, texts: Sequence[str],
+                        metadata: Optional[Sequence[Dict[str, Any]]] = None
+                        ) -> SignalBatchResult:
         b = len(texts)
         n = len(self.names)
         raw = np.zeros((b, n), np.float32)
@@ -140,8 +352,8 @@ class SignalEngine:
     def _voronoi(self, sims: np.ndarray, temperature: float) -> np.ndarray:
         if self.use_pallas:
             from repro.kernels import ops
-            return np.asarray(ops.voronoi_normalize_sims(
-                sims, temperature, interpret=True))
+            # platform-default interpret resolution (compiled on TPU)
+            return np.asarray(ops.voronoi_normalize_sims(sims, temperature))
         z = sims / temperature
         z = z - z.max(axis=-1, keepdims=True)
         e = np.exp(z)

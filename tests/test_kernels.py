@@ -49,6 +49,53 @@ def test_voronoi_thm2_property_through_kernel():
     assert ((s > 0.5 + 1e-6).sum(axis=1) <= 1).all()
 
 
+def _grouped_inputs(sizes, b, seed=0, taus=(0.05, 0.1, 1.0)):
+    """Random sims + shuffled (non-contiguous) group layout."""
+    rng = np.random.default_rng(seed)
+    n = sum(sizes)
+    gid = np.concatenate([[g] * s for g, s in enumerate(sizes)])
+    gid = gid[rng.permutation(n)].astype(np.int32)
+    member = np.zeros((len(sizes), n), np.float32)
+    member[gid, np.arange(n)] = 1.0
+    inv_tau = (1.0 / np.asarray(taus)[gid % len(taus)]).astype(np.float32)
+    sims = rng.uniform(-1, 1, (b, n)).astype(np.float32)
+    return sims, inv_tau, member, gid
+
+
+@pytest.mark.parametrize("b,sizes", [
+    (1, [3, 5, 8]),            # uneven multi-group
+    (33, [2, 2, 2, 2]),        # many small groups, unaligned batch
+    (128, [1, 4, 9, 2]),       # singleton group in the mix
+    (200, [1, 1, 6]),          # mostly singletons
+    (7, [16]),                 # one big group
+])
+def test_grouped_voronoi_parity(b, sizes):
+    sims, inv_tau, member, gid = _grouped_inputs(sizes, b)
+    got = ops.grouped_voronoi(jnp.asarray(sims), jnp.asarray(inv_tau),
+                              jnp.asarray(member), interpret=True)
+    want = ref.grouped_voronoi_ref(jnp.asarray(sims),
+                                   jnp.asarray(inv_tau), gid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+    # each group's scores sum to 1 per row
+    gsum = np.asarray(got) @ member.T
+    np.testing.assert_allclose(gsum, 1.0, atol=1e-4)
+
+
+def test_grouped_voronoi_matches_per_group_kernel():
+    """One launch over all groups == K separate single-group launches."""
+    sims, inv_tau, member, gid = _grouped_inputs([3, 7, 2], 65, seed=3)
+    fused = np.asarray(ops.grouped_voronoi(
+        jnp.asarray(sims), jnp.asarray(inv_tau), jnp.asarray(member),
+        interpret=True))
+    for g in range(member.shape[0]):
+        cols = np.where(gid == g)[0]
+        tau = 1.0 / inv_tau[cols[0]]
+        per_group = np.asarray(ops.voronoi_normalize_sims(
+            jnp.asarray(sims[:, cols]), float(tau), interpret=True))
+        np.testing.assert_allclose(fused[:, cols], per_group, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # decode GQA
 # ---------------------------------------------------------------------------
