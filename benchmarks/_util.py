@@ -1,0 +1,27 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+
+
+def atomic_write_json(path: pathlib.Path, payload: dict) -> None:
+    """Write ``payload`` as JSON via tempfile + rename so a crashed or
+    interrupted benchmark never leaves a truncated BENCH_*.json behind
+    (CI diffs these files across commits)."""
+    path = pathlib.Path(path)
+    text = json.dumps(payload, indent=2, sort_keys=True) + "\n"
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

@@ -1,34 +1,52 @@
 """Signal-pipeline benchmark: legacy per-group interpretation vs the
-fused single-GEMM pipeline vs the grouped-Voronoi Pallas kernel.
+fused single-GEMM pipeline vs the Pallas kernels.
 
-Two sweeps:
+Three sweeps:
 
 * normalization stage — softmax over every SIGNAL_GROUP for synthetic
-  (B, N) similarity matrices, B ∈ {1..4096} and N ∈ {4..256}, comparing
-  the legacy per-group numpy loop, the fused segment-reduction jnp path
-  (jit), and the grouped-Voronoi Pallas kernel (one launch for all
-  groups; interpret-mode on CPU, compiled on TPU);
+  (B, N) similarity matrices, comparing the legacy per-group numpy
+  loop, the fused segment-reduction jnp path (jit), and the
+  grouped-Voronoi Pallas kernel (one launch for all groups);
+* fused kernel — the whole signal layer per (B, N): the PR 1 lowering
+  (XLA GEMM + grouped normalization) vs ``fused_route`` — the single
+  centroid-resident launch that also thresholds and picks per-group
+  winners (interpret-mode on CPU, compiled on TPU);
 * end to end — SignalEngine.evaluate_legacy vs the fused
   SignalEngine.evaluate vs the fully fused RouterService.route_indices
   on bench_router.make_dsl configs.
 
-Emits ``BENCH_signal_pipeline.json`` (repo root) with every timing so
-CI can diff legacy-vs-fused across commits.
+Emits ``BENCH_signal_pipeline.json`` (repo root, tempfile+rename so a
+crash never truncates it) with every timing so CI can diff
+legacy-vs-fused across commits.
+
+``--smoke`` runs the CI gate instead: a small B/N sweep that asserts
+kernel-vs-oracle parity for ``fused_route`` and ``grouped_voronoi``
+against kernels/ref.py (exit 1 on any mismatch) plus a reduced timing
+pass, writing ``BENCH_signal_pipeline_smoke.json``.
 """
 from __future__ import annotations
 
-import json
 import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
-JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
-    "BENCH_signal_pipeline.json"
+try:
+    from benchmarks._util import atomic_write_json
+except ModuleNotFoundError:          # run as a script from benchmarks/
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks._util import atomic_write_json
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+JSON_PATH = ROOT / "BENCH_signal_pipeline.json"
+SMOKE_JSON_PATH = ROOT / "BENCH_signal_pipeline_smoke.json"
+
+DIM = 64
 
 
 def _time(fn, *, reps: int = 20, budget_s: float = 0.5) -> float:
@@ -83,41 +101,94 @@ def _fused_jnp(n_groups: int):
     return f
 
 
-def bench_normalization(results: dict) -> list:
+def _fused_route_inputs(b: int, n: int, seed: int = 0, d: int = DIM):
+    """Unit queries + centroids + full-width column metadata: every
+    column grouped (the router's common case), mixed group sizes."""
+    rng = np.random.default_rng(seed)
+    gid, member, inv_tau = _group_layout(n, seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=-1, keepdims=True)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    c /= np.linalg.norm(c, axis=-1, keepdims=True)
+    cls = np.zeros(n, np.float32)
+    col_thr = np.full(n, 0.51, np.float32)
+    grouped = np.ones(n, np.float32)
+    default = np.zeros_like(member)
+    default[np.arange(member.shape[0]), member.argmax(axis=1)] = 1.0
+    return (x, c, cls, inv_tau, col_thr, grouped, member, default), gid
+
+
+def bench_normalization(results: dict, shapes) -> list:
     lines = []
     rng = np.random.default_rng(1)
-    for b in (1, 16, 256, 4096):
-        for n in (4, 32, 256):
-            gid, member, inv_tau = _group_layout(n)
-            sims = rng.uniform(-1, 1, (b, n)).astype(np.float32)
-            sims_j = jnp.asarray(sims)
-            gid_j = jnp.asarray(gid)
-            inv_j = jnp.asarray(inv_tau)
-            mem_j = jnp.asarray(member)
-            fused = _fused_jnp(member.shape[0])
+    for b, n in shapes:
+        gid, member, inv_tau = _group_layout(n)
+        sims = rng.uniform(-1, 1, (b, n)).astype(np.float32)
+        sims_j = jnp.asarray(sims)
+        gid_j = jnp.asarray(gid)
+        inv_j = jnp.asarray(inv_tau)
+        mem_j = jnp.asarray(member)
+        fused = _fused_jnp(member.shape[0])
 
-            t_legacy = _time(lambda: _legacy_loop(sims, gid, inv_tau))
-            t_jnp = _time(
-                lambda: fused(sims_j, gid_j, inv_j).block_until_ready())
-            t_pl = _time(lambda: ops.grouped_voronoi(
-                sims_j, inv_j, mem_j).block_until_ready())
-            for variant, us in (("legacy_loop", t_legacy),
-                                ("fused_jnp", t_jnp),
-                                ("grouped_pallas", t_pl)):
-                key = f"norm_b{b}_n{n}/{variant}"
-                results[key] = us
-                lines.append(
-                    f"signal_pipeline/{key},{us:.0f},"
-                    f"groups={member.shape[0]}")
+        t_legacy = _time(lambda: _legacy_loop(sims, gid, inv_tau))
+        t_jnp = _time(
+            lambda: fused(sims_j, gid_j, inv_j).block_until_ready())
+        t_pl = _time(lambda: ops.grouped_voronoi(
+            sims_j, inv_j, mem_j).block_until_ready())
+        for variant, us in (("legacy_loop", t_legacy),
+                            ("fused_jnp", t_jnp),
+                            ("grouped_pallas", t_pl)):
+            key = f"norm_b{b}_n{n}/{variant}"
+            results[key] = us
+            lines.append(
+                f"signal_pipeline/{key},{us:.0f},"
+                f"groups={member.shape[0]}")
     return lines
 
 
-def bench_end_to_end(results: dict) -> list:
+def bench_fused_kernel(results: dict, shapes) -> list:
+    """The tentpole A/B: PR 1's GEMM + grouped normalization vs the
+    single centroid-resident ``fused_route`` launch, same inputs."""
+    lines = []
+    for b, n in shapes:
+        (x, c, cls, scale, thr, grouped, member, default), gid = \
+            _fused_route_inputs(b, n)
+        xj, cj = jnp.asarray(x), jnp.asarray(c)
+        scale_j, mem_j = jnp.asarray(scale), jnp.asarray(member)
+        gid_j = jnp.asarray(gid)
+        norm_jnp = _fused_jnp(member.shape[0])
+
+        @jax.jit
+        def gemm_then_jnp(xq):
+            sims = xq @ cj.T
+            return norm_jnp(sims, gid_j, scale_j)
+
+        def gemm_then_pallas(xq):
+            sims = xq @ cj.T
+            return ops.grouped_voronoi(sims, scale_j, mem_j)
+
+        args = tuple(jnp.asarray(a) for a in
+                     (cls, scale, thr, grouped, member, default))
+        t_jnp = _time(lambda: gemm_then_jnp(xj).block_until_ready())
+        t_two = _time(lambda: gemm_then_pallas(xj).block_until_ready())
+        t_fr = _time(lambda: ops.fused_route(xj, cj, *args)[1]
+                     .block_until_ready())
+        for variant, us in (("gemm_grouped_jnp", t_jnp),
+                            ("gemm_grouped_pallas", t_two),
+                            ("fused_route", t_fr)):
+            key = f"fused_b{b}_n{n}/{variant}"
+            results[key] = us
+            lines.append(f"signal_pipeline/{key},{us:.0f},"
+                         f"groups={member.shape[0]}")
+    return lines
+
+
+def bench_end_to_end(results: dict, n_routes_sweep=(4, 16, 64)) -> list:
     from benchmarks.bench_router import make_dsl
     from repro.serving.router import RouterService
     lines = []
     queries = [f"query about topic {i} alpha" for i in range(64)]
-    for n_routes in (4, 16, 64):
+    for n_routes in n_routes_sweep:
         svc = RouterService(make_dsl(n_routes), load_backends=False,
                             validate=False)
         svc.engine.evaluate(queries)        # warm jit + embed cache
@@ -137,16 +208,84 @@ def bench_end_to_end(results: dict) -> list:
         results[f"e2e_n{n_routes}_b64/speedup"] = t_legacy / t_fused
         lines.append(f"signal_pipeline/e2e_n{n_routes}_b64/speedup,0,"
                      f"x{t_legacy / t_fused:.1f}")
+        # the fully-fused kernel engine (interpret-mode Pallas on CPU;
+        # the honest A/B belongs on TPU where the kernel compiles)
+        svc_k = RouterService(make_dsl(n_routes), load_backends=False,
+                              validate=False, kernel="fused")
+        svc_k.engine.evaluate(queries)
+        t_kernel = _time(lambda: svc_k.engine.evaluate(queries), reps=5)
+        key = f"e2e_n{n_routes}_b64/engine_fused_route"
+        results[key] = t_kernel
+        lines.append(f"signal_pipeline/{key},{t_kernel:.0f},"
+                     f"qps={64 / (t_kernel / 1e6):.0f}")
     return lines
 
 
-def main():
+def check_parity(shapes, atol: float = 1e-5) -> list:
+    """fused_route + grouped_voronoi vs the kernels/ref.py oracles over
+    a B×N sweep.  -> list of mismatch descriptions (empty == parity)."""
+    failures = []
+    for b, n in shapes:
+        args, gid = _fused_route_inputs(b, n, seed=b + n)
+        jargs = tuple(jnp.asarray(a) for a in args)
+        got = ops.fused_route(*jargs)
+        want = ref.fused_route_ref(*args)
+        names = ("raw", "scores", "fired", "win", "wscore")
+        for name, a, w in zip(names, got, want):
+            a, w = np.asarray(a), np.asarray(w)
+            ok = ((a == w).all() if a.dtype in (np.bool_, np.int32)
+                  else np.allclose(a, w, atol=atol))
+            if not ok:
+                failures.append(f"fused_route b={b} n={n} output={name}")
+        sims = np.asarray(args[0] @ args[1].T, np.float32)
+        got_g = ops.grouped_voronoi(jnp.asarray(sims),
+                                    jnp.asarray(args[3]),
+                                    jnp.asarray(args[6]))
+        want_g = ref.grouped_voronoi_ref(jnp.asarray(sims),
+                                         jnp.asarray(args[3]), gid)
+        if not np.allclose(np.asarray(got_g), np.asarray(want_g),
+                           atol=atol):
+            failures.append(f"grouped_voronoi b={b} n={n}")
+    return failures
+
+
+SMOKE_SHAPES = [(1, 8), (16, 33), (64, 128), (7, 130)]
+FULL_NORM_SHAPES = [(b, n) for b in (1, 16, 256, 4096)
+                    for n in (4, 32, 256)]
+FULL_FUSED_SHAPES = [(b, n) for b in (16, 256, 1024)
+                     for n in (8, 64, 256)]
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
     results: dict = {}
-    lines = bench_normalization(results)
+    lines = []
+    if smoke:
+        failures = check_parity(SMOKE_SHAPES)
+        for f in failures:
+            print(f"signal_pipeline/PARITY_MISMATCH,0,{f}",
+                  file=sys.stderr)
+        lines += bench_normalization(results, shapes=[(16, 33)])
+        lines += bench_fused_kernel(results, shapes=[(16, 33), (7, 130)])
+        results["parity_failures"] = len(failures)
+        atomic_write_json(SMOKE_JSON_PATH, {
+            "unit": "us_per_call", "mode": "smoke",
+            "parity_shapes": SMOKE_SHAPES, "results": results})
+        lines.append(f"signal_pipeline/json,0,{SMOKE_JSON_PATH.name}")
+        lines.append(f"signal_pipeline/parity,0,"
+                     f"{'FAIL' if failures else 'ok'}"
+                     f"({len(SMOKE_SHAPES)} shapes)")
+        for ln in lines:
+            print(ln)
+        if failures:
+            raise SystemExit(1)
+        return lines
+    lines += bench_normalization(results, shapes=FULL_NORM_SHAPES)
+    lines += bench_fused_kernel(results, shapes=FULL_FUSED_SHAPES)
     lines += bench_end_to_end(results)
-    JSON_PATH.write_text(json.dumps(
-        {"unit": "us_per_call", "results": results}, indent=2,
-        sort_keys=True) + "\n")
+    atomic_write_json(JSON_PATH, {"unit": "us_per_call",
+                                  "results": results})
     lines.append(f"signal_pipeline/json,0,{JSON_PATH.name}")
     for ln in lines:
         print(ln)

@@ -16,12 +16,18 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import pathlib
 import sys
 import time
 import traceback
 
 
 def main() -> None:
+    try:
+        import benchmarks                                    # noqa: F401
+    except ModuleNotFoundError:    # invoked as `python benchmarks/run.py`
+        sys.path.insert(0,
+                        str(pathlib.Path(__file__).resolve().parent.parent))
     from benchmarks import (bench_cofire, bench_hierarchy, bench_kernels,
                             bench_moe_voronoi, bench_roofline,
                             bench_router, bench_running_example,
@@ -40,21 +46,34 @@ def main() -> None:
         ("roofline", bench_roofline.main),
     ]
     only = set(sys.argv[1:])
+    unknown = only - {name for name, _ in suites}
+    if unknown:
+        print(f"unknown suite name(s): {sorted(unknown)}; choose from "
+              f"{[name for name, _ in suites]}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
-    failures = 0
+    failed = []
     for name, fn in suites:
         if only and name not in only:
             continue
         t0 = time.time()
         try:
             fn()
+        except SystemExit as e:                # a suite's own gate tripped
+            if e.code not in (None, 0):
+                failed.append(name)
+                print(f"{name}/SUITE_FAILED,0,exit={e.code}",
+                      file=sys.stderr)
         except Exception:                      # noqa: BLE001
-            failures += 1
+            failed.append(name)
             print(f"{name}/SUITE_FAILED,0,{traceback.format_exc(limit=2)!r}",
                   file=sys.stderr)
         print(f"# suite {name} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
-    if failures:
+    if failed:
+        # echo the verdict on stdout too so a piped CSV consumer can't
+        # mistake a half-failed sweep for a clean one
+        print(f"run/FAILED_SUITES,0,{'+'.join(failed)}")
         sys.exit(1)
 
 

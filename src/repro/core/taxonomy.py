@@ -85,6 +85,10 @@ def condition_level(cond: Cond, signals: Dict[str, SignalAtom]) -> Decidability:
 @dataclasses.dataclass
 class TaxonomyConfig:
     probable_conflict_eps: float = 0.01    # min co-fire mass to report T4
+    # caps whose separation margin is this deep into overlap are a T4
+    # hazard regardless of the assumed query mixture: the co-fire region
+    # is wide even when the vMF mass estimate under ``kappa`` is tiny
+    deep_overlap_margin_rad: float = 0.25
     soft_shadow_eps: float = 0.05          # min against-evidence mass for T5
     mc_samples: int = 20_000
     # vMF concentration for the realistic query mixture scales with the
@@ -165,14 +169,19 @@ class ConflictDetector:
                 [ca, cb], query_dist="vmf",
                 mixture_kappa=self.cfg.kappa(ca.centroid.shape[0]),
                 n_samples=self.cfg.mc_samples, seed=self.cfg.seed)
-            if p >= self.cfg.probable_conflict_eps:
-                margin = geometry.cap_separation_margin(ca, cb)
+            margin = geometry.cap_separation_margin(ca, cb)
+            deep = margin <= -self.cfg.deep_overlap_margin_rad
+            if p >= self.cfg.probable_conflict_eps or deep:
                 out.append(Finding(
                     ConflictType.PROBABLE_CONFLICT, Decidability.GEOMETRIC,
                     (hi.name, lo.name),
                     f"embedding signals {a!r} and {b!r} have intersecting "
                     f"activation caps (separation margin {margin:.3f} rad); "
-                    f"estimated co-fire mass {p:.1%}",
+                    f"estimated co-fire mass {p:.1%}"
+                    + (" — deep overlap: boundary queries co-fire even "
+                       "where the modeled query mixture is thin"
+                       if deep and p < self.cfg.probable_conflict_eps
+                       else ""),
                     evidence={"cofire_prob": p, "margin_rad": margin,
                               "signals": (a, b)},
                     fix_hint="declare both in a SIGNAL_GROUP with "

@@ -57,6 +57,23 @@ def grouped_voronoi(sims, inv_tau, member, *, interpret=None,
                                 block_b=block_b, interpret=interp)
 
 
+def fused_route(x, centroids, classifier_mask, col_scale, col_thr,
+                grouped_mask, member, default_onehot, *, interpret=None,
+                use_ref=False, block_b: int = 128, block_n: int = 128):
+    """Fully-fused signal layer: GEMM (centroids resident) + grouped
+    softmax + thresholds/defaults + per-group winners, one launch.
+    -> (raw, scores, fired, win, wscore); see kernels/voronoi.fused_route."""
+    if use_ref:
+        return _ref.fused_route_ref(x, centroids, classifier_mask,
+                                    col_scale, col_thr, grouped_mask,
+                                    member, default_onehot)
+    interp = _default_interpret() if interpret is None else interpret
+    return _vor.fused_route(x, centroids, classifier_mask, col_scale,
+                            col_thr, grouped_mask, member, default_onehot,
+                            block_b=block_b, block_n=block_n,
+                            interpret=interp)
+
+
 def decode_gqa(q, k, v, n_valid, *, interpret=None, use_ref=False,
                block_s: int = 512):
     if use_ref:

@@ -34,6 +34,58 @@ def grouped_voronoi_ref(sims, inv_tau, group_id):
     return out
 
 
+def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
+                    grouped_mask, member, default_onehot):
+    """Oracle for the fully-fused routing kernel, one group at a time.
+
+    x: (B, D); centroids: (N, D); classifier_mask/col_scale/col_thr/
+    grouped_mask: (N,); member/default_onehot: (G, N) one-hot.
+    -> (raw (B,N), scores (B,N), fired (B,N) bool,
+        win (B,G) int32, wscore (B,G)) — same contract as
+    kernels/voronoi.fused_route.
+    """
+    import numpy as np
+    x = np.asarray(x, np.float32)
+    c = np.asarray(centroids, np.float32)
+    cls = np.asarray(classifier_mask).astype(bool)
+    scale = np.asarray(col_scale, np.float32)
+    thr = np.asarray(col_thr, np.float32)
+    grouped = np.asarray(grouped_mask).astype(bool)
+    m = np.asarray(member, np.float32)
+    d = np.asarray(default_onehot, np.float32)
+    g = m.shape[0]
+    b = x.shape[0]
+
+    sims = x @ c.T
+    raw = np.where(cls[None, :], (sims + 1.0) * 0.5, sims)
+    z = sims * scale[None, :]
+    scores = raw.copy()
+    for gi in range(g):
+        cols = m[gi] > 0
+        if not cols.any():
+            continue
+        zg = z[:, cols]
+        zg = zg - zg.max(axis=-1, keepdims=True)
+        e = np.exp(zg)
+        scores[:, cols] = e / e.sum(axis=-1, keepdims=True)
+    fired = np.where(grouped[None, :], scores > thr[None, :],
+                     raw >= thr[None, :])
+    win = np.zeros((b, g), np.int32)
+    wscore = np.full((b, g), -1.0, np.float32)
+    for gi in range(g):
+        cols = np.where(m[gi] > 0)[0]
+        if cols.size:
+            none = ~fired[:, cols].any(axis=1)
+            dcols = np.where(d[gi] > 0)[0]
+            if dcols.size:
+                fired[none[:, None] & (np.arange(fired.shape[1])[None, :]
+                                       == dcols[0])] = True
+            sg = scores[:, cols]
+            win[:, gi] = cols[np.argmax(sg, axis=-1)]
+            wscore[:, gi] = sg.max(axis=-1)
+    return raw, scores, fired, win, wscore
+
+
 def decode_gqa_ref(q, k, v, n_valid):
     """q: (B,H,hd); k/v: (B,S,KV,hd); n_valid: scalar."""
     b, h, hd = q.shape

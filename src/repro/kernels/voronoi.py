@@ -8,6 +8,13 @@ Three entry points:
   the numerically-stable softmax fuse in one kernel.
 * ``voronoi_normalize_sims`` — softmax(S / τ) over precomputed
   similarities for a single group.
+* ``fused_route`` — the whole signal layer in one launch: the
+  (B, D)·(D, N) similarity GEMM against the stacked centroid matrix
+  (centroids resident in VMEM, tiled over N through a fori_loop
+  accumulator so centroid counts beyond one VMEM block stream through
+  MXU-sized tiles), classifier calibration, the segment-masked grouped
+  softmax, per-column thresholds with per-group default fallback, and
+  per-group winner indices + scores — five outputs, one kernel.
 * ``grouped_voronoi`` — the *whole policy's* groups in one launch:
   given the stacked similarity matrix S (B, N) for every probabilistic
   signal, a per-column 1/τ vector, and a (G, N) one-hot membership
@@ -87,24 +94,23 @@ def voronoi_scores(x: jnp.ndarray, centroids: jnp.ndarray,
 _NEG = -3e38                   # finite -inf stand-in: 0 * _NEG == 0, not nan
 
 
-def _grouped_voronoi_kernel(s_ref, scale_ref, member_ref, o_ref):
-    """Segment-masked, numerically stable softmax over every group at once.
+def _softmax_by_group(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Segment-masked, numerically stable softmax over every group at
+    once — the shared value-level body of the grouped kernels.
 
-    s_ref:      (bb, N) raw similarities for this batch block
-    scale_ref:  (1, N)  per-column 1/temperature (constant within a group)
-    member_ref: (G, N)  one-hot group membership — a partition: every
-                column belongs to exactly one group row
-    o_ref:      (bb, N) per-column softmax over the column's group
+    z: (bb, N) scaled logits; m: (G, N) one-hot group membership (at
+    most one group per column; columns in no group get a harmless
+    guarded value the caller must mask out).  -> (bb, N) where member
+    column j holds the softmax of group(j) restricted to its columns.
 
     The per-group max is computed with a fori_loop over the (static) G
     group rows; the max/denominator broadcast back to columns and the
     per-group sum both ride the MXU as one-hot matmuls, so the whole
     batch needs exactly one kernel launch regardless of group count.
     """
-    s = s_ref[...].astype(jnp.float32)                        # (bb, N)
-    z = s * scale_ref[...]                                    # (bb, N)
-    m = member_ref[...].astype(jnp.float32)                   # (G, N)
+    f32 = jnp.float32
     n_groups = m.shape[0]
+    covered = jnp.sum(m, axis=0, keepdims=True) > 0.0         # (1, N)
 
     def _gmax(g, acc):
         row = jax.lax.dynamic_slice_in_dim(m, g, 1, axis=0)   # (1, N)
@@ -114,18 +120,29 @@ def _grouped_voronoi_kernel(s_ref, scale_ref, member_ref, o_ref):
 
     gmax = jax.lax.fori_loop(
         0, n_groups, _gmax,
-        jnp.full((z.shape[0], n_groups), _NEG, jnp.float32))  # (bb, G)
+        jnp.full((z.shape[0], n_groups), _NEG, f32))          # (bb, G)
     col_max = jax.lax.dot_general(                            # (bb, N)
-        gmax, m, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    e = jnp.exp(z - col_max)                                  # ≤ 1, max is 1
+        gmax, m, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    e = jnp.exp(jnp.where(covered, z - col_max, 0.0))         # ≤ 1 covered
     gsum = jax.lax.dot_general(                               # (bb, G)
-        e, m, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        e, m, (((1,), (1,)), ((), ())), preferred_element_type=f32)
     denom = jax.lax.dot_general(                              # (bb, N) ≥ 1
-        gsum, m, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    o_ref[...] = (e / denom).astype(o_ref.dtype)
+        gsum, m, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    return e / jnp.maximum(denom, 1e-30)     # guard: uncovered denom == 0
+
+
+def _grouped_voronoi_kernel(s_ref, scale_ref, member_ref, o_ref):
+    """One launch for the whole partition: see ``_softmax_by_group``.
+
+    s_ref:      (bb, N) raw similarities for this batch block
+    scale_ref:  (1, N)  per-column 1/temperature (constant within a group)
+    member_ref: (G, N)  one-hot group membership — a partition: every
+                column belongs to exactly one group row
+    o_ref:      (bb, N) per-column softmax over the column's group
+    """
+    z = s_ref[...].astype(jnp.float32) * scale_ref[...]       # (bb, N)
+    m = member_ref[...].astype(jnp.float32)                   # (G, N)
+    o_ref[...] = _softmax_by_group(z, m).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
@@ -153,6 +170,164 @@ def grouped_voronoi(sims: jnp.ndarray, inv_tau: jnp.ndarray,
         interpret=interpret,
     )(sims, scale, memberf)
     return out[:b]
+
+
+def _fused_route_kernel(x_ref, c_ref, cls_ref, scale_ref, thr_ref,
+                        grouped_ref, member_ref, default_ref,
+                        raw_ref, scores_ref, fired_ref, win_ref,
+                        wscore_ref, *, block_n: int):
+    """The whole signal layer for one query block, single launch.
+
+    x_ref:       (bb, D)   unit query embeddings
+    c_ref:       (Np, D)   stacked centroid matrix, VMEM-resident
+    cls_ref:     (1, Np)   1.0 where the column is a classifier signal
+                 (raw = (sim+1)/2 calibration), 0.0 for geometric
+    scale_ref:   (1, Np)   1/temperature for grouped columns, 1.0 else
+    thr_ref:     (1, Np)   group θ for grouped columns, the signal's own
+                 threshold for ungrouped ones (padded columns: > 1)
+    grouped_ref: (1, Np)   1.0 where the column belongs to a SIGNAL_GROUP
+    member_ref:  (G, Np)   one-hot partition of the grouped columns
+    default_ref: (G, Np)   one-hot default member per group (may be zero)
+
+    Emits raw calibrated scores, grouped-normalized scores, fired mask
+    (thresholds + default fallback), and the per-group winner column +
+    winning score.  The similarity GEMM runs tiled over N: each
+    fori_loop step dots the query block against one (block_n, D) slice
+    of the resident centroids and accumulates into the (bb, Np) buffer,
+    so N beyond one MXU tile streams instead of issuing one huge dot.
+    """
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)                                # (bb, D)
+    c = c_ref[...].astype(f32)                                # (Np, D)
+    npad = c.shape[0]
+    n_tiles = npad // block_n
+
+    def _tile(j, acc):
+        cj = jax.lax.dynamic_slice_in_dim(c, j * block_n, block_n, axis=0)
+        sims_j = jax.lax.dot_general(
+            x, cj, (((1,), (1,)), ((), ())),
+            preferred_element_type=f32)                       # (bb, bn)
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, sims_j, j * block_n, axis=1)
+
+    sims = jax.lax.fori_loop(
+        0, n_tiles, _tile, jnp.zeros((x.shape[0], npad), f32))
+
+    cls = cls_ref[...]                                        # (1, Np)
+    grouped = grouped_ref[...] > 0.0                          # (1, Np)
+    thr = thr_ref[...]
+    raw = jnp.where(cls > 0.0, (sims + 1.0) * 0.5, sims)
+    z = sims * scale_ref[...]
+    m = member_ref[...].astype(f32)                           # (G, Np)
+    n_groups = m.shape[0]
+    scores = jnp.where(grouped, _softmax_by_group(z, m), raw)
+
+    # grouped columns threshold strictly at the group θ; ungrouped use
+    # the signal's own inclusive threshold (engine semantics, Def 1)
+    fired = jnp.where(grouped, scores > thr, raw >= thr)
+    group_any = jax.lax.dot_general(                          # (bb, G)
+        fired.astype(f32), m, (((1,), (1,)), ((), ())),
+        preferred_element_type=f32) > 0.0
+    fallback = jax.lax.dot_general(                           # (bb, Np)
+        (~group_any).astype(f32), default_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=f32) > 0.0
+    fired = fired | fallback
+
+    def _win(g, carry):
+        win, wsc = carry
+        row = jax.lax.dynamic_slice_in_dim(m, g, 1, axis=0)   # (1, Np)
+        sg = jnp.where(row > 0.0, scores, -1.0)               # scores ≥ 0
+        idx = jnp.argmax(sg, axis=-1).astype(jnp.int32)       # (bb,)
+        best = jnp.max(sg, axis=-1)
+        win = jax.lax.dynamic_update_slice_in_dim(
+            win, idx[:, None], g, axis=1)
+        wsc = jax.lax.dynamic_update_slice_in_dim(
+            wsc, best[:, None], g, axis=1)
+        return win, wsc
+
+    win, wscore = jax.lax.fori_loop(
+        0, n_groups, _win,
+        (jnp.zeros((z.shape[0], n_groups), jnp.int32),
+         jnp.full((z.shape[0], n_groups), -1.0, f32)))
+
+    raw_ref[...] = raw
+    scores_ref[...] = scores
+    fired_ref[...] = fired.astype(f32)
+    win_ref[...] = win
+    wscore_ref[...] = wscore
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n",
+                                             "interpret"))
+def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
+                classifier_mask: jnp.ndarray, col_scale: jnp.ndarray,
+                col_thr: jnp.ndarray, grouped_mask: jnp.ndarray,
+                member: jnp.ndarray, default_onehot: jnp.ndarray, *,
+                block_b: int = 128, block_n: int = 128,
+                interpret: bool = False):
+    """Fully-fused signal layer: one launch from embeddings to fired
+    activations and per-group winners.
+
+    x: (B, D) unit queries; centroids: (N, D) stacked centroid matrix;
+    classifier_mask/col_scale/col_thr/grouped_mask: (N,) per-column
+    metadata; member/default_onehot: (G, N) one-hot partition + default.
+    -> (raw (B,N) f32, scores (B,N) f32, fired (B,N) bool,
+        win (B,G) int32 global column index, wscore (B,G) f32).
+    """
+    b, d = x.shape
+    n = centroids.shape[0]
+    g = member.shape[0]
+    f32 = jnp.float32
+    x, bb, nb = _pad_rows(x, block_b)
+    bn = max(1, min(block_n, n))
+    pad_n = (-n) % bn
+    npad = n + pad_n
+    gp = max(g, 1)
+
+    cmat = jnp.zeros((npad, d), f32).at[:n].set(
+        jnp.asarray(centroids, f32))
+    row = lambda v, fill: jnp.full((1, npad), fill, f32).at[0, :n].set(
+        jnp.asarray(v, f32))
+    cls = row(classifier_mask, 0.0)
+    scale = row(col_scale, 0.0)
+    thr = row(col_thr, 2.0)            # padded columns can never fire
+    grp = row(grouped_mask, 0.0)
+    memberp = jnp.zeros((gp, npad), f32).at[:g, :n].set(
+        jnp.asarray(member, f32))
+    defaultp = jnp.zeros((gp, npad), f32).at[:g, :n].set(
+        jnp.asarray(default_onehot, f32))
+
+    raw, scores, fired, win, wscore = pl.pallas_call(
+        functools.partial(_fused_route_kernel, block_n=bn),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((npad, d), lambda i: (0, 0)),   # resident centroids
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((gp, npad), lambda i: (0, 0)),
+            pl.BlockSpec((gp, npad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, npad), lambda i: (i, 0)),
+            pl.BlockSpec((bb, npad), lambda i: (i, 0)),
+            pl.BlockSpec((bb, npad), lambda i: (i, 0)),
+            pl.BlockSpec((bb, gp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, gp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], npad), f32),
+            jax.ShapeDtypeStruct((x.shape[0], npad), f32),
+            jax.ShapeDtypeStruct((x.shape[0], npad), f32),
+            jax.ShapeDtypeStruct((x.shape[0], gp), jnp.int32),
+            jax.ShapeDtypeStruct((x.shape[0], gp), f32),
+        ],
+        interpret=interpret,
+    )(x, cmat, cls, scale, thr, grp, memberp, defaultp)
+    return (raw[:b, :n], scores[:b, :n], fired[:b, :n] > 0.5,
+            win[:b, :g], wscore[:b, :g])
 
 
 def _softmax_kernel(s_ref, inv_tau_ref, o_ref):

@@ -1,11 +1,33 @@
-"""Request batching: queue requests, group by backend, emit fixed-size
-padded batches for the decode loop (continuous-batching-lite)."""
+"""Request batching for the serving loop.
+
+Two batchers share the ``Request`` record:
+
+* ``Batcher`` — the original FIFO grouping: queue requests per backend,
+  emit fixed-size batches, fullest queue first (kept for the one-shot
+  ``RouterService.submit`` path and as the simple baseline).
+* ``ContinuousBatcher`` — the continuous-batching admission layer:
+  per-backend admission queues, deadline-aware batch formation into the
+  power-of-two buckets the jit cache compiles for, and in-flight
+  coalescing of duplicate texts (a request whose (backend, text,
+  max_new_tokens) triple is already queued rides the queued leader
+  instead of occupying a decode slot; the embedder LRU already makes
+  its routing free).
+
+Batch formation policy (``ready``/``next_batch``): a backend queue
+releases a batch when it can fill ``max_batch`` slots, when its oldest
+request has waited ``max_wait_s``, or when any queued request's deadline
+is within ``deadline_margin_s`` of *now* — whichever comes first.
+Under-full releases take the whole queue and rely on the bucket padding
+downstream; full releases are exactly ``max_batch`` (keep it a power of
+two so decode shapes stay in the compiled bucket set).
+"""
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import defaultdict, deque
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 _req_counter = itertools.count()
 
@@ -22,6 +44,11 @@ class Request:
     backend: str = ""
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # continuous-batching bookkeeping:
+    arrival_s: Optional[float] = None     # admission clock stamp
+    deadline_s: Optional[float] = None    # absolute; None = best-effort
+    followers: List["Request"] = dataclasses.field(default_factory=list)
+    coalesced: bool = False               # True = riding a leader
 
 
 class Batcher:
@@ -45,3 +72,123 @@ class Batcher:
         if not self.queues[backend]:
             del self.queues[backend]
         return backend, batch
+
+
+class ContinuousBatcher:
+    """Deadline-aware admission queues with duplicate-text coalescing."""
+
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.005,
+                 deadline_margin_s: float = 0.010,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.deadline_margin_s = deadline_margin_s
+        self.clock = clock
+        self.queues: Dict[str, deque] = defaultdict(deque)
+        # (backend, text, max_new_tokens) -> queued leader, for coalescing
+        self._inflight: Dict[Tuple[str, str, int], Request] = {}
+        self.stats = {"admitted": 0, "coalesced": 0, "batches": 0,
+                      "flushed_by_deadline": 0, "flushed_by_wait": 0}
+
+    # ---- admission ---------------------------------------------------------
+    def admit(self, req: Request, now: Optional[float] = None) -> Request:
+        """Queue ``req``; -> the request actually occupying a decode slot
+        (the queued leader when ``req`` coalesces onto a duplicate)."""
+        now = self.clock() if now is None else now
+        if req.arrival_s is None:
+            req.arrival_s = now
+        self.stats["admitted"] += 1
+        key = (req.backend, req.text, req.max_new_tokens)
+        leader = self._inflight.get(key)
+        if leader is not None:
+            leader.followers.append(req)
+            req.coalesced = True
+            self.stats["coalesced"] += 1
+            # the batch must honor the earliest deadline among riders
+            if req.deadline_s is not None and (
+                    leader.deadline_s is None
+                    or req.deadline_s < leader.deadline_s):
+                leader.deadline_s = req.deadline_s
+            return leader
+        self._inflight[key] = req
+        self.queues[req.backend].append(req)
+        return req
+
+    def pending(self) -> int:
+        """Decode slots waiting (coalesced followers don't count)."""
+        return sum(len(q) for q in self.queues.values())
+
+    def pending_requests(self) -> int:
+        """All admitted, un-served requests, followers included."""
+        return sum(1 + len(r.followers)
+                   for q in self.queues.values() for r in q)
+
+    # ---- batch formation ---------------------------------------------------
+    def _urgency(self, q: deque, now: float) -> Tuple[bool, str]:
+        if len(q) >= self.max_batch:
+            return True, "full"
+        head = q[0]
+        if now - head.arrival_s >= self.max_wait_s:
+            return True, "wait"
+        if any(r.deadline_s is not None
+               and r.deadline_s - now <= self.deadline_margin_s
+               for r in q):
+            return True, "deadline"
+        return False, ""
+
+    def ready(self, now: Optional[float] = None) -> List[str]:
+        """Backends whose queue should release a batch *now*."""
+        now = self.clock() if now is None else now
+        return [b for b, q in self.queues.items()
+                if q and self._urgency(q, now)[0]]
+
+    _URGENCY_RANK = {"deadline": 2, "wait": 1, "full": 0, "": -1}
+
+    def next_batch(self, now: Optional[float] = None, force: bool = False
+                   ) -> Optional[Tuple[str, List[Request]]]:
+        """-> (backend, batch) from the most urgent ready queue, or None.
+
+        Selection ranks deadline-imminent queues above waited-too-long
+        ones above merely-full ones (queue length breaks ties), so a
+        backend kept permanently full by heavy traffic cannot starve
+        another backend's SLO request.  ``force=True`` releases the
+        fullest queue regardless of readiness (drain / shutdown).  Full
+        queues emit exactly ``max_batch`` requests; urgency flushes emit
+        the whole queue and leave padding to the power-of-two buckets
+        downstream.
+        """
+        now = self.clock() if now is None else now
+        scored = []
+        for b, q in self.queues.items():
+            if not q:
+                continue
+            urgent, why = self._urgency(q, now)
+            if urgent or force:
+                scored.append((self._URGENCY_RANK[why], len(q), b, why))
+        if not scored:
+            return None
+        _, _, backend, why = max(scored, key=lambda s: (s[0], s[1]))
+        q = self.queues[backend]
+        if why == "deadline":
+            self.stats["flushed_by_deadline"] += 1
+        elif why == "wait":
+            self.stats["flushed_by_wait"] += 1
+        batch = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        for r in batch:
+            self._inflight.pop((r.backend, r.text, r.max_new_tokens), None)
+        if not q:
+            del self.queues[backend]
+        self.stats["batches"] += 1
+        return backend, batch
+
+
+def finish_request(req: Request) -> int:
+    """Mark ``req`` done and fan its output out to coalesced followers.
+    -> number of requests completed (leader + followers)."""
+    req.done = True
+    for f in req.followers:
+        f.output_tokens = list(req.output_tokens)
+        f.done = True
+    n = 1 + len(req.followers)
+    req.followers = []
+    return n

@@ -15,8 +15,19 @@ enter ``_route_core`` (signal GEMM + grouped Voronoi normalization +
 thresholds/default fallback + policy argmax) and route *indices* come
 out — ``route``, ``route_actions`` and ``submit`` all derive their
 strings from that single evaluation, so a ``submit`` batch embeds and
-scores exactly once.  The jitted callable and the device-resident
-``PolicyTables`` are cached on the service across request batches.
+scores exactly once.  With ``kernel="fused"`` (the TPU default) the
+whole signal layer additionally collapses into the single
+centroid-resident ``fused_route`` Pallas launch.  The jitted callable
+and the device-resident ``PolicyTables`` are cached on the service
+across request batches.
+
+Serving runs in two modes: the one-shot ``submit``/``step``/``drain``
+path (FIFO ``Batcher``), and the continuous-batching loop —
+``enqueue`` admits requests with optional SLO deadlines into
+per-backend admission queues (duplicate in-flight texts coalesce onto
+one decode slot), ``serve_step`` releases the most urgent ready batch
+(full / waited-too-long / deadline-imminent) into the decode loop, and
+``serve_forever`` drives steps until idle.
 
 Backends are real JAX models (reduced configs on CPU; the full configs
 are exercised by launch/dryrun.py on the production mesh).
@@ -36,19 +47,22 @@ from repro.dsl.compiler import RouterConfig, compile_text
 from repro.dsl.validate import Diagnostic, Validator, has_errors
 from repro.models.model import build_model
 from repro.serving import policy as policy_mod
-from repro.serving.batcher import Batcher, Request
+from repro.serving.batcher import (Batcher, ContinuousBatcher, Request,
+                                   finish_request)
 from repro.signals import engine as engine_mod
 from repro.signals.embedder import HashEmbedder
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_rules", "use_pallas", "interpret"))
-def _route_core(emb, crisp_raw, tensors, jt, n_rules, use_pallas,
+                   static_argnames=("n_rules", "kernel_mode", "interpret"))
+def _route_core(emb, crisp_raw, tensors, jt, n_rules, kernel_mode,
                 interpret):
     """embeddings + crisp scores -> (route index, score): the whole
-    signal pipeline and the policy argmax as one XLA program."""
+    signal pipeline and the policy argmax as one XLA program.
+    ``kernel_mode`` picks the signal lowering (jnp / grouped Pallas /
+    the fully-fused centroid-resident fused_route kernel)."""
     _, _, fired, conf = engine_mod._signal_eval_core(
-        emb, crisp_raw, tensors, use_pallas=use_pallas,
+        emb, crisp_raw, tensors, kernel_mode=kernel_mode,
         interpret=interpret)
     return policy_mod.evaluate_policy(jt, n_rules, fired, conf)
 
@@ -68,6 +82,7 @@ class RouterService:
     def __init__(self, dsl_text: str, *, embedder=None,
                  load_backends: bool = True, max_batch: int = 8,
                  use_pallas_voronoi: bool = False,
+                 kernel: Optional[str] = None,
                  validate: bool = True, run_taxonomy: bool = False):
         from repro.signals.engine import SignalEngine
         self.config: RouterConfig = compile_text(dsl_text)
@@ -81,10 +96,12 @@ class RouterService:
                 raise ValueError(f"config has validation errors:\n{msgs}")
         self.embedder = embedder or HashEmbedder()
         self.engine = SignalEngine(self.config, self.embedder,
-                                   use_pallas=use_pallas_voronoi)
+                                   use_pallas=use_pallas_voronoi,
+                                   kernel=kernel)
         self.tables = policy_mod.build_tables(self.config)
         self._jt = self.tables.as_jax()       # device-resident, cached
         self.batcher = Batcher(max_batch=max_batch)
+        self.cbatcher = ContinuousBatcher(max_batch=max_batch)
         self.backends: Dict[str, BackendRuntime] = {}
         if load_backends:
             self._load_backends()
@@ -126,7 +143,7 @@ class RouterService:
             idx, _ = _route_core(
                 jnp.asarray(emb), jnp.asarray(crisp), self.engine.tensors,
                 self._jt, self.tables.n_rules,
-                use_pallas=self.engine.use_pallas,
+                kernel_mode=self.engine.kernel_mode,
                 interpret=self.engine.interpret)
             return np.asarray(idx)[:b]
         res = self.engine.evaluate(texts, metadata)
@@ -178,12 +195,9 @@ class RouterService:
             reqs.append(req)
         return reqs
 
-    def step(self) -> int:
-        """Serve one batch from the fullest backend queue.  -> #completed."""
-        nb = self.batcher.next_batch()
-        if nb is None:
-            return 0
-        backend, batch = nb
+    def _decode_batch(self, backend: str, batch: List[Request]) -> int:
+        """Prefill + greedy decode one batch on ``backend``; completes
+        every request (and its coalesced followers).  -> #completed."""
         rt = self.backends[backend]
         cfg = rt.model.cfg
         # tokenize: byte-level prompt, pad to common length
@@ -205,12 +219,97 @@ class RouterService:
             logits, cache = rt.decode(rt.params, cache, tok, pos)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos += 1
-        for r in batch:
-            r.done = True
-        return len(batch)
+        return sum(finish_request(r) for r in batch)
+
+    def step(self) -> int:
+        """Serve one batch from the fullest backend queue.  -> #completed."""
+        nb = self.batcher.next_batch()
+        if nb is None:
+            return 0
+        return self._decode_batch(*nb)
 
     def drain(self) -> int:
         n = 0
         while self.batcher.pending():
             n += self.step()
         return n
+
+    # ---- continuous batching ----------------------------------------------
+    def enqueue(self, texts: Sequence[str], metadata=None,
+                max_new_tokens: int = 8,
+                slo_ms: Optional[float] = None,
+                now: Optional[float] = None) -> List[Request]:
+        """Admit a batch into the continuous-batching service loop.
+
+        Routes the whole batch through the fused signal+policy program
+        once (duplicate texts are free: the embedder LRU and the
+        batcher's in-flight coalescing both key on the exact text),
+        stamps each request's deadline from ``slo_ms``, and admits
+        model-bound requests into the per-backend admission queues.
+        Plugin/reject actions complete immediately, exactly like
+        ``submit``.  Call ``serve_step``/``serve_forever`` to decode.
+        """
+        metadata = metadata or [None] * len(texts)
+        now = self.cbatcher.clock() if now is None else now
+        indices = self.route_indices(texts, metadata)
+        reqs = []
+        for text, meta, i in zip(texts, metadata, indices):
+            action = self.tables.action_key(i)
+            kind, _, target = action.partition(":")
+            req = Request(text=text, metadata=meta,
+                          max_new_tokens=max_new_tokens,
+                          arrival_s=now,
+                          deadline_s=(now + slo_ms / 1e3
+                                      if slo_ms is not None else None))
+            req.route = self.tables.rule_name(i)
+            req.action = action
+            if kind == "model" and target in self.backends:
+                req.backend = target
+                self.cbatcher.admit(req, now=now)
+            elif kind == "plugin":
+                req.backend = "__plugin__:" + target
+                req.done = True          # plugins are terminal here
+            else:
+                req.backend = "__reject__"
+                req.done = True
+            reqs.append(req)
+        return reqs
+
+    def serve_step(self, now: Optional[float] = None,
+                   force: bool = False) -> int:
+        """One continuous-batching service step: release the most
+        urgent/loaded ready batch (deadline- and wait-aware) and decode
+        it.  ``force=True`` drains under-full queues immediately.
+        -> #requests completed (coalesced followers included)."""
+        nb = self.cbatcher.next_batch(now=now, force=force)
+        if nb is None:
+            return 0
+        return self._decode_batch(*nb)
+
+    def serve_forever(self, *, max_steps: Optional[int] = None,
+                      stop_when_idle: bool = True,
+                      poll_s: float = 0.0005) -> int:
+        """Drive ``serve_step`` until idle (or ``max_steps`` loop
+        iterations — decoded batches and idle polls both count, so the
+        bound caps runtime even when traffic stops).
+
+        The benchmark/driver-facing loop: admission continues from other
+        callers of ``enqueue`` between steps.  When a queue is neither
+        full nor past its wait/deadline budget the loop sleeps
+        ``poll_s`` and lets it age — wait-based urgency guarantees every
+        queued request is eventually released, so no forced flush is
+        needed.  -> total #completed.
+        """
+        import time as _time
+        served = 0
+        steps = 0
+        while max_steps is None or steps < max_steps:
+            steps += 1
+            n = self.serve_step()
+            if n:
+                served += n
+                continue
+            if not self.cbatcher.pending() and stop_when_idle:
+                break
+            _time.sleep(poll_s)       # under-full queues: let them age
+        return served

@@ -107,20 +107,21 @@ class HashEmbedder:
 
     def embed(self, texts: Sequence[str]) -> np.ndarray:
         out = np.empty((len(texts), self.dim), np.float32)
-        miss_pos: List[int] = []
-        miss_texts: List[str] = []
+        # duplicate texts in one batch coalesce onto a single miss row
+        # (continuous-batching traffic repeats texts within a batch)
+        miss_rows: "collections.OrderedDict[str, List[int]]" = \
+            collections.OrderedDict()
         for i, t in enumerate(texts):
             v = self._cache.get(t)
             if v is None:
-                miss_pos.append(i)
-                miss_texts.append(t)
+                miss_rows.setdefault(t, []).append(i)
             else:
                 self._cache.move_to_end(t)
                 out[i] = v
-        if miss_texts:
-            fresh = self._embed_uncached(miss_texts)
-            for i, t, v in zip(miss_pos, miss_texts, fresh):
-                out[i] = v
+        if miss_rows:
+            fresh = self._embed_uncached(list(miss_rows))
+            for (t, rows), v in zip(miss_rows.items(), fresh):
+                out[rows] = v
                 # copy: caching the row view would pin the whole batch
                 # array for as long as any one row survives in the LRU
                 self._cache[t] = v.copy()

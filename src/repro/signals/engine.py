@@ -69,18 +69,57 @@ class SignalBatchResult:
 
 def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
                       t: Dict[str, jnp.ndarray], *,
-                      use_pallas: bool, interpret: bool
+                      kernel_mode: str, interpret: bool
                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                  jnp.ndarray, jnp.ndarray]:
     """embeddings + crisp scores -> (raw, normalized, fired, confidence).
 
     Pure/traceable; ``t`` is the bound tensor bundle from
-    ``SignalEngine._build_tensors``.  One GEMM against the stacked
-    centroids, one grouped normalization over every SIGNAL_GROUP, then
-    thresholds, default fallback and the scatter into full width.
+    ``SignalEngine._build_tensors``.  ``kernel_mode`` selects the
+    probabilistic-column lowering:
+
+    * ``"fused"``   — kernels/voronoi.fused_route: GEMM (centroids
+      resident in VMEM, N-tiled), grouped softmax, thresholds and
+      default fallback all in ONE Pallas launch;
+    * ``"grouped"`` — XLA GEMM + the grouped-Voronoi Pallas kernel
+      (PR 1's path);
+    * ``"jnp"``     — XLA GEMM + segment-reduction normalization.
+
+    All three scatter into the full (B, n_signals) layout here.
     """
     f32 = jnp.float32
     emb = emb.astype(f32)
+    if kernel_mode == "fused":
+        from repro.kernels import voronoi as _vor
+        raw_p, normalized_p, fired_p, _, _ = _vor.fused_route(
+            emb, t["centroids"], t["classifier_mask"].astype(f32),
+            t["col_scale"], t["col_thr"], t["grouped_mask"],
+            t["member_full"], t["default_full"], interpret=interpret)
+    else:
+        raw_p, normalized_p, fired_p = _signal_eval_unfused(
+            emb, t, kernel_mode=kernel_mode, interpret=interpret)
+    b = emb.shape[0]
+    n = raw_p.shape[1] + crisp_raw.shape[1]
+    raw = jnp.zeros((b, n), f32).at[:, t["prob_cols"]].set(raw_p)
+    normalized = jnp.zeros((b, n), f32).at[:, t["prob_cols"]].set(
+        normalized_p)
+    fired = jnp.zeros((b, n), bool).at[:, t["prob_cols"]].set(fired_p)
+    if crisp_raw.shape[1]:
+        crisp_raw = crisp_raw.astype(f32)
+        raw = raw.at[:, t["crisp_cols"]].set(crisp_raw)
+        normalized = normalized.at[:, t["crisp_cols"]].set(crisp_raw)
+        fired = fired.at[:, t["crisp_cols"]].set(
+            crisp_raw >= t["thr_crisp"][None, :])
+    conf = jnp.where(fired, normalized, 0.0)
+    return raw, normalized, fired, conf
+
+
+def _signal_eval_unfused(emb: jnp.ndarray, t: Dict[str, jnp.ndarray], *,
+                         kernel_mode: str, interpret: bool
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """PR 1 lowering: one XLA GEMM, then grouped normalization via the
+    segment-reduction jnp path or the grouped-Voronoi Pallas kernel."""
+    f32 = jnp.float32
     sims = jax.lax.dot_general(                      # the single GEMM (B, N)
         emb, t["centroids"], (((1,), (1,)), ((), ())),
         preferred_element_type=f32)
@@ -91,7 +130,7 @@ def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
     n_groups = t["member"].shape[0]
     if n_groups:
         sims_g = jnp.take(sims, t["grouped_cols"], axis=1)
-        if use_pallas:
+        if kernel_mode == "grouped":
             from repro.kernels import voronoi as _vor
             scores = _vor.grouped_voronoi(
                 sims_g, t["inv_tau"], t["member"], interpret=interpret)
@@ -115,34 +154,41 @@ def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
         fired_g = fired_g | fallback
         normalized_p = normalized_p.at[:, t["grouped_cols"]].set(scores)
         fired_p = fired_p.at[:, t["grouped_cols"]].set(fired_g)
-    b = emb.shape[0]
-    n = raw_p.shape[1] + crisp_raw.shape[1]
-    raw = jnp.zeros((b, n), f32).at[:, t["prob_cols"]].set(raw_p)
-    normalized = jnp.zeros((b, n), f32).at[:, t["prob_cols"]].set(
-        normalized_p)
-    fired = jnp.zeros((b, n), bool).at[:, t["prob_cols"]].set(fired_p)
-    if crisp_raw.shape[1]:
-        crisp_raw = crisp_raw.astype(f32)
-        raw = raw.at[:, t["crisp_cols"]].set(crisp_raw)
-        normalized = normalized.at[:, t["crisp_cols"]].set(crisp_raw)
-        fired = fired.at[:, t["crisp_cols"]].set(
-            crisp_raw >= t["thr_crisp"][None, :])
-    conf = jnp.where(fired, normalized, 0.0)
-    return raw, normalized, fired, conf
+    return raw_p, normalized_p, fired_p
 
 
 # jit-cached once per (shape-signature, flags) across every engine instance
 _SIGNAL_EVAL = jax.jit(_signal_eval_core,
-                       static_argnames=("use_pallas", "interpret"))
+                       static_argnames=("kernel_mode", "interpret"))
+
+KERNEL_MODES = ("auto", "jnp", "grouped", "fused")
+
+
+def resolve_kernel_mode(kernel: Optional[str], use_pallas: bool) -> str:
+    """Map the user-facing (kernel, use_pallas) pair to a concrete
+    lowering.  ``auto`` picks the fully-fused kernel on TPU (where it
+    compiles) and the jnp segment path elsewhere (interpret-mode Pallas
+    is emulation-slow on CPU); ``use_pallas=True`` keeps its PR 1
+    meaning of the grouped-Voronoi kernel."""
+    if kernel is not None and kernel != "auto":
+        if kernel not in KERNEL_MODES:
+            raise ValueError(f"kernel must be one of {KERNEL_MODES}, "
+                             f"got {kernel!r}")
+        return kernel
+    if use_pallas:
+        return "grouped"
+    return "fused" if jax.default_backend() == "tpu" else "jnp"
 
 
 class SignalEngine:
     def __init__(self, config: RouterConfig, embedder, *,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 kernel: Optional[str] = None):
         from repro.kernels import ops
         self.cfg = config
         self.embedder = embedder
         self.use_pallas = use_pallas
+        self.kernel_mode = resolve_kernel_mode(kernel, use_pallas)
         self.interpret = ops.default_interpret()
         self.names = sorted(config.signals)
         self.index = {n: i for i, n in enumerate(self.names)}
@@ -235,15 +281,33 @@ class SignalEngine:
         centroids = (np.stack([self.centroids[n] for n in self._prob_names])
                      if self._prob_names else np.zeros((0, dim), np.float32))
         sigs = self.cfg.signals
+        # full-width per-column metadata for the fully-fused kernel
+        # (kernels/voronoi.fused_route operates on the whole probabilistic
+        # column space, not just the grouped subset)
+        n_prob = len(self._prob_names)
+        thr_prob = np.asarray([sigs[n].threshold for n in self._prob_names],
+                              np.float32)
+        col_scale = np.ones(n_prob, np.float32)
+        col_thr = thr_prob.copy()
+        grouped_mask = np.zeros(n_prob, np.float32)
+        member_full = np.zeros((gi, n_prob), np.float32)
+        default_full = np.zeros((gi, n_prob), np.float32)
+        for j, col in enumerate(grouped_cols):
+            g = group_id[j]
+            col_scale[col] = inv_tau[j]
+            col_thr[col] = group_thr[j]
+            grouped_mask[col] = 1.0
+            member_full[g, col] = 1.0
+        for g, (start, count) in enumerate(member_rows):
+            if default_rows[g] is not None:
+                default_full[g, grouped_cols[default_rows[g]]] = 1.0
         self.tensors: Dict[str, jnp.ndarray] = {
             k: jnp.asarray(v) for k, v in {
                 "centroids": centroids,
                 "classifier_mask": np.asarray(
                     [sigs[n].kind is not AtomKind.GEOMETRIC
                      for n in self._prob_names], bool),
-                "thr_prob": np.asarray(
-                    [sigs[n].threshold for n in self._prob_names],
-                    np.float32),
+                "thr_prob": thr_prob,
                 "thr_crisp": np.asarray(
                     [sigs[n].threshold for n in self._crisp_names],
                     np.float32),
@@ -257,6 +321,11 @@ class SignalEngine:
                 "group_thr": np.asarray(group_thr, np.float32),
                 "member": member,
                 "default_onehot": default_onehot,
+                "col_scale": col_scale,
+                "col_thr": col_thr,
+                "grouped_mask": grouped_mask,
+                "member_full": member_full,
+                "default_full": default_full,
             }.items()}
 
     @property
@@ -293,7 +362,7 @@ class SignalEngine:
         crisp = self.crisp_scores(texts, metadata)
         raw, normalized, fired, conf = _SIGNAL_EVAL(
             jnp.asarray(emb), jnp.asarray(crisp), self.tensors,
-            use_pallas=self.use_pallas, interpret=self.interpret)
+            kernel_mode=self.kernel_mode, interpret=self.interpret)
         return SignalBatchResult(
             list(self.names), np.asarray(raw), np.asarray(normalized),
             np.asarray(fired), np.asarray(conf))

@@ -4,7 +4,9 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import geometry, sat, voronoi
 from repro.core.conditions import And, Atom, CNFBuilder, Cond, Not, Or, to_dnf_atoms

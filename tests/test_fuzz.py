@@ -3,7 +3,12 @@ a *diagnosable* error (LexError/ParseError/CompileError with a message) —
 never crash with an internal exception.  Production-language hygiene."""
 import string
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.slow
 
 from repro.dsl.compiler import CompileError, compile_text
 from repro.dsl.lexer import LexError

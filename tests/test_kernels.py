@@ -97,6 +97,147 @@ def test_grouped_voronoi_matches_per_group_kernel():
 
 
 # ---------------------------------------------------------------------------
+# fused_route (fully-fused signal layer)
+# ---------------------------------------------------------------------------
+
+def _fused_route_inputs(n, sizes, b, seed=0, d=32, n_classifier=2,
+                        shuffle=True):
+    """Queries + centroids + full-width metadata; ``sizes`` lays out the
+    groups over the first sum(sizes) columns (post-shuffle), the rest
+    stay ungrouped with independent thresholds."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=-1, keepdims=True)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    c /= np.linalg.norm(c, axis=-1, keepdims=True)
+    cols = rng.permutation(n) if shuffle else np.arange(n)
+    member = np.zeros((len(sizes), n), np.float32)
+    default = np.zeros((len(sizes), n), np.float32)
+    off = 0
+    for g, s in enumerate(sizes):
+        member[g, cols[off: off + s]] = 1.0
+        default[g, cols[off]] = 1.0
+        off += s
+    grouped = member.sum(axis=0)
+    scale = np.where(grouped > 0, 10.0, 1.0).astype(np.float32)
+    thr = np.where(grouped > 0, 0.51, 0.4).astype(np.float32)
+    cls = np.zeros(n, np.float32)
+    if n_classifier:
+        cls[cols[-n_classifier:]] = 1.0
+    return x, c, cls, scale, thr, grouped.astype(np.float32), member, default
+
+
+def _assert_fused_route_parity(args, *, block_n=128, block_b=128,
+                               atol=1e-5):
+    got = ops.fused_route(*[jnp.asarray(a) for a in args],
+                          interpret=True, block_n=block_n,
+                          block_b=block_b)
+    want = ref.fused_route_ref(*args)
+    for name, a, w in zip(("raw", "scores", "fired", "win", "wscore"),
+                          got, want):
+        a, w = np.asarray(a), np.asarray(w)
+        if a.dtype in (np.bool_, np.int32):
+            np.testing.assert_array_equal(a, w, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, w, atol=atol, err_msg=name)
+
+
+@pytest.mark.parametrize("b,n,sizes", [
+    (1, 6, [3, 2]),              # tiny, one ungrouped column
+    (33, 16, [4, 4, 4]),         # unaligned batch, 4 ungrouped
+    (129, 24, [1, 9, 8]),        # batch one over a block, singleton group
+    (7, 40, [40]),               # one big group, no ungrouped
+])
+def test_fused_route_parity_sweep(b, n, sizes):
+    _assert_fused_route_parity(_fused_route_inputs(n, sizes, b))
+
+
+@pytest.mark.parametrize("n,block_n", [
+    (8, 8),         # N exactly one tile
+    (9, 8),         # N one over a tile -> second (padded) tile
+    (16, 8),        # N exactly two tiles
+    (17, 8),        # two tiles + 1
+    (128, 128),     # default tile size, exactly one
+    (130, 128),     # default tile size, one over (two tiles of 128)
+])
+def test_fused_route_n_tiling_boundaries(n, block_n):
+    """The fori_loop N-tiling must be invisible: same outputs whether N
+    fits one VMEM tile or streams through several."""
+    sizes = [3, n - 7, 2] if n > 9 else [3, 2]
+    args = _fused_route_inputs(n, sizes, b=21, seed=n)
+    _assert_fused_route_parity(args, block_n=block_n)
+    # and the tiling itself must not change the result vs one big tile
+    one_tile = ops.fused_route(*[jnp.asarray(a) for a in args],
+                               interpret=True, block_n=max(n, 8))
+    tiled = ops.fused_route(*[jnp.asarray(a) for a in args],
+                            interpret=True, block_n=block_n)
+    for a, w in zip(tiled, one_tile):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(w, np.float32), atol=1e-6)
+
+
+def test_fused_route_singleton_group_spanning_tile_edge():
+    """A singleton group whose only member sits exactly on a tile
+    boundary (col == block_n) and a 2-member group straddling the edge
+    (cols block_n-1 and block_n) must normalize correctly."""
+    n, bn = 12, 8
+    # unshuffled layout: group 0 -> cols [0..6], group 1 -> col 7 is the
+    # last column of tile 0; place explicitly instead:
+    args = list(_fused_route_inputs(n, [], b=9, seed=3, n_classifier=0,
+                                    shuffle=False))
+    member = np.zeros((2, n), np.float32)
+    member[0, bn] = 1.0                       # singleton at tile edge
+    member[1, bn - 1] = 1.0                   # straddles the boundary
+    member[1, bn + 1] = 1.0
+    default = np.zeros((2, n), np.float32)
+    default[0, bn] = 1.0
+    grouped = member.sum(axis=0)
+    args[5] = grouped.astype(np.float32)
+    args[3] = np.where(grouped > 0, 10.0, 1.0).astype(np.float32)
+    args[4] = np.where(grouped > 0, 0.51, 0.4).astype(np.float32)
+    args[6], args[7] = member, default
+    _assert_fused_route_parity(tuple(args), block_n=bn)
+    raw, scores, fired, win, wscore = ops.fused_route(
+        *[jnp.asarray(a) for a in args], interpret=True, block_n=bn)
+    # softmax over the singleton is exactly 1 and it always fires
+    np.testing.assert_allclose(np.asarray(scores)[:, bn], 1.0, atol=1e-6)
+    assert np.asarray(fired)[:, bn].all()
+    # the straddling pair sums to 1 per row
+    pair = np.asarray(scores)[:, [bn - 1, bn + 1]].sum(axis=1)
+    np.testing.assert_allclose(pair, 1.0, atol=1e-5)
+    assert (np.asarray(win)[:, 0] == bn).all()
+
+
+def test_fused_route_no_groups():
+    """G == 0: pure independent thresholding, winner outputs empty."""
+    args = _fused_route_inputs(10, [], b=5, seed=7)
+    _assert_fused_route_parity(args)
+    raw, scores, fired, win, wscore = ops.fused_route(
+        *[jnp.asarray(a) for a in args], interpret=True)
+    assert win.shape == (5, 0) and wscore.shape == (5, 0)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(raw))
+
+
+def test_fused_route_matches_composed_kernels():
+    """fused_route's grouped scores == GEMM + grouped_voronoi (the PR 1
+    two-launch lowering) on the grouped columns."""
+    args = _fused_route_inputs(20, [5, 1, 8], b=65, seed=11,
+                               n_classifier=0)
+    x, c = args[0], args[1]
+    member = args[6]
+    gid = member.argmax(axis=0)
+    scores = np.asarray(ops.fused_route(
+        *[jnp.asarray(a) for a in args], interpret=True)[1])
+    sims = jnp.asarray((x @ c.T).astype(np.float32))
+    two_launch = np.asarray(ops.grouped_voronoi(
+        sims, jnp.asarray(args[3]), jnp.asarray(member), interpret=True))
+    grouped_cols = member.sum(axis=0) > 0
+    np.testing.assert_allclose(scores[:, grouped_cols],
+                               two_launch[:, grouped_cols], atol=1e-5)
+    del gid
+
+
+# ---------------------------------------------------------------------------
 # decode GQA
 # ---------------------------------------------------------------------------
 

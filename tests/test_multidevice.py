@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 

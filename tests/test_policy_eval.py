@@ -1,7 +1,10 @@
 """Tensorized policy evaluation ≡ the first-match interpreter, property-
 tested over random rule sets and activations (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.conditions import And, Atom, Not, Or
 from repro.dsl.compiler import compile_text

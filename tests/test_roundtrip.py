@@ -2,7 +2,10 @@
 tested over randomly generated programs (hypothesis)."""
 import string
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.dsl.compiler import compile_text
 from repro.dsl.decompile import decompile

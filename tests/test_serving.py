@@ -3,7 +3,8 @@ blocks through the live pipeline, Voronoi-vs-independent behavior."""
 import numpy as np
 import pytest
 
-from repro.serving.batcher import Batcher, Request
+from repro.serving.batcher import (Batcher, ContinuousBatcher, Request,
+                                   finish_request)
 from repro.serving.router import RouterService
 
 DSL = """
@@ -113,6 +114,135 @@ def test_batcher_groups_by_backend():
     assert b.pending() == 2
 
 
+def _cb(max_batch=4, max_wait_s=0.005, deadline_margin_s=0.010):
+    """ContinuousBatcher on a fake clock: tests control time exactly."""
+    t = [0.0]
+    cb = ContinuousBatcher(max_batch=max_batch, max_wait_s=max_wait_s,
+                           deadline_margin_s=deadline_margin_s,
+                           clock=lambda: t[0])
+    return cb, t
+
+
+def _req(text, backend="x", deadline_s=None, max_new_tokens=4):
+    r = Request(text=text, max_new_tokens=max_new_tokens,
+                deadline_s=deadline_s)
+    r.backend = backend
+    return r
+
+
+def test_continuous_batcher_releases_when_full():
+    cb, t = _cb(max_batch=4)
+    for i in range(3):
+        cb.admit(_req(f"q{i}"))
+    assert cb.ready() == []                    # under-full, fresh: hold
+    cb.admit(_req("q3"))
+    assert cb.ready() == ["x"]                 # full: release now
+    backend, batch = cb.next_batch()
+    assert backend == "x" and len(batch) == 4
+    assert cb.pending() == 0
+
+
+def test_continuous_batcher_wait_flushes_underfull():
+    cb, t = _cb(max_batch=8, max_wait_s=0.005)
+    cb.admit(_req("q0"))
+    assert cb.next_batch() is None             # young queue holds
+    t[0] += 0.006                              # oldest waited past budget
+    backend, batch = cb.next_batch()
+    assert backend == "x" and len(batch) == 1
+    assert cb.stats["flushed_by_wait"] == 1
+
+
+def test_continuous_batcher_deadline_flushes_underfull():
+    cb, t = _cb(max_batch=8, max_wait_s=10.0, deadline_margin_s=0.010)
+    cb.admit(_req("q0", deadline_s=1.0))
+    assert cb.next_batch() is None             # deadline far away
+    t[0] = 0.995                               # within the margin
+    nb = cb.next_batch()
+    assert nb is not None and len(nb[1]) == 1
+    assert cb.stats["flushed_by_deadline"] == 1
+
+
+def test_continuous_batcher_prefers_loaded_ready_queue():
+    cb, t = _cb(max_batch=2)
+    cb.admit(_req("a0", backend="x"))
+    cb.admit(_req("a1", backend="x"))
+    cb.admit(_req("b0", backend="y"))
+    cb.admit(_req("b1", backend="y"))
+    cb.admit(_req("b2", backend="y"))          # y: 3 queued but max 2
+    backend, batch = cb.next_batch()
+    assert backend == "y" and len(batch) == 2
+    assert cb.pending() == 3
+
+
+def test_continuous_batcher_deadline_beats_full_queue():
+    """A deadline-imminent queue must not be starved by a backend whose
+    queue is permanently full."""
+    cb, t = _cb(max_batch=2, max_wait_s=10.0, deadline_margin_s=0.010)
+    for i in range(6):
+        cb.admit(_req(f"a{i}", backend="busy"))    # always 'full'-ready
+    cb.admit(_req("urgent", backend="quiet", deadline_s=0.005))
+    t[0] = 0.001                                   # within the margin
+    backend, batch = cb.next_batch()
+    assert backend == "quiet" and batch[0].text == "urgent"
+    # with no deadline pressure the fullest ready queue wins again
+    backend, _ = cb.next_batch()
+    assert backend == "busy"
+
+
+def test_continuous_batcher_coalesces_duplicate_texts():
+    cb, t = _cb(max_batch=8, max_wait_s=0.0)
+    r0 = cb.admit(_req("same question"))
+    dup = _req("same question")
+    leader = cb.admit(dup)
+    assert leader is r0 and dup.coalesced
+    assert cb.pending() == 1                   # one decode slot
+    assert cb.pending_requests() == 2          # two callers waiting
+    other = cb.admit(_req("different question"))
+    assert other is not r0
+    _, batch = cb.next_batch()
+    assert dup not in batch                    # followers ride, not decode
+    r0.output_tokens = [1, 2, 3]
+    assert finish_request(r0) == 2
+    assert dup.done and dup.output_tokens == [1, 2, 3]
+
+
+def test_continuous_batcher_coalesced_deadline_tightens_leader():
+    cb, t = _cb()
+    r0 = cb.admit(_req("q", deadline_s=5.0))
+    cb.admit(_req("q", deadline_s=1.0))
+    assert r0.deadline_s == 1.0                # batch honors the rider
+
+
+def test_continuous_batcher_no_coalesce_after_release():
+    """Coalescing is strictly in-flight: once the leader's batch is
+    released, a new duplicate gets its own decode slot."""
+    cb, t = _cb(max_batch=1)
+    cb.admit(_req("q"))
+    cb.next_batch()
+    late = cb.admit(_req("q"))
+    assert not late.coalesced and cb.pending() == 1
+
+
+def test_continuous_batcher_force_drains():
+    cb, t = _cb(max_batch=8, max_wait_s=10.0)
+    cb.admit(_req("q0"))
+    assert cb.next_batch() is None
+    nb = cb.next_batch(force=True)
+    assert nb is not None and len(nb[1]) == 1
+    assert cb.next_batch(force=True) is None   # empty now
+
+
+def test_enqueue_routes_and_stamps_deadlines(svc):
+    reqs = svc.enqueue(["solve the integral of x squared dx"],
+                       slo_ms=25.0, now=100.0)
+    assert reqs[0].route == "math_route"
+    assert reqs[0].arrival_s == 100.0
+    assert reqs[0].deadline_s == pytest.approx(100.025)
+    # no backends loaded in this fixture -> terminal reject, not queued
+    assert reqs[0].backend == "__reject__" and reqs[0].done
+    assert svc.cbatcher.pending() == 0
+
+
 def test_end_to_end_generation_two_backends():
     dsl = DSL + """
 BACKEND backend-math { arch: "internlm2-1.8b" }
@@ -129,6 +259,19 @@ BACKEND chat { arch: "internlm2-1.8b" }
     assert all(len(r.output_tokens) == 3 for r in reqs)
     assert reqs[0].backend == "backend-math"
     assert reqs[1].backend == "backend-science"
+    # the continuous-batching loop serves the same traffic (duplicate
+    # texts coalesce onto one decode slot and fan back out)
+    creqs = svc.enqueue(["solve the integral of x squared dx",
+                         "solve the integral of x squared dx",
+                         "what energy does a quantum particle have"],
+                        max_new_tokens=3, slo_ms=100.0)
+    assert svc.cbatcher.stats["coalesced"] == 1
+    served = svc.serve_forever()
+    assert served == 3
+    assert all(r.done for r in creqs)
+    assert creqs[0].output_tokens == creqs[1].output_tokens
+    assert len(creqs[2].output_tokens) == 3
+    assert creqs[2].backend == "backend-science"
 
 
 def test_pallas_voronoi_path_matches_numpy(svc):
@@ -139,3 +282,18 @@ def test_pallas_voronoi_path_matches_numpy(svc):
     b = svc_p.engine.evaluate(q)
     np.testing.assert_allclose(a.normalized, b.normalized, atol=1e-5)
     assert (a.fired == b.fired).all()
+
+
+def test_fused_route_kernel_path_matches(svc):
+    """kernel="fused" (one centroid-resident Pallas launch) must agree
+    with the default lowering through the full service."""
+    svc_f = RouterService(DSL, load_backends=False, kernel="fused")
+    assert svc_f.engine.kernel_mode == "fused"
+    q = ["solve the integral", "quantum energy", "hello there",
+         "zzzz qqqq completely alien tokens"]
+    a = svc.engine.evaluate(q)
+    b = svc_f.engine.evaluate(q)
+    np.testing.assert_allclose(a.normalized, b.normalized, atol=1e-5)
+    np.testing.assert_allclose(a.raw, b.raw, atol=1e-5)
+    assert (a.fired == b.fired).all()
+    assert svc.route(q) == svc_f.route(q)

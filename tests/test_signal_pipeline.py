@@ -108,6 +108,30 @@ def test_fused_pallas_matches_legacy():
     _assert_results_match(fused, legacy, atol=2e-6)
 
 
+def test_fused_route_kernel_matches_legacy():
+    """The fully-fused centroid-resident kernel (one Pallas launch for
+    GEMM + grouped softmax + thresholds + defaults) vs the interpreted
+    engine, on the mixed crisp/grouped/default config."""
+    svc = RouterService(MIXED_DSL, load_backends=False, kernel="fused")
+    fused = svc.engine.evaluate(QUERIES)
+    legacy = svc.engine.evaluate_legacy(QUERIES)
+    _assert_results_match(fused, legacy, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_routes", [4, 16])
+def test_fused_route_kernel_matches_jnp_on_bench_configs(n_routes):
+    svc_j = RouterService(make_dsl(n_routes), load_backends=False,
+                          validate=False, kernel="jnp")
+    svc_f = RouterService(make_dsl(n_routes), load_backends=False,
+                          validate=False, kernel="fused")
+    queries = [f"query about topic {i} alpha" for i in range(32)]
+    a = svc_j.engine.evaluate(queries)
+    b = svc_f.engine.evaluate(queries)
+    _assert_results_match(a, b, atol=1e-5)
+    assert (svc_j.route_indices(queries) ==
+            svc_f.route_indices(queries)).all()
+
+
 def test_default_member_fallback_fused():
     svc = RouterService(MIXED_DSL, load_backends=False)
     res = svc.engine.evaluate(["zzzz qqqq completely alien tokens"])
