@@ -222,21 +222,33 @@ def bench_end_to_end(results: dict, n_routes_sweep=(4, 16, 64)) -> list:
 
 
 def check_parity(shapes, atol: float = 1e-5) -> list:
-    """fused_route + grouped_voronoi vs the kernels/ref.py oracles over
-    a B×N sweep.  -> list of mismatch descriptions (empty == parity)."""
+    """fused_route, fused_route_dtiled (D-chunk streaming) and
+    grouped_voronoi vs the kernels/ref.py oracles over a B×N sweep.
+    -> list of mismatch descriptions (empty == parity)."""
     failures = []
+    names = ("raw", "scores", "fired", "win", "wscore")
     for b, n in shapes:
         args, gid = _fused_route_inputs(b, n, seed=b + n)
         jargs = tuple(jnp.asarray(a) for a in args)
         got = ops.fused_route(*jargs)
         want = ref.fused_route_ref(*args)
-        names = ("raw", "scores", "fired", "win", "wscore")
         for name, a, w in zip(names, got, want):
             a, w = np.asarray(a), np.asarray(w)
             ok = ((a == w).all() if a.dtype in (np.bool_, np.int32)
                   else np.allclose(a, w, atol=atol))
             if not ok:
                 failures.append(f"fused_route b={b} n={n} output={name}")
+        # D-tiled variant: D == tile and D straddling tiles (DIM=64)
+        for bd in (DIM, DIM // 2 - 3):
+            got_t = ops.fused_route_dtiled(*jargs, block_d=bd)
+            want_t = ref.fused_route_dtiled_ref(*args, block_d=bd)
+            for name, a, w in zip(names, got_t, want_t):
+                a, w = np.asarray(a), np.asarray(w)
+                ok = ((a == w).all() if a.dtype in (np.bool_, np.int32)
+                      else np.allclose(a, w, atol=atol))
+                if not ok:
+                    failures.append(f"fused_route_dtiled b={b} n={n} "
+                                    f"block_d={bd} output={name}")
         sims = np.asarray(args[0] @ args[1].T, np.float32)
         got_g = ops.grouped_voronoi(jnp.asarray(sims),
                                     jnp.asarray(args[3]),

@@ -57,21 +57,107 @@ def grouped_voronoi(sims, inv_tau, member, *, interpret=None,
                                 block_b=block_b, interpret=interp)
 
 
+# ---------------------------------------------------------------------------
+# fused routing: resident vs D-tiled variant selection
+# ---------------------------------------------------------------------------
+
+# per-core VMEM on current TPUs is ~16 MB; leave headroom for Mosaic's
+# own buffers, the metadata rows, and double-buffered pipelining
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+
+def fused_route_vmem_bytes(n: int, d: int, g: int = 1, *,
+                           block_b: int = 128, block_n: int = 128,
+                           centroid_bytes: int = 4) -> int:
+    """Resident-VMEM estimate for one grid step of the fully-resident
+    ``fused_route`` kernel: the whole (Npad, D) centroid store, one
+    (bb, D) query block, the (bb, Npad) similarity/score buffers, and
+    the column metadata."""
+    npad = n + ((-n) % max(1, min(block_n, max(n, 1))))
+    gp = max(g, 1)
+    return (npad * d * centroid_bytes            # resident centroids
+            + block_b * d * 4                    # query block
+            + 4 * block_b * npad * 4             # sims acc + raw/scores/fired
+            + 2 * block_b * gp * 4               # winners
+            + (5 + 2 * gp) * npad * 4)           # metadata rows + partition
+
+
+def fused_route_dtiled_vmem_bytes(n: int, d: int, g: int = 1, *,
+                                  block_b: int = 128, block_d: int = 256,
+                                  centroid_bytes: int = 4) -> int:
+    """Resident-VMEM estimate for one grid step of the D-tiled variant:
+    only an (N, block_d) centroid slab + the (bb, N) accumulator."""
+    bd = max(1, min(block_d, max(d, 1)))
+    gp = max(g, 1)
+    return (n * bd * centroid_bytes              # streamed centroid slab
+            + block_b * bd * 4                   # query slab
+            + 4 * block_b * n * 4                # scratch acc + outputs
+            + 2 * block_b * gp * 4
+            + (5 + 2 * gp) * n * 4)
+
+
+def select_fused_variant(n: int, d: int, g: int = 1, *,
+                         block_b: int = 128, block_n: int = 128,
+                         block_d: int = 256, centroid_bytes: int = 4,
+                         budget_bytes: int | None = None) -> str:
+    """VMEM-budget auto-selection between the fully-resident kernel,
+    the D-tiled streaming variant, and the jnp fallback:
+    -> ``"fused"`` | ``"fused_dtiled"`` | ``"jnp"``.
+
+    The resident kernel wins whenever the whole centroid store fits the
+    budget (one HBM read per batch, no accumulator re-walks); past the
+    budget the D-tiled variant streams D-slabs so only its (bb, N)
+    accumulator and output buffers must stay resident — and when even
+    those exceed the budget (very wide route tables), the jnp lowering
+    is the only one that runs, so the selection degrades to it instead
+    of picking a kernel that cannot compile."""
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    resident = fused_route_vmem_bytes(
+        n, d, g, block_b=block_b, block_n=block_n,
+        centroid_bytes=centroid_bytes)
+    if resident <= budget:
+        return "fused"
+    dtiled = fused_route_dtiled_vmem_bytes(
+        n, d, g, block_b=block_b, block_d=block_d,
+        centroid_bytes=centroid_bytes)
+    return "fused_dtiled" if dtiled <= budget else "jnp"
+
+
 def fused_route(x, centroids, classifier_mask, col_scale, col_thr,
-                grouped_mask, member, default_onehot, *, interpret=None,
-                use_ref=False, block_b: int = 128, block_n: int = 128):
+                grouped_mask, member, default_onehot, *, qscale=None,
+                interpret=None, use_ref=False, block_b: int = 128,
+                block_n: int = 128):
     """Fully-fused signal layer: GEMM (centroids resident) + grouped
     softmax + thresholds/defaults + per-group winners, one launch.
     -> (raw, scores, fired, win, wscore); see kernels/voronoi.fused_route."""
     if use_ref:
         return _ref.fused_route_ref(x, centroids, classifier_mask,
                                     col_scale, col_thr, grouped_mask,
-                                    member, default_onehot)
+                                    member, default_onehot, qscale=qscale)
     interp = _default_interpret() if interpret is None else interpret
     return _vor.fused_route(x, centroids, classifier_mask, col_scale,
                             col_thr, grouped_mask, member, default_onehot,
-                            block_b=block_b, block_n=block_n,
-                            interpret=interp)
+                            qscale=qscale, block_b=block_b,
+                            block_n=block_n, interpret=interp)
+
+
+def fused_route_dtiled(x, centroids, classifier_mask, col_scale, col_thr,
+                       grouped_mask, member, default_onehot, *,
+                       qscale=None, interpret=None, use_ref=False,
+                       block_b: int = 128, block_d: int = 256):
+    """D-tiled fused signal layer: streams (N, block_d) centroid slabs
+    through a VMEM accumulator so embedder dims past the VMEM budget
+    still run as one launch.  Same contract as ``fused_route``."""
+    if use_ref:
+        return _ref.fused_route_dtiled_ref(
+            x, centroids, classifier_mask, col_scale, col_thr,
+            grouped_mask, member, default_onehot, qscale=qscale,
+            block_d=block_d)
+    interp = _default_interpret() if interpret is None else interpret
+    return _vor.fused_route_dtiled(
+        x, centroids, classifier_mask, col_scale, col_thr, grouped_mask,
+        member, default_onehot, qscale=qscale, block_b=block_b,
+        block_d=block_d, interpret=interp)
 
 
 def decode_gqa(q, k, v, n_valid, *, interpret=None, use_ref=False,

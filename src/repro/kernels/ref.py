@@ -35,18 +35,23 @@ def grouped_voronoi_ref(sims, inv_tau, group_id):
 
 
 def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
-                    grouped_mask, member, default_onehot):
-    """Oracle for the fully-fused routing kernel, one group at a time.
+                    grouped_mask, member, default_onehot, *,
+                    qscale=None, block_d=None):
+    """Oracle for the fully-fused routing kernels, one group at a time.
 
-    x: (B, D); centroids: (N, D); classifier_mask/col_scale/col_thr/
-    grouped_mask: (N,); member/default_onehot: (G, N) one-hot.
+    x: (B, D); centroids: (N, D) (f32 or a bf16/int8 quantized store);
+    classifier_mask/col_scale/col_thr/grouped_mask: (N,);
+    member/default_onehot: (G, N) one-hot; qscale: optional (N,)
+    per-column dequantization scale on the similarities; block_d:
+    when set, accumulate the GEMM in D-chunks of that width (mirrors
+    ``fused_route_dtiled``'s accumulation order exactly).
     -> (raw (B,N), scores (B,N), fired (B,N) bool,
         win (B,G) int32, wscore (B,G)) — same contract as
-    kernels/voronoi.fused_route.
+    kernels/voronoi.fused_route / fused_route_dtiled.
     """
     import numpy as np
     x = np.asarray(x, np.float32)
-    c = np.asarray(centroids, np.float32)
+    c = np.asarray(centroids).astype(np.float32)
     cls = np.asarray(classifier_mask).astype(bool)
     scale = np.asarray(col_scale, np.float32)
     thr = np.asarray(col_thr, np.float32)
@@ -56,7 +61,14 @@ def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
     g = m.shape[0]
     b = x.shape[0]
 
-    sims = x @ c.T
+    if block_d is None:
+        sims = x @ c.T
+    else:
+        sims = np.zeros((b, c.shape[0]), np.float32)
+        for lo in range(0, x.shape[1], block_d):
+            sims += x[:, lo: lo + block_d] @ c[:, lo: lo + block_d].T
+    if qscale is not None:
+        sims = sims * np.asarray(qscale, np.float32)[None, :]
     raw = np.where(cls[None, :], (sims + 1.0) * 0.5, sims)
     z = sims * scale[None, :]
     scores = raw.copy()
@@ -84,6 +96,18 @@ def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
             win[:, gi] = cols[np.argmax(sg, axis=-1)]
             wscore[:, gi] = sg.max(axis=-1)
     return raw, scores, fired, win, wscore
+
+
+def fused_route_dtiled_ref(x, centroids, classifier_mask, col_scale,
+                           col_thr, grouped_mask, member, default_onehot,
+                           *, qscale=None, block_d: int = 256):
+    """Oracle for ``fused_route_dtiled``: same semantics as
+    ``fused_route_ref`` with the GEMM accumulated in D-chunks so the
+    floating-point accumulation order matches the kernel's streamed
+    VMEM accumulator tile for tile."""
+    return fused_route_ref(x, centroids, classifier_mask, col_scale,
+                           col_thr, grouped_mask, member, default_onehot,
+                           qscale=qscale, block_d=block_d)
 
 
 def decode_gqa_ref(q, k, v, n_valid):

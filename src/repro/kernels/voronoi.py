@@ -15,6 +15,20 @@ Three entry points:
   MXU-sized tiles), classifier calibration, the segment-masked grouped
   softmax, per-column thresholds with per-group default fallback, and
   per-group winner indices + scores — five outputs, one kernel.
+* ``fused_route_dtiled`` — the same contract for embedder dims too
+  large to keep the whole (N, D) centroid matrix VMEM-resident: the
+  grid gains a second (D-chunk) dimension, each step streams one
+  (N, block_d) centroid slab and one (bb, block_d) query slab through
+  the MXU and accumulates partial similarities into a VMEM scratch
+  accumulator; the last chunk applies the per-column dequantization
+  scale and runs the identical post-GEMM tail (calibration, grouped
+  softmax, thresholds/defaults, winners).  Resident VMEM is
+  O(N·block_d + bb·N) instead of O(N·D).
+
+Both fused variants accept a per-column ``qscale`` vector applied to
+the accumulated similarities — the hook for bf16/int8 centroid stores:
+quantized centroids dequantize to unit norm through ``qscale`` while
+the GEMM accumulates in f32 (see signals/engine quantization).
 * ``grouped_voronoi`` — the *whole policy's* groups in one launch:
   given the stacked similarity matrix S (B, N) for every probabilistic
   signal, a per-column 1/τ vector, and a (G, N) one-hot membership
@@ -39,6 +53,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _pad_rows(x: jnp.ndarray, block_b: int):
@@ -94,7 +109,8 @@ def voronoi_scores(x: jnp.ndarray, centroids: jnp.ndarray,
 _NEG = -3e38                   # finite -inf stand-in: 0 * _NEG == 0, not nan
 
 
-def _softmax_by_group(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+def _softmax_by_group(z: jnp.ndarray, m: jnp.ndarray, *,
+                      reduce_max=None, reduce_sum=None) -> jnp.ndarray:
     """Segment-masked, numerically stable softmax over every group at
     once — the shared value-level body of the grouped kernels.
 
@@ -107,6 +123,12 @@ def _softmax_by_group(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
     group rows; the max/denominator broadcast back to columns and the
     per-group sum both ride the MXU as one-hot matmuls, so the whole
     batch needs exactly one kernel launch regardless of group count.
+
+    ``reduce_max``/``reduce_sum`` are the cross-device collective hooks
+    for the shard_map lowering (signals/engine): when N is sharded over
+    a mesh axis, the per-group maxima and denominators reduce across
+    shards (pmax/psum) between the local reductions and the broadcast
+    back to columns.  None (the kernel case) means single-shard.
     """
     f32 = jnp.float32
     n_groups = m.shape[0]
@@ -121,11 +143,15 @@ def _softmax_by_group(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
     gmax = jax.lax.fori_loop(
         0, n_groups, _gmax,
         jnp.full((z.shape[0], n_groups), _NEG, f32))          # (bb, G)
+    if reduce_max is not None:
+        gmax = reduce_max(gmax)
     col_max = jax.lax.dot_general(                            # (bb, N)
         gmax, m, (((1,), (0,)), ((), ())), preferred_element_type=f32)
     e = jnp.exp(jnp.where(covered, z - col_max, 0.0))         # ≤ 1 covered
     gsum = jax.lax.dot_general(                               # (bb, G)
         e, m, (((1,), (1,)), ((), ())), preferred_element_type=f32)
+    if reduce_sum is not None:
+        gsum = reduce_sum(gsum)
     denom = jax.lax.dot_general(                              # (bb, N) ≥ 1
         gsum, m, (((1,), (0,)), ((), ())), preferred_element_type=f32)
     return e / jnp.maximum(denom, 1e-30)     # guard: uncovered denom == 0
@@ -172,14 +198,90 @@ def grouped_voronoi(sims: jnp.ndarray, inv_tau: jnp.ndarray,
     return out[:b]
 
 
-def _fused_route_kernel(x_ref, c_ref, cls_ref, scale_ref, thr_ref,
-                        grouped_ref, member_ref, default_ref,
+def _route_tail(sims, cls, scale, thr, grouped_row, member, default, *,
+                reduce_max=None, reduce_sum=None, reduce_min=None,
+                col_offset=0):
+    """Shared post-GEMM half of the fused routing lowerings: classifier
+    calibration, grouped softmax, thresholds + default fallback, and
+    per-group winners, all on values already resident.
+
+    sims: (bb, Np) accumulated (and dequantized) similarities; the
+    remaining operands are the (1, Np)/(G, Np) column-metadata values
+    described on ``_fused_route_kernel``.
+    -> (raw, scores, fired_bool, win, wscore).
+
+    The keyword hooks make this the ONE copy of the routing semantics
+    shared by the Pallas kernels (hooks None: single shard) and the
+    shard_map lowering in signals/engine (N sharded over a mesh axis):
+    ``reduce_max``/``reduce_sum`` cross-shard the softmax maxima,
+    denominators and fired-any reductions; ``col_offset`` globalizes
+    the local argmax column index; the winner is then the smallest
+    global index attaining the reduce_max'd best score — the same
+    first-occurrence argmax the single-shard path computes directly.
+    """
+    f32 = jnp.float32
+    grouped = grouped_row > 0.0                               # (1, Np)
+    raw = jnp.where(cls > 0.0, (sims + 1.0) * 0.5, sims)
+    z = sims * scale
+    m = member.astype(f32)                                    # (G, Np)
+    n_groups = m.shape[0]
+    scores = jnp.where(
+        grouped,
+        _softmax_by_group(z, m, reduce_max=reduce_max,
+                          reduce_sum=reduce_sum),
+        raw)
+
+    # grouped columns threshold strictly at the group θ; ungrouped use
+    # the signal's own inclusive threshold (engine semantics, Def 1)
+    fired = jnp.where(grouped, scores > thr, raw >= thr)
+    group_any = jax.lax.dot_general(                          # (bb, G)
+        fired.astype(f32), m, (((1,), (1,)), ((), ())),
+        preferred_element_type=f32)
+    if reduce_sum is not None:
+        group_any = reduce_sum(group_any)
+    group_any = group_any > 0.0
+    fallback = jax.lax.dot_general(                           # (bb, Np)
+        (~group_any).astype(f32), default,
+        (((1,), (0,)), ((), ())), preferred_element_type=f32) > 0.0
+    fired = fired | fallback
+
+    def _win(g, carry):
+        win, wsc = carry
+        row = jax.lax.dynamic_slice_in_dim(m, g, 1, axis=0)   # (1, Np)
+        sg = jnp.where(row > 0.0, scores, -1.0)               # scores ≥ 0
+        idx = (jnp.argmax(sg, axis=-1).astype(jnp.int32)
+               + jnp.asarray(col_offset, jnp.int32))          # (bb,)
+        best = jnp.max(sg, axis=-1)
+        win = jax.lax.dynamic_update_slice_in_dim(
+            win, idx[:, None], g, axis=1)
+        wsc = jax.lax.dynamic_update_slice_in_dim(
+            wsc, best[:, None], g, axis=1)
+        return win, wsc
+
+    win, wscore = jax.lax.fori_loop(
+        0, n_groups, _win,
+        (jnp.zeros((z.shape[0], n_groups), jnp.int32),
+         jnp.full((z.shape[0], n_groups), -1.0, f32)))
+    if reduce_max is not None:
+        best = reduce_max(wscore)                             # (bb, G)
+        win = reduce_min(jnp.where(wscore >= best, win,
+                                   jnp.int32(1 << 30)))       # first global
+        win = jnp.where(best < 0.0, 0, win)                   # empty group
+        wscore = best
+    return raw, scores, fired, win, wscore
+
+
+def _fused_route_kernel(x_ref, c_ref, qscale_ref, cls_ref, scale_ref,
+                        thr_ref, grouped_ref, member_ref, default_ref,
                         raw_ref, scores_ref, fired_ref, win_ref,
                         wscore_ref, *, block_n: int):
     """The whole signal layer for one query block, single launch.
 
     x_ref:       (bb, D)   unit query embeddings
     c_ref:       (Np, D)   stacked centroid matrix, VMEM-resident
+                 (f32, bf16 or int8 — dequantized through qscale)
+    qscale_ref:  (1, Np)   per-column dequantization scale applied to
+                 the accumulated similarities (1.0 for f32 centroids)
     cls_ref:     (1, Np)   1.0 where the column is a classifier signal
                  (raw = (sim+1)/2 calibration), 0.0 for geometric
     scale_ref:   (1, Np)   1/temperature for grouped columns, 1.0 else
@@ -212,49 +314,65 @@ def _fused_route_kernel(x_ref, c_ref, cls_ref, scale_ref, thr_ref,
 
     sims = jax.lax.fori_loop(
         0, n_tiles, _tile, jnp.zeros((x.shape[0], npad), f32))
+    sims = sims * qscale_ref[...]
 
-    cls = cls_ref[...]                                        # (1, Np)
-    grouped = grouped_ref[...] > 0.0                          # (1, Np)
-    thr = thr_ref[...]
-    raw = jnp.where(cls > 0.0, (sims + 1.0) * 0.5, sims)
-    z = sims * scale_ref[...]
-    m = member_ref[...].astype(f32)                           # (G, Np)
-    n_groups = m.shape[0]
-    scores = jnp.where(grouped, _softmax_by_group(z, m), raw)
-
-    # grouped columns threshold strictly at the group θ; ungrouped use
-    # the signal's own inclusive threshold (engine semantics, Def 1)
-    fired = jnp.where(grouped, scores > thr, raw >= thr)
-    group_any = jax.lax.dot_general(                          # (bb, G)
-        fired.astype(f32), m, (((1,), (1,)), ((), ())),
-        preferred_element_type=f32) > 0.0
-    fallback = jax.lax.dot_general(                           # (bb, Np)
-        (~group_any).astype(f32), default_ref[...],
-        (((1,), (0,)), ((), ())), preferred_element_type=f32) > 0.0
-    fired = fired | fallback
-
-    def _win(g, carry):
-        win, wsc = carry
-        row = jax.lax.dynamic_slice_in_dim(m, g, 1, axis=0)   # (1, Np)
-        sg = jnp.where(row > 0.0, scores, -1.0)               # scores ≥ 0
-        idx = jnp.argmax(sg, axis=-1).astype(jnp.int32)       # (bb,)
-        best = jnp.max(sg, axis=-1)
-        win = jax.lax.dynamic_update_slice_in_dim(
-            win, idx[:, None], g, axis=1)
-        wsc = jax.lax.dynamic_update_slice_in_dim(
-            wsc, best[:, None], g, axis=1)
-        return win, wsc
-
-    win, wscore = jax.lax.fori_loop(
-        0, n_groups, _win,
-        (jnp.zeros((z.shape[0], n_groups), jnp.int32),
-         jnp.full((z.shape[0], n_groups), -1.0, f32)))
-
+    raw, scores, fired, win, wscore = _route_tail(
+        sims, cls_ref[...], scale_ref[...], thr_ref[...],
+        grouped_ref[...], member_ref[...], default_ref[...])
     raw_ref[...] = raw
     scores_ref[...] = scores
-    fired_ref[...] = fired.astype(f32)
+    fired_ref[...] = fired.astype(jnp.float32)
     win_ref[...] = win
     wscore_ref[...] = wscore
+
+
+def _fused_route_dtiled_kernel(x_ref, c_ref, qscale_ref, cls_ref,
+                               scale_ref, thr_ref, grouped_ref,
+                               member_ref, default_ref,
+                               raw_ref, scores_ref, fired_ref, win_ref,
+                               wscore_ref, acc_ref, *, n_dtiles: int):
+    """D-tiled twin of ``_fused_route_kernel``: grid (batch, D-chunk).
+
+    Each (i, j) step sees one (bb, block_d) query slab and one
+    (N, block_d) centroid slab — only a D-slice of the centroid matrix
+    is ever VMEM-resident — and accumulates the partial similarity
+    contribution into the persistent (bb, N) f32 scratch ``acc_ref``.
+    The last chunk (j == n_dtiles - 1) applies the per-column
+    dequantization scale and the shared post-GEMM tail, then writes all
+    five outputs for the batch block.  D-chunks are the innermost grid
+    dimension, so the scratch accumulator carries across the chunks of
+    one batch block and re-zeroes when the next block starts.
+    """
+    f32 = jnp.float32
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(f32)                                # (bb, bd)
+    c = c_ref[...].astype(f32)                                # (N, bd)
+    acc_ref[...] += jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=f32)
+
+    @pl.when(j == n_dtiles - 1)
+    def _finish():
+        sims = acc_ref[...] * qscale_ref[...]
+        raw, scores, fired, win, wscore = _route_tail(
+            sims, cls_ref[...], scale_ref[...], thr_ref[...],
+            grouped_ref[...], member_ref[...], default_ref[...])
+        raw_ref[...] = raw
+        scores_ref[...] = scores
+        fired_ref[...] = fired.astype(jnp.float32)
+        win_ref[...] = win
+        wscore_ref[...] = wscore
+
+
+def _centroid_store_dtype(centroids) -> jnp.dtype:
+    """Quantized centroid stores keep their dtype in VMEM (that's the
+    memory-traffic win); anything else is promoted to f32."""
+    dt = jnp.asarray(centroids).dtype
+    return dt if dt in (jnp.bfloat16, jnp.int8) else jnp.float32
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n",
@@ -263,14 +381,18 @@ def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
                 classifier_mask: jnp.ndarray, col_scale: jnp.ndarray,
                 col_thr: jnp.ndarray, grouped_mask: jnp.ndarray,
                 member: jnp.ndarray, default_onehot: jnp.ndarray, *,
+                qscale: jnp.ndarray | None = None,
                 block_b: int = 128, block_n: int = 128,
                 interpret: bool = False):
     """Fully-fused signal layer: one launch from embeddings to fired
     activations and per-group winners.
 
-    x: (B, D) unit queries; centroids: (N, D) stacked centroid matrix;
-    classifier_mask/col_scale/col_thr/grouped_mask: (N,) per-column
-    metadata; member/default_onehot: (G, N) one-hot partition + default.
+    x: (B, D) unit queries; centroids: (N, D) stacked centroid matrix
+    (f32, or a bf16/int8 quantized store dequantized through
+    ``qscale``); classifier_mask/col_scale/col_thr/grouped_mask: (N,)
+    per-column metadata; member/default_onehot: (G, N) one-hot
+    partition + default; qscale: optional (N,) per-column scale on the
+    accumulated similarities (default all-ones).
     -> (raw (B,N) f32, scores (B,N) f32, fired (B,N) bool,
         win (B,G) int32 global column index, wscore (B,G) f32).
     """
@@ -284,10 +406,12 @@ def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
     npad = n + pad_n
     gp = max(g, 1)
 
-    cmat = jnp.zeros((npad, d), f32).at[:n].set(
-        jnp.asarray(centroids, f32))
+    cdt = _centroid_store_dtype(centroids)
+    cmat = jnp.zeros((npad, d), cdt).at[:n].set(
+        jnp.asarray(centroids, cdt))
     row = lambda v, fill: jnp.full((1, npad), fill, f32).at[0, :n].set(
         jnp.asarray(v, f32))
+    qs = row(jnp.ones(n, f32) if qscale is None else qscale, 1.0)
     cls = row(classifier_mask, 0.0)
     scale = row(col_scale, 0.0)
     thr = row(col_thr, 2.0)            # padded columns can never fire
@@ -303,6 +427,7 @@ def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((bb, d), lambda i: (i, 0)),
             pl.BlockSpec((npad, d), lambda i: (0, 0)),   # resident centroids
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
             pl.BlockSpec((1, npad), lambda i: (0, 0)),
             pl.BlockSpec((1, npad), lambda i: (0, 0)),
             pl.BlockSpec((1, npad), lambda i: (0, 0)),
@@ -325,8 +450,84 @@ def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
             jax.ShapeDtypeStruct((x.shape[0], gp), f32),
         ],
         interpret=interpret,
-    )(x, cmat, cls, scale, thr, grp, memberp, defaultp)
+    )(x, cmat, qs, cls, scale, thr, grp, memberp, defaultp)
     return (raw[:b, :n], scores[:b, :n], fired[:b, :n] > 0.5,
+            win[:b, :g], wscore[:b, :g])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret"))
+def fused_route_dtiled(x: jnp.ndarray, centroids: jnp.ndarray,
+                       classifier_mask: jnp.ndarray,
+                       col_scale: jnp.ndarray, col_thr: jnp.ndarray,
+                       grouped_mask: jnp.ndarray, member: jnp.ndarray,
+                       default_onehot: jnp.ndarray, *,
+                       qscale: jnp.ndarray | None = None,
+                       block_b: int = 128, block_d: int = 256,
+                       interpret: bool = False):
+    """``fused_route`` for embedder dims past the VMEM budget: same
+    contract, but the centroid matrix streams through VMEM in
+    (N, block_d) D-chunks with a persistent f32 scratch accumulator
+    instead of being fully resident.  D is zero-padded up to a
+    ``block_d`` multiple (zero chunks contribute nothing, so results
+    are exact); see ``_fused_route_dtiled_kernel``.
+    """
+    b, d = x.shape
+    n = centroids.shape[0]
+    g = member.shape[0]
+    f32 = jnp.float32
+    x, bb, nb = _pad_rows(x, block_b)
+    bd = max(1, min(block_d, d))
+    pad_d = (-d) % bd
+    dpad = d + pad_d
+    ndt = dpad // bd
+    gp = max(g, 1)
+
+    cdt = _centroid_store_dtype(centroids)
+    if pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_d)))
+    cmat = jnp.zeros((n, dpad), cdt).at[:, :d].set(
+        jnp.asarray(centroids, cdt))
+    row = lambda v: jnp.asarray(v, f32).reshape(1, n)
+    qs = row(jnp.ones(n, f32) if qscale is None else qscale)
+    memberf = jnp.asarray(member, f32).reshape(gp if g else 1, -1) \
+        if g else jnp.zeros((1, n), f32)
+    defaultf = jnp.asarray(default_onehot, f32).reshape(gp, -1) \
+        if g else jnp.zeros((1, n), f32)
+
+    raw, scores, fired, win, wscore = pl.pallas_call(
+        functools.partial(_fused_route_dtiled_kernel, n_dtiles=ndt),
+        grid=(nb, ndt),
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((n, bd), lambda i, j: (0, j)),  # streamed D-slab
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((gp, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((gp, n), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, gp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, gp), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], n), f32),
+            jax.ShapeDtypeStruct((x.shape[0], n), f32),
+            jax.ShapeDtypeStruct((x.shape[0], n), f32),
+            jax.ShapeDtypeStruct((x.shape[0], gp), jnp.int32),
+            jax.ShapeDtypeStruct((x.shape[0], gp), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bb, n), f32)],
+        interpret=interpret,
+    )(x, cmat, qs, row(classifier_mask), row(col_scale), row(col_thr),
+      row(grouped_mask), memberf, defaultf)
+    return (raw[:b], scores[:b], fired[:b] > 0.5,
             win[:b, :g], wscore[:b, :g])
 
 

@@ -17,3 +17,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke/serving paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_router_mesh(spec: str):
+    """Routing mesh from a CLI spec: ``"DATAxMODEL"`` (e.g. ``"2x4"``)
+    or ``"data=2,model=4"``.  Axis names follow the sharding rule table
+    (batch shards over ``data``, the stacked centroid matrix over
+    ``model``); requires data*model available XLA devices (use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to emulate
+    on CPU)."""
+    spec = spec.strip().lower()
+    try:
+        if "x" in spec and "=" not in spec:
+            data, model = (int(p) for p in spec.split("x", 1))
+        else:
+            axes = dict(kv.split("=", 1) for kv in spec.split(","))
+            data = int(axes.get("data", 1))
+            model = int(axes.get("model", 1))
+    except ValueError as e:
+        raise ValueError(
+            f"bad mesh spec {spec!r}: expected 'DATAxMODEL' (e.g. '2x4')"
+            f" or 'data=2,model=4'") from e
+    return jax.make_mesh((data, model), ("data", "model"))

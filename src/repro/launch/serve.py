@@ -49,8 +49,21 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--pallas-voronoi", action="store_true")
     ap.add_argument("--kernel", default=None,
-                    choices=["auto", "jnp", "grouped", "fused"],
-                    help="signal-layer lowering (auto: fused on TPU)")
+                    choices=["auto", "jnp", "grouped", "fused",
+                             "fused_dtiled"],
+                    help="signal-layer lowering (auto: fused on TPU; "
+                         "fused auto-upgrades to fused_dtiled past the "
+                         "VMEM budget)")
+    ap.add_argument("--precision", default=None,
+                    choices=["f32", "bf16", "int8"],
+                    help="centroid-store precision (bf16/int8 stores "
+                         "dequantize through per-signal scales with f32 "
+                         "GEMM accumulation)")
+    ap.add_argument("--mesh", default=None,
+                    help="shard the routing GEMM over a DATAxMODEL "
+                         "mesh, e.g. --mesh 2x4 (requires that many XLA "
+                         "devices; implies the shard_map path when "
+                         "--kernel fused)")
     ap.add_argument("--continuous", action="store_true",
                     help="serve via the continuous-batching loop "
                          "(enqueue + serve_forever) instead of submit/drain")
@@ -60,8 +73,24 @@ def main(argv=None):
 
     text = pathlib.Path(args.config).read_text() if args.config \
         else DEFAULT_DSL
+    mesh = None
+    kernel = args.kernel
+    if args.mesh:
+        from repro.launch.mesh import make_router_mesh
+        mesh = make_router_mesh(args.mesh)
+        # the shard_map path is gated behind the fused kernel family;
+        # a mesh with any other lowering would be silently inert
+        if kernel in (None, "auto"):
+            kernel = "fused"
+            print(f"[serve] --mesh {args.mesh}: kernel auto-resolved to "
+                  f"'fused' (the shard_map path requires it)")
+        elif kernel not in ("fused", "fused_dtiled"):
+            print(f"[serve] WARNING: --mesh {args.mesh} is inert with "
+                  f"--kernel {kernel}; the shard_map routing path needs "
+                  f"--kernel fused")
     svc = RouterService(text, use_pallas_voronoi=args.pallas_voronoi,
-                        kernel=args.kernel)
+                        kernel=kernel, precision=args.precision,
+                        mesh=mesh)
     for d in svc.diagnostics:
         print(f"[validate] {d}")
     t0 = time.time()

@@ -17,9 +17,13 @@ out — ``route``, ``route_actions`` and ``submit`` all derive their
 strings from that single evaluation, so a ``submit`` batch embeds and
 scores exactly once.  With ``kernel="fused"`` (the TPU default) the
 whole signal layer additionally collapses into the single
-centroid-resident ``fused_route`` Pallas launch.  The jitted callable
-and the device-resident ``PolicyTables`` are cached on the service
-across request batches.
+centroid-resident ``fused_route`` Pallas launch (auto-upgrading to the
+D-tiled streaming variant past the VMEM budget), and with ``mesh=``
+bound it routes through the shard_map lowering — batch over the data
+axes, centroid columns over model, exact cross-device winner
+reductions.  ``precision=`` selects the bf16/int8 centroid store.  The
+jitted callable and the device-resident ``PolicyTables`` are cached on
+the service across request batches.
 
 Serving runs in two modes: the one-shot ``submit``/``step``/``drain``
 path (FIFO ``Batcher``), and the continuous-batching loop —
@@ -67,6 +71,21 @@ def _route_core(emb, crisp_raw, tensors, jt, n_rules, kernel_mode,
     return policy_mod.evaluate_policy(jt, n_rules, fired, conf)
 
 
+@functools.lru_cache(maxsize=16)
+def _sharded_route_core(mesh, n_rules: int):
+    """Mesh twin of ``_route_core``: the shard_map'd signal layer and
+    the policy argmax compose into one jitted program per (mesh,
+    n_rules) — no host-visible (B, N) intermediates between them."""
+    eval_fn = engine_mod._sharded_signal_eval(mesh)
+
+    @jax.jit
+    def fn(emb, crisp_raw, st, jt):
+        _, _, fired, conf = eval_fn(emb, crisp_raw, st)
+        return policy_mod.evaluate_policy(jt, n_rules, fired, conf)
+
+    return fn
+
+
 @dataclasses.dataclass
 class BackendRuntime:
     name: str
@@ -83,6 +102,8 @@ class RouterService:
                  load_backends: bool = True, max_batch: int = 8,
                  use_pallas_voronoi: bool = False,
                  kernel: Optional[str] = None,
+                 precision: Optional[str] = None,
+                 mesh=None,
                  validate: bool = True, run_taxonomy: bool = False):
         from repro.signals.engine import SignalEngine
         self.config: RouterConfig = compile_text(dsl_text)
@@ -97,7 +118,8 @@ class RouterService:
         self.embedder = embedder or HashEmbedder()
         self.engine = SignalEngine(self.config, self.embedder,
                                    use_pallas=use_pallas_voronoi,
-                                   kernel=kernel)
+                                   kernel=kernel, precision=precision,
+                                   mesh=mesh)
         self.tables = policy_mod.build_tables(self.config)
         self._jt = self.tables.as_jax()       # device-resident, cached
         self.batcher = Batcher(max_batch=max_batch)
@@ -136,10 +158,21 @@ class RouterService:
             emb = self.engine.embed(texts)
             crisp = self.engine.crisp_scores(texts, metadata)
             bucket = 1 << max(0, (b - 1).bit_length())
+            if self.engine.sharded_active:
+                # keep buckets divisible by the mesh's data axes so the
+                # batch shards instead of replicating
+                dsz = engine_mod.mesh_data_size(self.engine.mesh)
+                bucket += (-bucket) % dsz
             if bucket != b:
                 pad = ((0, bucket - b), (0, 0))
                 emb = np.pad(emb, pad)
                 crisp = np.pad(crisp, pad)
+            if self.engine.sharded_active:
+                idx, _ = _sharded_route_core(
+                    self.engine.mesh, self.tables.n_rules)(
+                    jnp.asarray(emb), jnp.asarray(crisp),
+                    self.engine.sharded_tensors, self._jt)
+                return np.asarray(idx)[:b]
             idx, _ = _route_core(
                 jnp.asarray(emb), jnp.asarray(crisp), self.engine.tensors,
                 self._jt, self.tables.n_rules,

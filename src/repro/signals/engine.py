@@ -33,15 +33,33 @@ groups): signals in a ``softmax_exclusive`` SIGNAL_GROUP are
 Voronoi-normalized (Def 1) then thresholded at the group θ; ungrouped
 probabilistic signals use independent thresholding (the conflict-prone
 baseline the paper starts from).
+
+Scale levers (all composable, README "Scaling the router"):
+
+  * ``precision=`` — bf16 / int8 centroid stores with per-signal
+    dequantization scales (``quantize_centroids``): f32 accumulation
+    in every GEMM, bind-time recalibration via unit-norm scales so
+    fired/winner decisions track the f32 engine.
+  * ``mesh=`` + ``kernel="fused"`` — the shard_map lowering
+    (``sharded_fused_route``): batch over the mesh's (pod, data) axes,
+    centroid columns over ``model``, with exact cross-device grouped
+    softmax (pmax/psum) and first-occurrence winner reductions.
+  * VMEM auto-selection — a resolved ``fused`` upgrades itself to
+    ``fused_dtiled`` when the bound store exceeds the VMEM budget
+    (kernels/ops.select_fused_variant).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
+import hashlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.atoms import AtomKind
 from repro.dsl.compiler import RouterConfig
@@ -67,6 +85,88 @@ class SignalBatchResult:
     confidence: np.ndarray       # (B, n) confidence used for TIER routing
 
 
+# ---------------------------------------------------------------------------
+# mixed-precision centroid store
+# ---------------------------------------------------------------------------
+
+PRECISIONS = ("f32", "bf16", "int8")
+
+
+def quantize_centroids(c: np.ndarray, precision: str
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, D) f32 unit-norm centroids -> (store, qscale): the quantized
+    centroid tensor plus the per-signal dequantization scale.
+
+    The qscale vector is where bind-time threshold *recalibration*
+    happens: it folds 1/||dequantized centroid|| into the per-column
+    similarity scale, so the similarities the thresholds, classifier
+    calibration, and grouped softmax see are cosines against the
+    *unit-norm* quantized centroid directions.  Every θ (signal
+    threshold and group threshold) is therefore preserved untouched —
+    the only residual difference vs f32 is the centroid-direction
+    rounding itself, which the GEMM accumulates in f32.
+
+    * ``f32``  — identity store, all-ones scales.
+    * ``bf16`` — bf16 rounding of the centroid matrix (half the VMEM /
+      HBM traffic); qscale renormalizes each rounded row.
+    * ``int8`` — symmetric per-signal scaling to int8 (quarter the
+      traffic); the per-row quantization step s = max|c| / 127 composes
+      with the renormalization into one scale: qscale = s / ||q·s||.
+    """
+    c = np.asarray(c, np.float32)
+    n = c.shape[0]
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision must be one of {PRECISIONS}, "
+                         f"got {precision!r}")
+    if precision == "f32" or n == 0:
+        return c.astype(np.float32), np.ones(n, np.float32)
+    if precision == "bf16":
+        store = np.asarray(jnp.asarray(c, jnp.bfloat16))
+        norm = np.linalg.norm(store.astype(np.float32), axis=1)
+        return store, (1.0 / np.maximum(norm, 1e-8)).astype(np.float32)
+    step = np.abs(c).max(axis=1) / 127.0                      # (N,)
+    step = np.maximum(step, 1e-12)
+    q = np.clip(np.rint(c / step[:, None]), -127, 127).astype(np.int8)
+    deq = q.astype(np.float32) * step[:, None]
+    norm = np.linalg.norm(deq, axis=1)
+    return q, (step / np.maximum(norm, 1e-8)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# device-table memoization: the static tensor bundle of a bound policy is
+# uploaded once per (content, mesh, precision), not once per engine
+# ---------------------------------------------------------------------------
+
+_DEVICE_TABLE_CACHE: "collections.OrderedDict[tuple, Dict[str, jnp.ndarray]]" \
+    = collections.OrderedDict()
+_DEVICE_TABLE_CACHE_CAP = 64
+
+
+def _device_tables(np_tensors: Dict[str, np.ndarray], *,
+                   mesh: Optional[Mesh], precision: str
+                   ) -> Dict[str, jnp.ndarray]:
+    """Memoized device put: identical numpy bundles (same DSL bound to
+    the same embedder) share one set of device-resident arrays instead
+    of re-uploading centroid tables per SignalEngine instance."""
+    h = hashlib.sha1()
+    for k in sorted(np_tensors):
+        v = np.ascontiguousarray(np_tensors[k])
+        h.update(k.encode())
+        h.update(str(v.dtype).encode())
+        h.update(str(v.shape).encode())
+        h.update(v.tobytes())
+    key = (precision, mesh, h.hexdigest())
+    hit = _DEVICE_TABLE_CACHE.get(key)
+    if hit is not None:
+        _DEVICE_TABLE_CACHE.move_to_end(key)
+        return hit
+    out = {k: jnp.asarray(v) for k, v in np_tensors.items()}
+    _DEVICE_TABLE_CACHE[key] = out
+    while len(_DEVICE_TABLE_CACHE) > _DEVICE_TABLE_CACHE_CAP:
+        _DEVICE_TABLE_CACHE.popitem(last=False)
+    return out
+
+
 def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
                       t: Dict[str, jnp.ndarray], *,
                       kernel_mode: str, interpret: bool
@@ -81,20 +181,28 @@ def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
     * ``"fused"``   — kernels/voronoi.fused_route: GEMM (centroids
       resident in VMEM, N-tiled), grouped softmax, thresholds and
       default fallback all in ONE Pallas launch;
+    * ``"fused_dtiled"`` — kernels/voronoi.fused_route_dtiled: the same
+      single launch with the centroid store streamed through VMEM in
+      D-chunks (embedder dims past the VMEM budget);
     * ``"grouped"`` — XLA GEMM + the grouped-Voronoi Pallas kernel
       (PR 1's path);
     * ``"jnp"``     — XLA GEMM + segment-reduction normalization.
 
-    All three scatter into the full (B, n_signals) layout here.
+    All lowerings dequantize the (possibly bf16/int8) centroid store
+    through the per-column ``qscale`` vector and scatter into the full
+    (B, n_signals) layout here.
     """
     f32 = jnp.float32
     emb = emb.astype(f32)
-    if kernel_mode == "fused":
+    if kernel_mode in ("fused", "fused_dtiled"):
         from repro.kernels import voronoi as _vor
-        raw_p, normalized_p, fired_p, _, _ = _vor.fused_route(
+        fn = (_vor.fused_route if kernel_mode == "fused"
+              else _vor.fused_route_dtiled)
+        raw_p, normalized_p, fired_p, _, _ = fn(
             emb, t["centroids"], t["classifier_mask"].astype(f32),
             t["col_scale"], t["col_thr"], t["grouped_mask"],
-            t["member_full"], t["default_full"], interpret=interpret)
+            t["member_full"], t["default_full"], qscale=t["qscale"],
+            interpret=interpret)
     else:
         raw_p, normalized_p, fired_p = _signal_eval_unfused(
             emb, t, kernel_mode=kernel_mode, interpret=interpret)
@@ -121,8 +229,8 @@ def _signal_eval_unfused(emb: jnp.ndarray, t: Dict[str, jnp.ndarray], *,
     segment-reduction jnp path or the grouped-Voronoi Pallas kernel."""
     f32 = jnp.float32
     sims = jax.lax.dot_general(                      # the single GEMM (B, N)
-        emb, t["centroids"], (((1,), (1,)), ((), ())),
-        preferred_element_type=f32)
+        emb, t["centroids"].astype(f32), (((1,), (1,)), ((), ())),
+        preferred_element_type=f32) * t["qscale"][None, :]
     raw_p = jnp.where(t["classifier_mask"][None, :],
                       (sims + 1.0) * 0.5, sims)
     fired_p = raw_p >= t["thr_prob"][None, :]
@@ -161,7 +269,7 @@ def _signal_eval_unfused(emb: jnp.ndarray, t: Dict[str, jnp.ndarray], *,
 _SIGNAL_EVAL = jax.jit(_signal_eval_core,
                        static_argnames=("kernel_mode", "interpret"))
 
-KERNEL_MODES = ("auto", "jnp", "grouped", "fused")
+KERNEL_MODES = ("auto", "jnp", "grouped", "fused", "fused_dtiled")
 
 
 def resolve_kernel_mode(kernel: Optional[str], use_pallas: bool) -> str:
@@ -169,7 +277,9 @@ def resolve_kernel_mode(kernel: Optional[str], use_pallas: bool) -> str:
     lowering.  ``auto`` picks the fully-fused kernel on TPU (where it
     compiles) and the jnp segment path elsewhere (interpret-mode Pallas
     is emulation-slow on CPU); ``use_pallas=True`` keeps its PR 1
-    meaning of the grouped-Voronoi kernel."""
+    meaning of the grouped-Voronoi kernel.  A resolved ``fused`` may be
+    upgraded to ``fused_dtiled`` at bind time when the centroid store
+    exceeds the VMEM budget (kernels/ops.select_fused_variant)."""
     if kernel is not None and kernel != "auto":
         if kernel not in KERNEL_MODES:
             raise ValueError(f"kernel must be one of {KERNEL_MODES}, "
@@ -180,21 +290,198 @@ def resolve_kernel_mode(kernel: Optional[str], use_pallas: bool) -> str:
     return "fused" if jax.default_backend() == "tpu" else "jnp"
 
 
+# ---------------------------------------------------------------------------
+# shard_map lowering: batch over the mesh's data axes, routes over model.
+# The grouped softmax and the per-group winner are exact across devices:
+# per-group maxima ride pmax, denominators / fired-any ride psum, and the
+# winner is the smallest global column index attaining the pmax'd best
+# score (first-occurrence argmax semantics, matching fused_route).
+# ---------------------------------------------------------------------------
+
+
+def _sharded_route_body(model_axis: Optional[str]):
+    """Per-device body for the shard_map'd signal layer: the local
+    similarity GEMM (f32 accumulation, qscale dequantization) plus the
+    ONE shared copy of the routing semantics — kernels/voronoi.
+    _route_tail with its collective hooks bound to pmax/psum/pmin over
+    the model axis.  Operands are the local shards of the fused_route
+    contract: x (Bl, D), c (Nl, D) store, and the (1, Nl)/(G, Nl)
+    column metadata.  Returns the local (Bl, Nl) raw/scores/fired plus
+    the model-replicated (Bl, G) winner index (global column space)
+    and winning score."""
+    from repro.kernels.voronoi import _route_tail
+
+    def body(x, c, qs, cls, scale, thr, grp, mem, dflt):
+        f32 = jnp.float32
+        sims = jax.lax.dot_general(
+            x.astype(f32), c.astype(f32), (((1,), (1,)), ((), ())),
+            preferred_element_type=f32) * qs                  # (Bl, Nl)
+        hooks = {}
+        col_offset = 0
+        if model_axis:
+            hooks = dict(
+                reduce_max=lambda v: jax.lax.pmax(v, model_axis),
+                reduce_sum=lambda v: jax.lax.psum(v, model_axis),
+                reduce_min=lambda v: jax.lax.pmin(v, model_axis))
+            col_offset = jax.lax.axis_index(model_axis) * c.shape[0]
+        return _route_tail(sims, cls, scale, thr, grp, mem, dflt,
+                           col_offset=col_offset, **hooks)
+
+    return body
+
+
+def _mesh_batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def mesh_data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _mesh_batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def mesh_model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_route_raw(mesh: Mesh):
+    """Jitted shard_map of the fused_route contract over ``mesh``:
+    inputs must already be padded to (data-multiple B, model-multiple
+    N).  Cached per mesh."""
+    from jax.experimental.shard_map import shard_map
+    daxes = _mesh_batch_axes(mesh)
+    maxis = "model" if "model" in mesh.shape else None
+    bspec = P(daxes if daxes else None, None)
+    cspec = P(maxis, None)
+    rspec = P(None, maxis)
+    ospec = P(daxes if daxes else None, maxis)
+    wspec = P(daxes if daxes else None, None)
+    sh = shard_map(
+        _sharded_route_body(maxis), mesh=mesh,
+        in_specs=(bspec, cspec, rspec, rspec, rspec, rspec, rspec,
+                  rspec, rspec),
+        out_specs=(ospec, ospec, ospec, wspec, wspec),
+        check_rep=False)
+    return jax.jit(sh)
+
+
+def sharded_fused_route(mesh: Mesh, x, centroids, classifier_mask,
+                        col_scale, col_thr, grouped_mask, member,
+                        default_onehot, *, qscale=None):
+    """Distributed twin of kernels/ops.fused_route: shards B over the
+    mesh's (pod, data) axes and N over ``model``, with exact
+    cross-device grouped softmax and winner reductions.  Same contract:
+    -> (raw, scores, fired, win, wscore), win in global column space.
+
+    Divisibility fallback mirrors distributed/sharding.fit_spec's
+    replication semantics through dead padding: B pads up to the
+    data-axes multiple (rows sliced off), N pads up to the model-axis
+    multiple with columns that can never fire or win (threshold 2, no
+    group membership), so uneven shapes shard instead of degrading.
+    """
+    f32 = jnp.float32
+    x = jnp.asarray(x)
+    b, _ = x.shape
+    n = centroids.shape[0]
+    g = member.shape[0]
+    gp = max(g, 1)
+    pad_b = (-b) % mesh_data_size(mesh)
+    pad_n = (-n) % mesh_model_size(mesh)
+    npad = n + pad_n
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    cdt = centroids.dtype if centroids.dtype in (jnp.bfloat16, jnp.int8) \
+        else f32
+    cmat = jnp.zeros((npad, x.shape[1]), cdt).at[:n].set(
+        jnp.asarray(centroids, cdt))
+    row = lambda v, fill: jnp.full((1, npad), fill, f32).at[0, :n].set(
+        jnp.asarray(v, f32))
+    qs = row(jnp.ones(n, f32) if qscale is None else qscale, 1.0)
+    memberp = jnp.zeros((gp, npad), f32).at[:g, :n].set(
+        jnp.asarray(member, f32))
+    defaultp = jnp.zeros((gp, npad), f32).at[:g, :n].set(
+        jnp.asarray(default_onehot, f32))
+    raw, scores, fired, win, wscore = _sharded_route_raw(mesh)(
+        x, cmat, qs, row(classifier_mask, 0.0), row(col_scale, 0.0),
+        row(col_thr, 2.0), row(grouped_mask, 0.0), memberp, defaultp)
+    return (raw[:b, :n], scores[:b, :n], fired[:b, :n],
+            win[:b, :g], wscore[:b, :g])
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_signal_eval(mesh: Mesh):
+    """Jitted engine-level sharded evaluation: the shard_map'd signal
+    layer plus the scatter into the full (B, n_signals) layout and the
+    crisp-column merge.  Expects the bind-time padded bundle from
+    ``SignalEngine._build_sharded_bundle`` and a B already padded to
+    the mesh's data-axes multiple."""
+    sh = _sharded_route_raw(mesh)
+
+    @jax.jit
+    def fn(emb, crisp_raw, st):
+        f32 = jnp.float32
+        raw_pp, norm_pp, fired_pp, _, _ = sh(
+            emb.astype(f32), st["centroids"], st["qscale_row"],
+            st["cls_row"], st["scale_row"], st["thr_row"],
+            st["grp_row"], st["member_row"], st["default_row"])
+        np_ = st["prob_cols"].shape[0]
+        raw_p, norm_p = raw_pp[:, :np_], norm_pp[:, :np_]
+        fired_p = fired_pp[:, :np_]
+        b = emb.shape[0]
+        n = np_ + st["crisp_cols"].shape[0]
+        raw = jnp.zeros((b, n), f32).at[:, st["prob_cols"]].set(raw_p)
+        normalized = jnp.zeros((b, n), f32).at[:, st["prob_cols"]].set(
+            norm_p)
+        fired = jnp.zeros((b, n), bool).at[:, st["prob_cols"]].set(
+            fired_p)
+        if st["crisp_cols"].shape[0]:
+            cr = crisp_raw.astype(f32)
+            raw = raw.at[:, st["crisp_cols"]].set(cr)
+            normalized = normalized.at[:, st["crisp_cols"]].set(cr)
+            fired = fired.at[:, st["crisp_cols"]].set(
+                cr >= st["thr_crisp"][None, :])
+        conf = jnp.where(fired, normalized, 0.0)
+        return raw, normalized, fired, conf
+
+    return fn
+
+
 class SignalEngine:
     def __init__(self, config: RouterConfig, embedder, *,
                  use_pallas: bool = False,
-                 kernel: Optional[str] = None):
+                 kernel: Optional[str] = None,
+                 precision: Optional[str] = None,
+                 mesh: Optional[Mesh] = None):
         from repro.kernels import ops
         self.cfg = config
         self.embedder = embedder
         self.use_pallas = use_pallas
         self.kernel_mode = resolve_kernel_mode(kernel, use_pallas)
+        self.precision = precision or "f32"
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, "
+                             f"got {precision!r}")
+        self.mesh = mesh
         self.interpret = ops.default_interpret()
         self.names = sorted(config.signals)
         self.index = {n: i for i, n in enumerate(self.names)}
         self.centroids: Dict[str, np.ndarray] = {}
         self._bind_centroids()
         self._build_tensors()
+        if self.kernel_mode == "fused" and self._prob_names \
+                and self.mesh is None:
+            # VMEM-budget auto-selection: embedder dims whose centroid
+            # store cannot stay resident stream through the D-tiled
+            # variant; past even that, fall back to jnp.  With a mesh
+            # bound the shard_map path evaluates per-device jnp (no
+            # VMEM constraint), so the gate must not downgrade it away.
+            store = self.tensors["centroids"]
+            self.kernel_mode = ops.select_fused_variant(
+                store.shape[0], store.shape[1],
+                self.tensors["member_full"].shape[0],
+                centroid_bytes=store.dtype.itemsize)
 
     # ---- binding -------------------------------------------------------------
     def _prototype_texts(self, name: str) -> List[str]:
@@ -278,8 +565,13 @@ class SignalEngine:
                 default_onehot[g, default_rows[g]] = 1.0
         dim = (self.centroids[self._prob_names[0]].shape[0]
                if self._prob_names else 1)
-        centroids = (np.stack([self.centroids[n] for n in self._prob_names])
-                     if self._prob_names else np.zeros((0, dim), np.float32))
+        centroids_f32 = (
+            np.stack([self.centroids[n] for n in self._prob_names])
+            if self._prob_names else np.zeros((0, dim), np.float32))
+        # mixed-precision centroid store + the per-signal dequantization
+        # scale that carries the bind-time threshold recalibration
+        centroids, qscale = quantize_centroids(centroids_f32,
+                                               self.precision)
         sigs = self.cfg.signals
         # full-width per-column metadata for the fully-fused kernel
         # (kernels/voronoi.fused_route operates on the whole probabilistic
@@ -301,38 +593,99 @@ class SignalEngine:
         for g, (start, count) in enumerate(member_rows):
             if default_rows[g] is not None:
                 default_full[g, grouped_cols[default_rows[g]]] = 1.0
-        self.tensors: Dict[str, jnp.ndarray] = {
-            k: jnp.asarray(v) for k, v in {
-                "centroids": centroids,
-                "classifier_mask": np.asarray(
-                    [sigs[n].kind is not AtomKind.GEOMETRIC
-                     for n in self._prob_names], bool),
-                "thr_prob": thr_prob,
-                "thr_crisp": np.asarray(
-                    [sigs[n].threshold for n in self._crisp_names],
-                    np.float32),
-                "prob_cols": np.asarray(
-                    [self.index[n] for n in self._prob_names], np.int32),
-                "crisp_cols": np.asarray(
-                    [self.index[n] for n in self._crisp_names], np.int32),
-                "grouped_cols": np.asarray(grouped_cols, np.int32),
-                "group_id": np.asarray(group_id, np.int32),
-                "inv_tau": np.asarray(inv_tau, np.float32),
-                "group_thr": np.asarray(group_thr, np.float32),
-                "member": member,
-                "default_onehot": default_onehot,
-                "col_scale": col_scale,
-                "col_thr": col_thr,
-                "grouped_mask": grouped_mask,
-                "member_full": member_full,
-                "default_full": default_full,
-            }.items()}
+        np_tensors: Dict[str, np.ndarray] = {
+            "centroids": centroids,
+            "qscale": qscale,
+            "classifier_mask": np.asarray(
+                [sigs[n].kind is not AtomKind.GEOMETRIC
+                 for n in self._prob_names], bool),
+            "thr_prob": thr_prob,
+            "thr_crisp": np.asarray(
+                [sigs[n].threshold for n in self._crisp_names],
+                np.float32),
+            "prob_cols": np.asarray(
+                [self.index[n] for n in self._prob_names], np.int32),
+            "crisp_cols": np.asarray(
+                [self.index[n] for n in self._crisp_names], np.int32),
+            "grouped_cols": np.asarray(grouped_cols, np.int32),
+            "group_id": np.asarray(group_id, np.int32),
+            "inv_tau": np.asarray(inv_tau, np.float32),
+            "group_thr": np.asarray(group_thr, np.float32),
+            "member": member,
+            "default_onehot": default_onehot,
+            "col_scale": col_scale,
+            "col_thr": col_thr,
+            "grouped_mask": grouped_mask,
+            "member_full": member_full,
+            "default_full": default_full,
+        }
+        # memoized device put: a second engine bound to the same DSL /
+        # embedder / (mesh, precision) reuses the resident tables
+        self.tensors: Dict[str, jnp.ndarray] = _device_tables(
+            np_tensors, mesh=None, precision=self.precision)
+        self.sharded_tensors: Optional[Dict[str, jnp.ndarray]] = None
+        if (self.mesh is not None and self._prob_names and self._fused_ok
+                and self.kernel_mode in ("fused", "fused_dtiled")):
+            # only when the shard_map path can actually activate — a
+            # mesh bound to a non-fused kernel must not pay a second
+            # device upload of the centroid store
+            self.sharded_tensors = _device_tables(
+                self._build_sharded_bundle(np_tensors),
+                mesh=self.mesh, precision=self.precision)
+
+    def _build_sharded_bundle(self, t: Dict[str, np.ndarray]
+                              ) -> Dict[str, np.ndarray]:
+        """Model-axis-padded view of the probabilistic column space for
+        the shard_map lowering: N pads up to the mesh's model-axis
+        multiple with dead columns (threshold 2, no membership) so the
+        centroid GEMM shards evenly — the divisibility fallback keeps
+        results exact instead of replicating the whole table."""
+        n_prob = t["centroids"].shape[0]
+        dim = t["centroids"].shape[1] if t["centroids"].ndim == 2 else 1
+        pad = (-n_prob) % mesh_model_size(self.mesh)
+        nsh = n_prob + pad
+        gi = t["member_full"].shape[0]
+
+        def rowp(v, fill):
+            out = np.full((1, nsh), fill, np.float32)
+            out[0, :n_prob] = np.asarray(v, np.float32)
+            return out
+
+        store = t["centroids"]
+        if pad:
+            store = np.concatenate(
+                [store, np.zeros((pad, dim), store.dtype)], axis=0)
+        grid = np.zeros((gi, nsh), np.float32)
+        grid[:, :n_prob] = t["member_full"]
+        dflt = np.zeros((gi, nsh), np.float32)
+        dflt[:, :n_prob] = t["default_full"]
+        return {
+            "centroids": store,
+            "qscale_row": rowp(t["qscale"], 1.0),
+            "cls_row": rowp(t["classifier_mask"].astype(np.float32), 0.0),
+            "scale_row": rowp(t["col_scale"], 0.0),
+            "thr_row": rowp(t["col_thr"], 2.0),
+            "grp_row": rowp(t["grouped_mask"], 0.0),
+            "member_row": grid,
+            "default_row": dflt,
+            "prob_cols": t["prob_cols"],
+            "crisp_cols": t["crisp_cols"],
+            "thr_crisp": t["thr_crisp"],
+        }
 
     @property
     def fused_ok(self) -> bool:
         """True when the bound config lowers to the fused tensor path
         (always, except overlapping SIGNAL_GROUP memberships)."""
         return self._fused_ok and bool(self._prob_names)
+
+    @property
+    def sharded_active(self) -> bool:
+        """True when evaluation goes through the shard_map lowering:
+        a mesh was bound AND the fused kernel family was selected (the
+        distributed path is gated behind ``kernel="fused"``)."""
+        return (self.mesh is not None and self.fused_ok
+                and self.kernel_mode in ("fused", "fused_dtiled"))
 
     # ---- evaluation ------------------------------------------------------------
     def embed(self, texts: Sequence[str]) -> np.ndarray:
@@ -360,12 +713,31 @@ class SignalEngine:
             return self.evaluate_legacy(texts, metadata)
         emb = self.embedder.embed(texts)
         crisp = self.crisp_scores(texts, metadata)
-        raw, normalized, fired, conf = _SIGNAL_EVAL(
-            jnp.asarray(emb), jnp.asarray(crisp), self.tensors,
-            kernel_mode=self.kernel_mode, interpret=self.interpret)
+        if self.sharded_active:
+            raw, normalized, fired, conf = self.eval_sharded(emb, crisp)
+        else:
+            raw, normalized, fired, conf = _SIGNAL_EVAL(
+                jnp.asarray(emb), jnp.asarray(crisp), self.tensors,
+                kernel_mode=self.kernel_mode, interpret=self.interpret)
         return SignalBatchResult(
             list(self.names), np.asarray(raw), np.asarray(normalized),
             np.asarray(fired), np.asarray(conf))
+
+    def eval_sharded(self, emb: np.ndarray, crisp: np.ndarray):
+        """Mesh-distributed evaluation of the bound signal layer: B
+        pads up to the data-axes multiple, shards over (pod, data), and
+        the probabilistic columns shard over model.  -> (raw,
+        normalized, fired, conf) device arrays sliced back to B rows."""
+        b = emb.shape[0]
+        pad = (-b) % mesh_data_size(self.mesh)
+        emb = np.asarray(emb)
+        crisp = np.asarray(crisp)
+        if pad:
+            emb = np.pad(emb, ((0, pad), (0, 0)))
+            crisp = np.pad(crisp, ((0, pad), (0, 0)))
+        raw, normalized, fired, conf = _sharded_signal_eval(self.mesh)(
+            jnp.asarray(emb), jnp.asarray(crisp), self.sharded_tensors)
+        return raw[:b], normalized[:b], fired[:b], conf[:b]
 
     # ---- legacy interpreted path (A/B oracle + overlapping-group fallback) ----
     def evaluate_legacy(self, texts: Sequence[str],

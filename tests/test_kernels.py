@@ -238,6 +238,146 @@ def test_fused_route_matches_composed_kernels():
 
 
 # ---------------------------------------------------------------------------
+# fused_route_dtiled (D-chunk streaming variant)
+# ---------------------------------------------------------------------------
+
+def _assert_dtiled_parity(args, *, block_d, block_b=128, atol=1e-5):
+    got = ops.fused_route_dtiled(*[jnp.asarray(a) for a in args],
+                                 interpret=True, block_d=block_d,
+                                 block_b=block_b)
+    want = ref.fused_route_dtiled_ref(*args, block_d=block_d)
+    for name, a, w in zip(("raw", "scores", "fired", "win", "wscore"),
+                          got, want):
+        a, w = np.asarray(a), np.asarray(w)
+        if a.dtype in (np.bool_, np.int32):
+            np.testing.assert_array_equal(a, w, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, w, atol=atol, err_msg=name)
+
+
+@pytest.mark.parametrize("d,block_d", [
+    (32, 32),        # D exactly one tile -> single chunk
+    (33, 32),        # D one over a tile -> padded second chunk
+    (64, 32),        # two exact chunks
+    (65, 32),        # two chunks + 1
+    (256, 32),       # D >> tile: 8 streamed chunks
+    (300, 64),       # uneven D >> tile
+])
+def test_fused_route_dtiled_tile_boundaries(d, block_d):
+    """The D-chunk accumulator must be invisible: bitwise-equal fired
+    masks and winners vs the chunk-accumulated oracle at every tile
+    edge (D == tile, tile + 1, D >> tile)."""
+    args = _fused_route_inputs(16, [4, 4, 4], b=33, seed=d, d=d)
+    _assert_dtiled_parity(args, block_d=block_d)
+
+
+@pytest.mark.parametrize("b,n,sizes", [
+    (1, 6, [3, 2]),
+    (129, 24, [1, 9, 8]),        # batch one over a block, singleton group
+    (7, 40, [40]),               # one big group, no ungrouped
+])
+def test_fused_route_dtiled_matches_resident(b, n, sizes):
+    """Streaming the centroids through D-chunks must agree with the
+    fully-resident kernel on decisions (bitwise) and scores (ulp)."""
+    args = _fused_route_inputs(n, sizes, b, seed=b + n, d=96)
+    tiled = ops.fused_route_dtiled(*[jnp.asarray(a) for a in args],
+                                   interpret=True, block_d=32)
+    resident = ops.fused_route(*[jnp.asarray(a) for a in args],
+                               interpret=True)
+    for name, a, w in zip(("raw", "scores", "fired", "win", "wscore"),
+                          tiled, resident):
+        a = np.asarray(a, np.float32)
+        w = np.asarray(w, np.float32)
+        np.testing.assert_allclose(a, w, atol=1e-5, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(tiled[2]),
+                                  np.asarray(resident[2]), err_msg="fired")
+    np.testing.assert_array_equal(np.asarray(tiled[3]),
+                                  np.asarray(resident[3]), err_msg="win")
+
+
+def test_fused_route_dtiled_no_groups():
+    args = _fused_route_inputs(10, [], b=5, seed=7, d=80)
+    _assert_dtiled_parity(args, block_d=32)
+    out = ops.fused_route_dtiled(*[jnp.asarray(a) for a in args],
+                                 interpret=True, block_d=32)
+    assert out[3].shape == (5, 0) and out[4].shape == (5, 0)
+
+
+def test_select_fused_variant_budget():
+    """Auto-selection: small stores stay resident, stores past the VMEM
+    budget stream through the D-tiled variant, and route tables so wide
+    that even the D-tiled accumulator spills degrade to jnp; quantized
+    stores fit a proportionally larger N×D."""
+    assert ops.select_fused_variant(64, 256) == "fused"
+    assert ops.select_fused_variant(512, 16384) == "fused_dtiled"
+    # N so large the (bb, N) accumulator itself exceeds VMEM: only the
+    # jnp lowering still runs
+    assert ops.select_fused_variant(32768, 64) == "jnp"
+    # explicit tiny budget: nothing fits -> jnp fallback
+    assert ops.select_fused_variant(64, 256,
+                                    budget_bytes=1 << 10) == "jnp"
+    # int8 store is 4x smaller: a shape that spills in f32 can stay
+    # resident at centroid_bytes=1
+    n, d = 768, 4096
+    assert ops.select_fused_variant(n, d, centroid_bytes=4) \
+        == "fused_dtiled"
+    assert ops.select_fused_variant(n, d, centroid_bytes=1) == "fused"
+
+
+# ---------------------------------------------------------------------------
+# quantized centroid stores through the fused kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+@pytest.mark.parametrize("variant", ["fused", "fused_dtiled"])
+def test_fused_route_quantized_store_matches_oracle(precision, variant):
+    """bf16/int8 centroid stores + per-signal dequant scales must match
+    the oracle fed the same quantized inputs bitwise on fired/win."""
+    from repro.signals.engine import quantize_centroids
+    args = list(_fused_route_inputs(14, [5, 4], b=21, seed=3, d=64))
+    store, qscale = quantize_centroids(args[1], precision)
+    args[1] = store
+    jargs = [jnp.asarray(a) for a in args]
+    qs = jnp.asarray(qscale)
+    if variant == "fused":
+        got = ops.fused_route(*jargs, qscale=qs, interpret=True)
+        want = ref.fused_route_ref(*args, qscale=qscale)
+    else:
+        got = ops.fused_route_dtiled(*jargs, qscale=qs, interpret=True,
+                                     block_d=16)
+        want = ref.fused_route_dtiled_ref(*args, qscale=qscale,
+                                          block_d=16)
+    for name, a, w in zip(("raw", "scores", "fired", "win", "wscore"),
+                          got, want):
+        a, w = np.asarray(a), np.asarray(w)
+        if a.dtype in (np.bool_, np.int32):
+            np.testing.assert_array_equal(a, w, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, w, atol=1e-5, err_msg=name)
+
+
+def test_quantize_centroids_unit_norm_recalibration():
+    """The dequantization scale folds in 1/||deq|| — the bind-time
+    threshold recalibration: effective centroids present unit norm, so
+    every θ carries over from f32 untouched."""
+    from repro.signals.engine import quantize_centroids
+    rng = np.random.default_rng(0)
+    c = rng.normal(size=(9, 48)).astype(np.float32)
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    for prec in ("bf16", "int8"):
+        store, qscale = quantize_centroids(c, prec)
+        eff = store.astype(np.float32) * qscale[:, None]
+        np.testing.assert_allclose(np.linalg.norm(eff, axis=1), 1.0,
+                                   atol=1e-5)
+        # direction error stays small (the only residual vs f32)
+        cos = (eff * c).sum(axis=1)
+        assert (cos > 0.995).all(), prec
+    store, qscale = quantize_centroids(c, "f32")
+    np.testing.assert_array_equal(store, c)
+    np.testing.assert_array_equal(qscale, np.ones(9, np.float32))
+
+
+# ---------------------------------------------------------------------------
 # decode GQA
 # ---------------------------------------------------------------------------
 

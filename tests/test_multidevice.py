@@ -78,6 +78,73 @@ assert dl < 1e-4 and dp < 1e-3
     assert "DLOSS" in stdout
 
 
+def test_sharded_fused_route_matches_single_device():
+    """shard_map routing (B over data, N over model) vs the
+    single-device fused_route kernel on uneven B and N not divisible by
+    the mesh axes: bitwise fired/win, allclose scores.  The divisibility
+    fallback pads with dead rows/columns (replication-equivalent,
+    mirroring distributed/sharding semantics) so results stay exact."""
+    stdout = _run("""
+import numpy as np, jax, jax.numpy as jnp, pathlib, sys
+sys.path.insert(0, str(pathlib.Path(%r)))
+from repro.kernels import ops
+from repro.signals import engine as engine_mod
+from tests.test_kernels import _fused_route_inputs
+assert jax.device_count() == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+shapes = [(18, [5, 4, 3], 33, 64),    # N %% 4 != 0, B %% 2 != 0
+          (7, [3, 2], 5, 32),         # N < one shard per device
+          (24, [1, 9, 8], 129, 128)]  # divisible N, uneven B
+for (n, sizes, b, d) in shapes:
+    args = _fused_route_inputs(n, sizes, b, seed=n, d=d)
+    jargs = [jnp.asarray(a) for a in args]
+    got = engine_mod.sharded_fused_route(mesh, *jargs)
+    want = ops.fused_route(*jargs, interpret=True)
+    for name, a, w in zip(("raw", "scores", "fired", "win", "wscore"),
+                          got, want):
+        a, w = np.asarray(a), np.asarray(w)
+        if a.dtype in (np.bool_, np.int32):
+            assert (a == w).all(), (name, n, b)
+        else:
+            assert np.allclose(a, w, atol=1e-5), (name, n, b)
+print("PARITY_SHAPES", len(shapes))
+""" % str(pathlib.Path(__file__).resolve().parents[1]))
+    assert "PARITY_SHAPES 3" in stdout
+
+
+def test_sharded_engine_and_router_match_single_device():
+    """End to end on 8 emulated devices: SignalEngine + RouterService
+    with mesh= route identically to the single-device engine, for f32
+    and quantized centroid stores."""
+    stdout = _run("""
+import numpy as np, jax, pathlib, sys
+sys.path.insert(0, str(pathlib.Path(%r)))
+from repro.serving.router import RouterService
+from tests.test_signal_pipeline import MIXED_DSL, QUERIES
+from benchmarks.bench_router import make_dsl
+assert jax.device_count() == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+base = RouterService(MIXED_DSL, load_backends=False)
+for precision in (None, "bf16", "int8"):
+    sh = RouterService(MIXED_DSL, load_backends=False, kernel="fused",
+                       mesh=mesh, precision=precision)
+    assert sh.engine.sharded_active
+    a = base.engine.evaluate(QUERIES)
+    b = sh.engine.evaluate(QUERIES)
+    assert (a.fired == b.fired).all(), precision
+    assert (base.route_indices(QUERIES) ==
+            sh.route_indices(QUERIES)).all(), precision
+# bench-config sweep: uneven batch (31) on a wide group
+queries = [f"query about topic {i} alpha" for i in range(31)]
+s1 = RouterService(make_dsl(16), load_backends=False, validate=False)
+s8 = RouterService(make_dsl(16), load_backends=False, validate=False,
+                   kernel="fused", mesh=mesh)
+assert (s1.route_indices(queries) == s8.route_indices(queries)).all()
+print("SHARDED_E2E ok")
+""" % str(pathlib.Path(__file__).resolve().parents[1]))
+    assert "SHARDED_E2E ok" in stdout
+
+
 def test_roofline_consistent_with_artifacts():
     """bench_roofline rows must be derivable from the dryrun artifacts."""
     art = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"

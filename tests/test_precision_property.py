@@ -1,0 +1,90 @@
+"""Property test: quantized centroid stores (bf16 / int8) preserve
+routing *decisions* vs the f32 engine.
+
+The quantization contract (signals/engine.quantize_centroids) is that
+after bind-time recalibration the only residual difference vs f32 is
+the centroid-direction rounding, so fired masks and winner indices may
+only flip when an f32 score sits within the quantization error of its
+threshold / runner-up.  Hypothesis drives random query text through
+real bound engines; cases whose f32 margins are inside the rounding
+band are discarded via ``assume`` (they are genuinely ambiguous under
+ANY finite precision), everything else must match exactly.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.serving.router import RouterService
+from repro.signals.embedder import HashEmbedder
+
+DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL embedding science {
+  candidates: ["physics quantum chemistry biology experiment"]
+  threshold: 0.5
+}
+SIGNAL embedding law {
+  candidates: ["contract liability statute court ruling"]
+  threshold: 0.5
+}
+SIGNAL jailbreak detector { threshold: 0.62 }
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math, science, law]
+  default: science
+}
+ROUTE jb { PRIORITY 500 TIER 2 WHEN jailbreak("detector") MODEL "m0" }
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "m1" }
+ROUTE science_route { PRIORITY 100 WHEN embedding("science") MODEL "m2" }
+ROUTE law_route { PRIORITY 50 WHEN embedding("law") MODEL "m3" }
+GLOBAL { default_model: "m2" }
+"""
+
+# direction rounding: bf16 has ~3 decimal digits; int8 ~2.  Scores are
+# in [0, 1], so these margins comfortably cover the observed error.
+MARGIN = {"bf16": 5e-3, "int8": 2e-2}
+
+_WORDS = ["integral", "quantum", "court", "solve", "energy", "ruling",
+          "derivative", "particle", "contract", "prove", "molecule",
+          "statute", "alpha", "beta", "gamma", "zzzz", "hello"]
+
+
+@pytest.fixture(scope="module")
+def engines():
+    emb = HashEmbedder()
+    base = RouterService(DSL, load_backends=False, embedder=emb)
+    quant = {p: RouterService(DSL, load_backends=False, embedder=emb,
+                              kernel="fused", precision=p)
+             for p in ("bf16", "int8")}
+    return base, quant
+
+
+@settings(max_examples=40, deadline=None)
+@given(words=st.lists(st.sampled_from(_WORDS), min_size=1, max_size=6),
+       precision=st.sampled_from(["bf16", "int8"]))
+def test_quantized_decisions_match_f32(engines, words, precision):
+    base, quant = engines
+    text = " ".join(words)
+    a = base.engine.evaluate([text])
+    b = quant[precision].engine.evaluate([text])
+    # discard genuinely ambiguous cases: any f32 score within the
+    # quantization band of its firing threshold
+    thr = np.asarray([base.config.signals[n].threshold
+                      for n in a.names], np.float32)
+    for g in base.config.groups.values():
+        for m in g.names:
+            if m in a.names:
+                thr[a.names.index(m)] = g.threshold
+    assume((np.abs(a.normalized[0] - thr) > MARGIN[precision]).all())
+    assert (a.fired == b.fired).all()
+    assert (base.route_indices([text]) ==
+            quant[precision].route_indices([text])).all()
+    np.testing.assert_allclose(a.normalized, b.normalized,
+                               atol=MARGIN[precision])

@@ -193,6 +193,87 @@ def test_nonmember_group_default_falls_back_to_legacy():
     assert svc.route(["zzzz qqqq completely alien tokens"])
 
 
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_precision_decisions_match_f32(precision):
+    """bf16/int8 centroid stores with bind-time recalibration must make
+    the same fired/route decisions as the f32 engine on the mixed
+    config (scores may differ by the centroid-direction rounding)."""
+    base = RouterService(MIXED_DSL, load_backends=False)
+    quant = RouterService(MIXED_DSL, load_backends=False, kernel="fused",
+                          precision=precision)
+    a = base.engine.evaluate(QUERIES)
+    b = quant.engine.evaluate(QUERIES)
+    assert (a.fired == b.fired).all()
+    np.testing.assert_allclose(a.normalized, b.normalized, atol=5e-2)
+    assert (base.route_indices(QUERIES) ==
+            quant.route_indices(QUERIES)).all()
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_precision_store_dtype_and_scale(precision):
+    svc = RouterService(MIXED_DSL, load_backends=False,
+                        precision=precision)
+    store = svc.engine.tensors["centroids"]
+    import jax.numpy as jnp
+    want = jnp.bfloat16 if precision == "bf16" else jnp.int8
+    assert store.dtype == want
+    qs = np.asarray(svc.engine.tensors["qscale"])
+    assert qs.shape == (store.shape[0],) and (qs > 0).all()
+
+
+def test_device_tables_memoized_across_engines():
+    """A second engine over the same DSL + embedder must reuse the
+    device-resident tensor bundle instead of re-uploading centroids."""
+    emb = HashEmbedder()
+    a = RouterService(MIXED_DSL, load_backends=False, embedder=emb)
+    b = RouterService(MIXED_DSL, load_backends=False, embedder=emb)
+    assert a.engine.tensors is b.engine.tensors
+    assert (a.engine.tensors["centroids"] is
+            b.engine.tensors["centroids"])
+    # a different precision is a different bundle
+    c = RouterService(MIXED_DSL, load_backends=False, embedder=emb,
+                      precision="bf16")
+    assert c.engine.tensors is not a.engine.tensors
+
+
+def test_kernel_fused_auto_upgrades_to_dtiled_past_vmem_budget():
+    """kernel="fused" consults the VMEM budget at bind time: a store
+    that fits stays "fused"; with a tiny embedder the auto-selection is
+    exercised directly at the ops layer (test_kernels covers the
+    threshold), here we assert the engine honours an explicit
+    fused_dtiled request and still matches the jnp lowering."""
+    svc_f = RouterService(MIXED_DSL, load_backends=False, kernel="fused")
+    assert svc_f.engine.kernel_mode == "fused"
+    svc_d = RouterService(MIXED_DSL, load_backends=False,
+                          kernel="fused_dtiled")
+    assert svc_d.engine.kernel_mode == "fused_dtiled"
+    a = svc_f.engine.evaluate(QUERIES)
+    b = svc_d.engine.evaluate(QUERIES)
+    _assert_results_match(a, b, atol=1e-5)
+
+
+def test_sharded_path_single_device_mesh_matches_fused():
+    """The shard_map lowering on a 1x1 mesh (no real sharding) must
+    reproduce the single-device fused path exactly — the tier-1 proxy
+    for the 8-device subprocess tests in test_multidevice.py."""
+    import jax
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    base = RouterService(MIXED_DSL, load_backends=False)
+    sh = RouterService(MIXED_DSL, load_backends=False, kernel="fused",
+                       mesh=mesh)
+    assert sh.engine.sharded_active
+    a = base.engine.evaluate(QUERIES)
+    b = sh.engine.evaluate(QUERIES)
+    assert (a.fired == b.fired).all()
+    np.testing.assert_allclose(a.normalized, b.normalized, atol=1e-5)
+    assert (base.route_indices(QUERIES) ==
+            sh.route_indices(QUERIES)).all()
+    # sharded gating: jnp kernel + mesh must NOT activate shard_map
+    off = RouterService(MIXED_DSL, load_backends=False, kernel="jnp",
+                        mesh=mesh)
+    assert not off.engine.sharded_active
+
+
 def test_engine_without_groups_matches_legacy():
     dsl = MIXED_DSL
     for block in ("""SIGNAL_GROUP domains {
