@@ -91,11 +91,16 @@ def bench_route_level(rows) -> list:
         kern = svc.engine.kernel_mode
         d = svc.engine.embedder.dim
         svc.route(queries)  # warm the timed batch shape (jit + embed LRU)
-        t0 = time.perf_counter()
-        reps = 5
-        for _ in range(reps):
-            svc.route(queries)
-        dt = (time.perf_counter() - t0) / reps
+        # best of 3 timing passes, like the engine-level rows: the
+        # 2-core bench host swings single-pass numbers with scheduler
+        # interference, which otherwise reads as phantom regressions
+        reps, passes = 5, 3
+        dt = float("inf")
+        for _ in range(passes):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                svc.route(queries)
+            dt = min(dt, (time.perf_counter() - t0) / reps)
         qps = len(queries) / dt
         lines.append(f"router/route64_n{n_routes},{dt/len(queries)*1e6:.0f},"
                      f"qps={qps:.0f}")
@@ -104,10 +109,12 @@ def bench_route_level(rows) -> list:
              precision="f32", devices=1, traffic="warm")
         # cache-miss traffic: every rep routes texts the embed LRU has
         # never seen, so the embedding cost is fully on the clock
-        t0 = time.perf_counter()
-        for r in range(reps):
-            svc.route([f"{q} uniq{r}" for q in queries])
-        dt = (time.perf_counter() - t0) / reps
+        dt = float("inf")
+        for p in range(passes):
+            t0 = time.perf_counter()
+            for r in range(reps):
+                svc.route([f"{q} uniq{p}.{r}" for q in queries])
+            dt = min(dt, (time.perf_counter() - t0) / reps)
         lines.append(
             f"router/route64_n{n_routes}_uniq,{dt/len(queries)*1e6:.0f},"
             f"qps={len(queries)/dt:.0f}")
@@ -177,6 +184,123 @@ def bench_precision_engine(rows, *, n_routes: int = 64, d: int = 1024,
              precision=precision, devices=1, traffic="cache_miss")
         lines.append(f"router/{name},{1e6/qps:.1f},qps={qps:.0f}")
     return lines
+
+
+SLO_DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math]
+  default: math
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "m0" }
+GLOBAL { default_model: "m0" }
+BACKEND m0 { arch: "internlm2-1.8b" }
+"""
+
+
+def _slo_traffic(svc, slo_ms: float, arrive_offset_s=None,
+                 n_long: int = 4, n_urgent: int = 6) -> dict:
+    """Mixed-``max_new_tokens`` deadline traffic against one backend: a
+    wave of long best-effort decodes starts first, then short tight-SLO
+    requests arrive two decode steps in.  The preemptible run measures
+    the real mid-decode arrival offset; the whole-batch run replays the
+    SAME arrival stamps via ``enqueue(now=...)`` — mirroring an async
+    ingress whose requests land mid-batch, which the synchronous
+    whole-batch loop cannot interleave (that is the bug being measured).
+    -> hit-rate + latency percentiles over the urgent wave."""
+    t_start = time.monotonic()
+    longs = svc.enqueue([f"long background request {i} solve"
+                         for i in range(n_long)], max_new_tokens=64,
+                        now=t_start)
+    svc.serve_step(force=True)
+    svc.serve_step(force=True)
+    t_arrive = time.monotonic() if arrive_offset_s is None \
+        else t_start + arrive_offset_s
+    # mixed budgets inside the urgent wave: 2 / 4 / 8 round-robin
+    urgent = []
+    for i in range(n_urgent):
+        urgent.extend(svc.enqueue(
+            [f"urgent integral question {i}"],
+            max_new_tokens=(2, 4, 8)[i % 3], slo_ms=slo_ms,
+            now=t_arrive))
+    svc.serve_forever(max_steps=20000)
+    assert all(r.done for r in longs + urgent)
+    lats = sorted((r.finish_s - r.arrival_s) * 1e3 for r in urgent)
+    hits = sum(r.finish_s <= r.deadline_s for r in urgent)
+    return {
+        "slo_ms": slo_ms,
+        "n_long": n_long, "n_urgent": n_urgent,
+        "long_new_tokens": 64, "urgent_new_tokens": [2, 4, 8],
+        "arrive_offset_s": t_arrive - t_start,
+        "deadline_hit_rate": hits / n_urgent,
+        "p50_ms": lats[len(lats) // 2],
+        "p99_ms": lats[min(len(lats) - 1, int(len(lats) * 0.99))],
+        "wall_s": time.monotonic() - t_start,
+    }
+
+
+def bench_slo() -> tuple:
+    """Whole-batch vs preemptible slot scheduler under deadline traffic.
+    -> (slo_section dict, printable lines)."""
+    from repro.serving.router import RouterService
+    lines = []
+
+    def build(slots):
+        svc = RouterService(SLO_DSL, validate=False, max_batch=4,
+                            slots=slots)
+        # warmup = one full pass of the measured traffic shape with a
+        # huge SLO: every prefill/decode bucket compiles and the embed
+        # LRU fills, so the measured pass times serving, not XLA
+        _slo_traffic(svc, slo_ms=1e6)
+        if slots is not None:
+            # the measured pass admits preempted-wave stragglers in
+            # power-of-two batches of 1 and 2 that the no-preemption
+            # warmup pass may not have compiled — warm them explicitly
+            # (texts must stay under 32 bytes: same prompt-length bucket
+            # as the urgent traffic, or this warms the wrong shapes)
+            for n in (1, 2):
+                w = svc.enqueue([f"urgent warm b{n} req {i}"
+                                 for i in range(n)], max_new_tokens=2)
+                svc.serve_forever(max_steps=100)
+                assert all(r.done for r in w)
+        return svc
+
+    svc_sched = build(slots=4)
+    # per-step decode cost from the scheduler's own warm-gated EWMA
+    # (cold-bucket compile samples are excluded by construction)
+    step_ms = (svc_sched.scheduler._step_ewma or 0.01) * 1e3
+    # an SLO the slot scheduler can meet with ~2x headroom (preempt +
+    # warm prefill + <=8 decode steps across two admission waves,
+    # ~20 steps worst case) but the whole-batch loop cannot: a 4x64-
+    # token batch in front must spin ~60 more steps before the urgent
+    # wave even starts decoding
+    slo_ms = max(100.0, 30.0 * step_ms)
+    sched = _slo_traffic(svc_sched, slo_ms)
+    sched["scheduler"] = dict(svc_sched.scheduler.stats)
+    svc_wb = build(slots=None)
+    whole = _slo_traffic(svc_wb, slo_ms,
+                         arrive_offset_s=sched["arrive_offset_s"])
+    section = {
+        "step_ms_calibration": step_ms,
+        "whole_batch": whole,
+        "preemptible": sched,
+        "hit_rate_delta": (sched["deadline_hit_rate"]
+                           - whole["deadline_hit_rate"]),
+    }
+    for tag, s in (("whole_batch", whole), ("preemptible", sched)):
+        lines.append(
+            f"router/slo_{tag},{s['p99_ms']*1e3:.0f},"
+            f"hit_rate={s['deadline_hit_rate']:.2f},"
+            f"p50_ms={s['p50_ms']:.1f},p99_ms={s['p99_ms']:.1f}")
+    lines.append(f"router/slo_hit_rate_delta,0,"
+                 f"{section['hit_rate_delta']:+.2f}")
+    return section, lines
 
 
 def sharded_worker() -> None:
@@ -272,6 +396,8 @@ def main(argv=None) -> list:
     rows: list = []
     lines = bench_route_level(rows)
     lines += bench_precision_engine(rows)
+    slo_section, slo_lines = bench_slo()
+    lines += slo_lines
     lines += bench_sharded_subprocess(rows)
     by_name = {r["name"]: r for r in rows}
     fused = by_name.get(
@@ -297,6 +423,7 @@ def main(argv=None) -> list:
         "results": {r["name"]: r["us_per_call"] for r in rows},
         "rows": rows,
         "speedups": speedups,
+        "slo": slo_section,
         "note": ("engine_* rows are cache-miss traffic on pre-embedded "
                  "batches (fresh embeddings per rep, embedder off the "
                  "clock); route_* rows include the HashEmbedder.  CPU "

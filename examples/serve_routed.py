@@ -69,13 +69,23 @@ REQUESTS = [
 
 def main():
     print("building router + loading 5 backends (reduced configs)...")
-    svc = RouterService(DSL, load_backends=True, max_batch=4)
+    # slots=2 -> the preemptible slot scheduler (serving/scheduler.py):
+    # one pooled decode step at a time per backend, admission between
+    # steps, slots retire the moment max_new_tokens is reached, and
+    # deadline-imminent arrivals preempt the lowest-urgency slot.
+    # RouterService(DSL, max_batch=4) without slots= keeps the
+    # whole-batch fallback (decode a released batch to completion);
+    # the launcher mirrors this as --continuous --slots 2 / --no-preempt.
+    svc = RouterService(DSL, load_backends=True, max_batch=4, slots=2)
     fails = svc.run_test_blocks()
     print(f"TEST blocks: {'ALL PASS' if not fails else fails}")
 
     t0 = time.time()
-    reqs = svc.submit(REQUESTS, max_new_tokens=6)
-    done = svc.drain()
+    # mixed decode budgets + one tight-SLO request: the long decodes
+    # cannot hold the urgent one hostage the way a whole batch would
+    reqs = svc.enqueue(REQUESTS[:6], max_new_tokens=12)
+    reqs += svc.enqueue(REQUESTS[6:], max_new_tokens=4, slo_ms=250.0)
+    done = svc.serve_forever()
     dt = time.time() - t0
     print(f"\nserved {done} requests in {dt:.2f}s")
     for r in reqs:
@@ -86,6 +96,7 @@ def main():
         by_backend.setdefault(r.backend, []).append(r.req_id)
     print("\nbatching by backend:", {k: len(v) for k, v in
                                      by_backend.items()})
+    print("scheduler:", svc.scheduler.stats)
 
 
 if __name__ == "__main__":

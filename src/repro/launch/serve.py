@@ -3,6 +3,13 @@ push a batch of requests through it.
 
   PYTHONPATH=src python -m repro.launch.serve --config examples/router.dsl \
       --requests "solve x^2=4" "what is DNA" --new-tokens 8
+
+Continuous batching with the preemptible slot scheduler (2 decode slots
+per backend, deadline-driven preemption; --no-preempt to disable, omit
+--slots for the whole-batch fallback):
+
+  PYTHONPATH=src python -m repro.launch.serve --continuous --slots 2 \
+      --slo-ms 250 --requests "solve x^2=4" "what is DNA"
 """
 from __future__ import annotations
 
@@ -69,7 +76,22 @@ def main(argv=None):
                          "(enqueue + serve_forever) instead of submit/drain")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request deadline for --continuous")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode slots per backend: switches --continuous "
+                         "to the preemptible slot scheduler (one pooled "
+                         "decode step at a time, admission between steps, "
+                         "immediate slot retirement); omit for the "
+                         "whole-batch fallback")
+    ap.add_argument("--preempt", dest="preempt", action="store_true",
+                    default=True,
+                    help="allow deadline-imminent arrivals to preempt "
+                         "the lowest-urgency active slot (default on)")
+    ap.add_argument("--no-preempt", dest="preempt", action="store_false",
+                    help="disable preemption (slots still retire early)")
     args = ap.parse_args(argv)
+    if args.slots is not None and not args.continuous:
+        ap.error("--slots requires --continuous (the slot scheduler "
+                 "drives the continuous-batching loop)")
 
     text = pathlib.Path(args.config).read_text() if args.config \
         else DEFAULT_DSL
@@ -90,7 +112,7 @@ def main(argv=None):
                   f"--kernel fused")
     svc = RouterService(text, use_pallas_voronoi=args.pallas_voronoi,
                         kernel=kernel, precision=args.precision,
-                        mesh=mesh)
+                        mesh=mesh, slots=args.slots, preempt=args.preempt)
     for d in svc.diagnostics:
         print(f"[validate] {d}")
     t0 = time.time()
@@ -99,6 +121,8 @@ def main(argv=None):
                            slo_ms=args.slo_ms)
         done = svc.serve_forever()
         print(f"[serve] continuous stats: {svc.cbatcher.stats}")
+        if svc.scheduler is not None:
+            print(f"[serve] scheduler stats: {svc.scheduler.stats}")
     else:
         reqs = svc.submit(args.requests, max_new_tokens=args.new_tokens)
         done = svc.drain()

@@ -228,32 +228,41 @@ def _collect_cache(k, v, positions, spec: LayerSpec, max_seq: int):
 
 def _decode_attend(q, k_new, v_new, cache, pos, spec: LayerSpec,
                    cfg: ModelConfig, scale):
-    """One-token decode against a (possibly ring-buffer) cache."""
+    """One-token decode against a (possibly ring-buffer) cache.
+
+    ``pos`` is either a scalar (whole batch at one position — the
+    whole-batch decode loop) or a (B,) vector of per-row positions (the
+    slot-based scheduler: each decode slot is at its own depth)."""
     ck, cv = cache["k"], cache["v"]
-    w = ck.shape[1]
-    slot = pos % w if spec.window is not None else jnp.minimum(pos, w - 1)
-    ck = ck.at[:, slot].set(k_new[:, 0].astype(ck.dtype))
-    cv = cv.at[:, slot].set(v_new[:, 0].astype(cv.dtype))
-    n_valid = jnp.minimum(pos + 1, w)
-    if cfg.decode_kernel and cfg.logit_softcap == 0.0:
+    b, w = ck.shape[0], ck.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    scalar_pos = pos.ndim == 0
+    posv = jnp.broadcast_to(pos, (b,))
+    slot = posv % w if spec.window is not None else jnp.minimum(posv, w - 1)
+    rows = jnp.arange(b)
+    ck = ck.at[rows, slot].set(k_new[:, 0].astype(ck.dtype))
+    cv = cv.at[rows, slot].set(v_new[:, 0].astype(cv.dtype))
+    n_valid = jnp.minimum(posv + 1, w)
+    if cfg.decode_kernel and cfg.logit_softcap == 0.0 and scalar_pos:
         # flash-decoding Pallas kernel (kernels/decode_gqa.py): online-
         # softmax over KV blocks, scratch state in VMEM.  Valid-slot
         # semantics match both the ring buffer (n_valid) and the full
-        # cache (pos+1) cases.
+        # cache (pos+1) cases.  The kernel takes one scalar n_valid, so
+        # vector-pos (slot scheduler) traffic uses the masked jnp path.
         from repro.kernels import ops as kops
-        out = kops.decode_gqa(q[:, 0], ck, cv, n_valid,
+        out = kops.decode_gqa(q[:, 0], ck, cv, jnp.minimum(pos + 1, w),
                               block_s=min(512, ck.shape[1]))
         return out[:, None], {"k": ck, "v": cv}
     if spec.window is not None:
         # ring buffer: slot i holds absolute position whose (abs % w)==i;
         # all written slots are within the window by construction.
-        valid = jnp.arange(w) < n_valid
+        valid = jnp.arange(w)[None, :] < n_valid[:, None]
     else:
-        valid = jnp.arange(w) <= pos
+        valid = jnp.arange(w)[None, :] <= posv[:, None]
     qg = _group(q, ck.shape[2])
     s = _scores(qg, ck, scale)
     s = cm.softcap(s, cfg.logit_softcap)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = _combine(p, cv, q.dtype)
     return out, {"k": ck, "v": cv}

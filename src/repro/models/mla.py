@@ -72,20 +72,25 @@ def mla_prefill(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
 
 
 def mla_decode(p, cfg: ModelConfig, spec: LayerSpec, x, positions, cache, pos):
-    """Absorbed decode: scores/combines run in latent (R) space."""
+    """Absorbed decode: scores/combines run in latent (R) space.
+    ``pos`` is a scalar or a (B,) vector of per-row slot positions."""
     m = cfg.mla
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     q_nope, q_rope, c_kv, k_rope = _project_latent(p, cfg, x, positions)
-    ck = cache["ckv"].at[:, pos].set(c_kv[:, 0].astype(cache["ckv"].dtype))
-    cr = cache["krope"].at[:, pos].set(k_rope[:, 0].astype(cache["krope"].dtype))
+    b = x.shape[0]
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    rows = jnp.arange(b)
+    ck = cache["ckv"].at[rows, posv].set(c_kv[:, 0].astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[rows, posv].set(
+        k_rope[:, 0].astype(cache["krope"].dtype))
     # absorb W_uk into the query: q_eff (B,1,H,R)
     q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["mla_wuk"])
     s = (jnp.einsum("bshr,btr->bhst", q_eff, ck,
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bshk,btk->bhst", q_rope, cr,
                       preferred_element_type=jnp.float32)) * scale
-    valid = jnp.arange(ck.shape[1]) <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = jnp.arange(ck.shape[1])[None, :] <= posv[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(ck.dtype), ck)  # (B,1,H,R)
     out = jnp.einsum("bshr,rhk->bshk", o_lat, p["mla_wuv"])

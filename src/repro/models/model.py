@@ -134,21 +134,25 @@ class Model:
         return self._logits(params, x)[:, 0], cache
 
     def decode_step(self, params, cache, tokens, pos):
-        """tokens: (B, 1); pos: scalar int (next position).
-        -> (logits (B,V) f32, updated cache)."""
+        """tokens: (B, 1); pos: scalar int (next position, whole batch)
+        or (B,) int32 per-row positions (slot-based decode: every slot
+        sits at its own depth).  -> (logits (B,V) f32, updated cache)."""
         cfg = self.cfg
+        pos = jnp.asarray(pos, jnp.int32)
         x = cm.take_embedding(params["tok_embed"], tokens)
         if cfg.embed_scale:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
         if cfg.encoder is not None or cfg.partial_rotary == 0:
-            # sinusoidal row for absolute position `pos`
+            # sinusoidal row(s) for absolute position(s) `pos`
             d = cfg.d_model
-            posf = jnp.asarray(pos, jnp.float32)
-            dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+            posf = jnp.reshape(pos, (-1, 1)).astype(jnp.float32)  # (B|1, 1)
+            dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
             ang = posf / jnp.power(10_000.0, dim / d)
-            row = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[:d]
-            x = x + row.astype(x.dtype)[None, None]
-        positions = jnp.full(tokens.shape, pos, jnp.int32)
+            row = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                                  axis=-1)[:, :d]
+            x = x + row.astype(x.dtype)[:, None]
+        positions = jnp.broadcast_to(
+            jnp.reshape(pos, (-1, 1)), tokens.shape).astype(jnp.int32)
         x, new_cache, _ = pattern.apply_stack(
             params["stack"], cfg, x, positions, cache=cache, pos=pos)
         x = cm.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps,

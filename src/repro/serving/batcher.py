@@ -49,6 +49,15 @@ class Request:
     deadline_s: Optional[float] = None    # absolute; None = best-effort
     followers: List["Request"] = dataclasses.field(default_factory=list)
     coalesced: bool = False               # True = riding a leader
+    # serving-path correctness / scheduler bookkeeping:
+    truncated: bool = False               # decode clamped to the KV budget
+    finish_s: Optional[float] = None      # completion clock stamp
+    preemptions: int = 0                  # times bumped from a decode slot
+
+    def slack(self, now: float) -> float:
+        """Seconds until the deadline; +inf for best-effort requests."""
+        return float("inf") if self.deadline_s is None \
+            else self.deadline_s - now
 
 
 class Batcher:
@@ -181,14 +190,27 @@ class ContinuousBatcher:
         self.stats["batches"] += 1
         return backend, batch
 
+    # ---- slot-scheduler admission ------------------------------------------
+    def finish_inflight(self, req: Request) -> None:
+        """Drop the in-flight coalescing key once ``req`` has decoded
+        (only if it still points at ``req`` — a later duplicate may have
+        re-registered after a whole-batch release)."""
+        key = (req.backend, req.text, req.max_new_tokens)
+        if self._inflight.get(key) is req:
+            del self._inflight[key]
 
-def finish_request(req: Request) -> int:
-    """Mark ``req`` done and fan its output out to coalesced followers.
+
+def finish_request(req: Request, now: Optional[float] = None) -> int:
+    """Mark ``req`` done and fan its output out to coalesced followers
+    (completion stamp and truncation flag included).
     -> number of requests completed (leader + followers)."""
     req.done = True
+    req.finish_s = now
     for f in req.followers:
         f.output_tokens = list(req.output_tokens)
+        f.truncated = req.truncated
         f.done = True
+        f.finish_s = now
     n = 1 + len(req.followers)
     req.followers = []
     return n

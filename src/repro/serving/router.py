@@ -31,7 +31,12 @@ path (FIFO ``Batcher``), and the continuous-batching loop —
 per-backend admission queues (duplicate in-flight texts coalesce onto
 one decode slot), ``serve_step`` releases the most urgent ready batch
 (full / waited-too-long / deadline-imminent) into the decode loop, and
-``serve_forever`` drives steps until idle.
+``serve_forever`` drives steps until idle.  With ``slots=N`` the
+continuous loop decodes through the preemptible slot scheduler
+(serving/scheduler.py): one pooled decode step at a time, admission
+between steps, immediate slot retirement, and deadline-driven
+preemption — instead of the whole-batch fallback that decodes each
+released batch to completion.
 
 Backends are real JAX models (reduced configs on CPU; the full configs
 are exercised by launch/dryrun.py on the production mesh).
@@ -40,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -104,6 +110,7 @@ class RouterService:
                  kernel: Optional[str] = None,
                  precision: Optional[str] = None,
                  mesh=None,
+                 slots: Optional[int] = None, preempt: bool = True,
                  validate: bool = True, run_taxonomy: bool = False):
         from repro.signals.engine import SignalEngine
         self.config: RouterConfig = compile_text(dsl_text)
@@ -127,6 +134,15 @@ class RouterService:
         self.backends: Dict[str, BackendRuntime] = {}
         if load_backends:
             self._load_backends()
+        # slots=N switches the continuous loop from whole-batch decode to
+        # the preemptible slot scheduler (serving/scheduler.py); slots=
+        # None keeps the whole-batch fallback
+        self.scheduler = None
+        if slots is not None:
+            from repro.serving.scheduler import DecodeScheduler
+            self.scheduler = DecodeScheduler(
+                self.backends, self.cbatcher, n_slots=slots,
+                preempt=preempt)
 
     # ---- backends -------------------------------------------------------------
     def _load_backends(self):
@@ -134,14 +150,19 @@ class RouterService:
             arch = str(fields.get("arch", "internlm2-1.8b"))
             cfg = get_config(arch, smoke=True)
             model = build_model(cfg)
-            params = model.init(jax.random.PRNGKey(hash(name) & 0xFFFF))
+            max_seq = int(fields.get("max_seq", 128))
+            # stable digest, NOT hash(): Python string hashing is salted
+            # per process, so hash(name) weights differ across runs and
+            # decode tokens are irreproducible
+            seed = zlib.crc32(name.encode("utf-8")) & 0xFFFF
+            params = model.init(jax.random.PRNGKey(seed))
             self.backends[name] = BackendRuntime(
                 name=name, arch=arch, model=model, params=params,
                 decode=jax.jit(model.decode_step,
                                static_argnames=()),
-                prefill=jax.jit(
-                    lambda p, t, m=model: m.prefill(p, t, max_seq=128)),
-                max_seq=int(fields.get("max_seq", 128)))
+                prefill=jax.jit(functools.partial(model.prefill,
+                                                  max_seq=max_seq)),
+                max_seq=max_seq)
 
     # ---- routing ---------------------------------------------------------------
     def route_indices(self, texts: Sequence[str],
@@ -153,6 +174,10 @@ class RouterService:
         Batches are padded up to the next power-of-two bucket so the
         jit cache compiles one variant per power of two up to the
         largest batch seen (instead of one per distinct batch size)."""
+        if not texts:
+            # (b-1).bit_length() on b == 0 would pad a phantom row and
+            # compile a 1-row variant just to slice it away again
+            return np.zeros((0,), np.int64)
         if self.engine.fused_ok:
             b = len(texts)
             emb = self.engine.embed(texts)
@@ -230,7 +255,13 @@ class RouterService:
 
     def _decode_batch(self, backend: str, batch: List[Request]) -> int:
         """Prefill + greedy decode one batch on ``backend``; completes
-        every request (and its coalesced followers).  -> #completed."""
+        every request (and its coalesced followers).  -> #completed.
+
+        Decode steps are clamped to the KV budget: step ``j`` writes
+        cache position ``plen + j``, so a long prompt plus a large
+        ``max_new_tokens`` must never advance past ``rt.max_seq`` (it
+        would silently corrupt the prefill cache).  Clamped requests are
+        flagged ``truncated``."""
         rt = self.backends[backend]
         cfg = rt.model.cfg
         # tokenize: byte-level prompt, pad to common length
@@ -240,19 +271,24 @@ class RouterService:
         prompt = np.zeros((len(batch), plen), np.int32)
         for i, t in enumerate(toks):
             prompt[i, plen - len(t):] = [b % cfg.vocab_size for b in t]
-        logits, cache = rt.model.prefill(rt.params, jnp.asarray(prompt),
-                                         max_seq=rt.max_seq)
+        logits, cache = rt.prefill(rt.params, jnp.asarray(prompt))
         pos = plen
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        steps = max(r.max_new_tokens for r in batch)
-        for _ in range(steps):
+        kv_room = max(0, rt.max_seq - plen)
+        budgets = []
+        for r in batch:
+            budgets.append(min(r.max_new_tokens, kv_room))
+            if budgets[-1] < r.max_new_tokens:
+                r.truncated = True
+        for _ in range(max(budgets)):
             for i, r in enumerate(batch):
-                if len(r.output_tokens) < r.max_new_tokens:
+                if len(r.output_tokens) < budgets[i]:
                     r.output_tokens.append(int(tok[i, 0]))
             logits, cache = rt.decode(rt.params, cache, tok, pos)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos += 1
-        return sum(finish_request(r) for r in batch)
+        now = self.cbatcher.clock()
+        return sum(finish_request(r, now=now) for r in batch)
 
     def step(self) -> int:
         """Serve one batch from the fullest backend queue.  -> #completed."""
@@ -310,14 +346,30 @@ class RouterService:
 
     def serve_step(self, now: Optional[float] = None,
                    force: bool = False) -> int:
-        """One continuous-batching service step: release the most
+        """One continuous-batching service step.
+
+        Whole-batch mode (``slots=None``): release the most
         urgent/loaded ready batch (deadline- and wait-aware) and decode
-        it.  ``force=True`` drains under-full queues immediately.
-        -> #requests completed (coalesced followers included)."""
+        it to completion; ``force=True`` drains under-full queues
+        immediately.
+
+        Slot mode (``slots=N``): one preemptible scheduler step —
+        admissions/preemptions between decode steps, ONE pooled decode
+        step across the active slots, immediate retirement of finished
+        requests (``force`` is moot: admission is per-slot, never held
+        for a full batch).  -> #requests completed (coalesced followers
+        included)."""
+        if self.scheduler is not None:
+            return self.scheduler.step(now=now)
         nb = self.cbatcher.next_batch(now=now, force=force)
         if nb is None:
             return 0
         return self._decode_batch(*nb)
+
+    def _has_pending_work(self) -> bool:
+        if self.scheduler is not None:
+            return self.scheduler.pending()
+        return self.cbatcher.pending() > 0
 
     def serve_forever(self, *, max_steps: Optional[int] = None,
                       stop_when_idle: bool = True,
@@ -342,7 +394,9 @@ class RouterService:
             if n:
                 served += n
                 continue
-            if not self.cbatcher.pending() and stop_when_idle:
+            if not self._has_pending_work() and stop_when_idle:
                 break
+            if self.scheduler is not None and self.scheduler.pending():
+                continue              # slots mid-decode: step again now
             _time.sleep(poll_s)       # under-full queues: let them age
         return served

@@ -1,0 +1,450 @@
+"""Preemptible slot-based decode scheduler.
+
+The whole-batch decode loop (``RouterService._decode_batch``) admits a
+batch, then decodes ``max(max_new_tokens)`` steps before anything else
+runs: one long request holds every SLO deadline the ``ContinuousBatcher``
+tracks hostage.  ``DecodeScheduler`` replaces that loop with a fixed pool
+of decode *slots* per backend:
+
+* one decode step at a time runs across ALL active slots (the pooled
+  cache has a fixed power-of-two row count, so each backend compiles
+  exactly one decode variant);
+* a request retires the step its ``max_new_tokens`` (or the KV budget)
+  is reached — the slot frees immediately instead of spinning to the
+  batch max;
+* newly-enqueued requests are admitted into free slots *between* steps
+  (prefills are batched per step and padded to power-of-two prompt/batch
+  buckets);
+* when a deadline-imminent request arrives with no scheduling capacity,
+  the lowest-urgency active request is preempted: it parks in its slot
+  (KV cache rows stay resident) and resumes in place when capacity
+  frees, or re-prefills (prompt + tokens generated so far) if another
+  admission evicted its rows.
+
+Slot-state machine (``_Slot``): FREE -> ACTIVE (admit/prefill) ->
+FREE (retire).  ACTIVE -> PARKED (preempt) -> ACTIVE (resume in place,
+zero compute) or FREE + re-prefill queue (evicted).
+
+Cache residency vs scheduling capacity are decoupled: the pool holds
+``rows >= n_slots`` KV rows (rounded up to a power of two) but at most
+``n_slots`` are ever ACTIVE — the spare rows are park headroom, which is
+what makes resume-in-place real rather than theoretical.  Inactive rows
+still flow through the pooled decode step (fixed shapes), but their
+cache updates are masked out (``jnp.where`` merge), so parked KV and
+recurrent states (RWKV/RGLRU) survive garbage tokens bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batcher import ContinuousBatcher, Request, finish_request
+
+FREE, ACTIVE, PARKED = "free", "active", "parked"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def _batch_axis(path) -> int:
+    """Pooled-cache leaves carry the slot (batch) dim at axis 0, except
+    under the scanned ``unit`` subtree where axis 0 is the unit index."""
+    return 1 if any(getattr(k, "key", None) == "unit" for k in path) else 0
+
+
+def _merge_rows(old, new, active: jnp.ndarray):
+    """Per-row select: active rows take the new cache, inactive rows
+    keep the old one (parked KV / recurrent state survives)."""
+    def f(path, o, n):
+        ax = _batch_axis(path)
+        shape = [1] * n.ndim
+        shape[ax] = active.shape[0]
+        return jnp.where(active.reshape(shape), n, o)
+    return jax.tree_util.tree_map_with_path(f, old, new)
+
+
+def _scatter_rows(pool, new, slot_ids: jnp.ndarray, src_rows: jnp.ndarray):
+    """Write prefill-cache rows ``src_rows`` into pool rows ``slot_ids``.
+    Callers pad both index vectors to the prefill's power-of-two batch
+    bucket (duplicating the last pair — same target, same value, so the
+    duplicate writes are benign): the scatter ops then compile once per
+    bucket instead of once per admission count."""
+    def f(path, p, c):
+        if _batch_axis(path):
+            return p.at[:, slot_ids].set(
+                jnp.take(c, src_rows, axis=1).astype(p.dtype))
+        return p.at[slot_ids].set(c[src_rows].astype(p.dtype))
+    return jax.tree_util.tree_map_with_path(f, pool, new)
+
+
+@dataclasses.dataclass
+class _Slot:
+    idx: int
+    state: str = FREE
+    req: Optional[Request] = None
+    pos: int = 0                 # next cache position to write
+    next_tok: int = 0            # token pending append+feed
+    budget: int = 0              # total tokens this request may emit
+    parked_at: float = 0.0       # park order for eviction staleness
+
+
+class _BackendPool:
+    """Per-backend slot pool: pooled KV cache + jitted pooled step."""
+
+    def __init__(self, rt, n_slots: int):
+        self.rt = rt
+        self.n_slots = n_slots                      # max ACTIVE
+        # +1 spare row so a single preemption parks in place instead of
+        # evicting; pow2 keeps the decode batch in one compiled variant
+        self.rows = _next_pow2(n_slots + 1)
+        self.slots = [_Slot(i) for i in range(self.rows)]
+        self.cache = None                           # lazy: first admission
+        self.pos = np.zeros(self.rows, np.int64)
+        self.tok = np.zeros(self.rows, np.int64)
+        model = rt.model
+        # share the runtime's jitted prefill (same program: jit(partial(
+        # model.prefill, max_seq)) — a second jit would recompile every
+        # (batch, plen) bucket the submit/drain path already owns
+        self._prefill = rt.prefill
+        # (bsz, plen) buckets already compiled: cold samples carry XLA
+        # compile time and must stay out of the service-time EWMA
+        self.warm_prefill: set = set()
+        self.warm_decode = False
+
+        @jax.jit
+        def pool_step(params, cache, tok, pos, active):
+            # inactive rows feed position 0 (any in-bounds index works:
+            # their cache writes are merged away below)
+            posv = jnp.where(active, pos, 0).astype(jnp.int32)
+            logits, new_cache = model.decode_step(
+                params, cache, tok[:, None].astype(jnp.int32), posv)
+            merged = _merge_rows(cache, new_cache, active)
+            return jnp.argmax(logits, axis=-1), merged
+
+        self._pool_step = pool_step
+
+    # -- state views ---------------------------------------------------------
+    def active(self) -> List[_Slot]:
+        return [s for s in self.slots if s.state == ACTIVE]
+
+    def parked(self) -> List[_Slot]:
+        return [s for s in self.slots if s.state == PARKED]
+
+    def free_slot(self) -> Optional[_Slot]:
+        for s in self.slots:
+            if s.state == FREE:
+                return s
+        return None
+
+    def busy(self) -> bool:
+        return any(s.state != FREE for s in self.slots)
+
+
+class DecodeScheduler:
+    """Preemptible slot-based decode across a ``RouterService``'s
+    backends, fed from its ``ContinuousBatcher`` admission queues.
+
+    ``step()`` = admit (resume / prefill / preempt) -> one pooled decode
+    step per busy backend -> retire finished requests.  Every admission
+    decision happens *between* decode steps, so a deadline-imminent
+    arrival waits at most one token, not one whole batch.
+    """
+
+    def __init__(self, backends: Dict[str, Any], cbatcher: ContinuousBatcher,
+                 *, n_slots: int = 4, preempt: bool = True,
+                 preempt_margin_s: Optional[float] = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.backends = backends
+        self.cbatcher = cbatcher
+        self.n_slots = n_slots
+        self.preempt = preempt
+        self.preempt_margin_s = (cbatcher.deadline_margin_s
+                                 if preempt_margin_s is None
+                                 else preempt_margin_s)
+        self.pools: Dict[str, _BackendPool] = {}
+        # evicted (re-prefill) requests, per backend, staleness order
+        self.requeue: Dict[str, List[Request]] = {}
+        self.stats = {"admitted": 0, "decode_steps": 0, "retired": 0,
+                      "preemptions": 0, "resumed_inplace": 0,
+                      "evictions": 0, "reprefills": 0, "truncated": 0}
+        self._park_clock = 0.0
+        # self-measured service-time model (EWMA, real wall clock): how
+        # long a prefill and one pooled decode step actually take, so
+        # "deadline-imminent" means "cannot finish unless admitted NOW",
+        # not an arbitrary fixed margin
+        self._step_ewma: Optional[float] = None
+        self._prefill_ewma: Optional[float] = None
+
+    def _required_s(self, req: Request) -> float:
+        """Estimated seconds of service ``req`` still needs (prefill +
+        one pooled step per remaining token); 0 until measurements
+        exist."""
+        steps = max(1, req.max_new_tokens - len(req.output_tokens))
+        return ((self._prefill_ewma or 0.0)
+                + steps * (self._step_ewma or 0.0))
+
+    def _imminent(self, req: Request, pool: "_BackendPool",
+                  now: float) -> bool:
+        """Deadline at risk: the request cannot afford to wait for a
+        slot to free naturally — slack within the fixed margin, or
+        within 2x its own measured service time PLUS the earliest
+        natural slot release (fewest remaining tokens among active
+        slots, at the EWMA step cost)."""
+        step = self._step_ewma or 0.0
+        wait = min((max(0, s.budget - len(s.req.output_tokens))
+                    for s in pool.active()), default=0) * step
+        return req.slack(now) <= max(self.preempt_margin_s,
+                                     2.0 * self._required_s(req) + wait)
+
+    # ---- plumbing ----------------------------------------------------------
+    def _pool(self, backend: str) -> _BackendPool:
+        pool = self.pools.get(backend)
+        if pool is None:
+            pool = self.pools[backend] = _BackendPool(
+                self.backends[backend], self.n_slots)
+        return pool
+
+    def pending(self) -> bool:
+        """Work anywhere: queued admissions, evicted requests, or busy
+        slots."""
+        return (self.cbatcher.pending() > 0
+                or any(self.requeue.values())
+                or any(p.busy() for p in self.pools.values()))
+
+    def _backends_with_work(self) -> List[str]:
+        names = set(self.pools) | set(self.requeue)
+        names.update(b for b, q in self.cbatcher.queues.items() if q)
+        # sorted: set order is salted per process, and scheduling order
+        # must be reproducible for identical-traffic determinism
+        return sorted(b for b in names
+                      if (self.cbatcher.queues.get(b)
+                          or self.requeue.get(b)
+                          or (b in self.pools and self.pools[b].busy())))
+
+    # ---- admission ---------------------------------------------------------
+    def _tokenize(self, rt, req: Request) -> List[int]:
+        vocab = rt.model.cfg.vocab_size
+        toks = [b % vocab for b in req.text.encode("utf-8")[: rt.max_seq // 2]]
+        # re-prefill resumes mid-generation: replay what was generated
+        return (toks or [0]) + list(req.output_tokens)
+
+    def _queued_candidates(self, backend: str, now: float) -> List[Request]:
+        q = list(self.cbatcher.queues.get(backend, ()))
+        return self.requeue.get(backend, []) + q
+
+    def _take_queued(self, backend: str, req: Request, now: float) -> None:
+        rq = self.requeue.get(backend)
+        if rq and req in rq:
+            rq.remove(req)
+            return
+        q = self.cbatcher.queues.get(backend)
+        q.remove(req)
+        if not q:
+            del self.cbatcher.queues[backend]
+
+    def _grab_row(self, pool: _BackendPool, backend: str, now: float,
+                  protect: Optional[_Slot] = None) -> Optional[_Slot]:
+        """A row for a prefill: a FREE row, else evict the least-urgent
+        PARKED row — largest deadline slack (best-effort = infinite)
+        first, stalest park breaking ties.  The evicted request keeps its
+        generated tokens and joins the re-prefill queue; ``protect``
+        shields a just-parked victim when any other parked row exists."""
+        slot = pool.free_slot()
+        if slot is not None:
+            return slot
+        parked = [s for s in pool.parked() if s is not protect] \
+            or pool.parked()
+        if not parked:
+            return None
+        victim = max(parked, key=lambda s: (s.req.slack(now), -s.parked_at))
+        self.stats["evictions"] += 1
+        self.requeue.setdefault(backend, []).append(victim.req)
+        victim.state = FREE
+        victim.req = None
+        return victim
+
+    def _park(self, slot: _Slot) -> None:
+        slot.state = PARKED
+        self._park_clock += 1.0
+        slot.parked_at = self._park_clock
+        slot.req.preemptions += 1
+        self.stats["preemptions"] += 1
+
+    def _admit(self, backend: str, now: float) -> List[Tuple[_Slot, Request]]:
+        """Fill scheduling capacity for ``backend``; returns the
+        (slot, request) pairs that need a prefill this step."""
+        pool = self._pool(backend)
+        prefills: List[Tuple[_Slot, Request]] = []
+        while len(pool.active()) < pool.n_slots:
+            queued = self._queued_candidates(backend, now)
+            parked = pool.parked()
+            if not queued and not parked:
+                break
+            best_q = min(queued, key=lambda r: (r.slack(now),
+                                                r.arrival_s or 0.0,
+                                                r.req_id)) if queued else None
+            best_p = min(parked, key=lambda s: (s.req.slack(now),
+                                                s.req.arrival_s or 0.0)) \
+                if parked else None
+            # resume-in-place is free; prefer it unless a queued request
+            # is strictly more urgent
+            if best_p is not None and (
+                    best_q is None
+                    or best_p.req.slack(now) <= best_q.slack(now)):
+                best_p.state = ACTIVE
+                self.stats["resumed_inplace"] += 1
+                continue
+            self._take_queued(backend, best_q, now)
+            slot = self._grab_row(pool, backend, now)
+            if slot is None:           # every row active: cannot admit
+                self.requeue.setdefault(backend, []).insert(0, best_q)
+                break
+            slot.state = ACTIVE
+            slot.req = best_q
+            self.stats["admitted"] += 1
+            prefills.append((slot, best_q))
+
+        # preemption: capacity full, a queued deadline is imminent, and
+        # some active request is strictly less urgent
+        if self.preempt:
+            while len(pool.active()) >= pool.n_slots:
+                queued = self._queued_candidates(backend, now)
+                if not queued:
+                    break
+                best_q = min(queued, key=lambda r: (r.slack(now),
+                                                    r.arrival_s or 0.0,
+                                                    r.req_id))
+                if not self._imminent(best_q, pool, now):
+                    break
+                actives = pool.active()
+                victim = max(actives, key=lambda s: (s.req.slack(now),
+                                                     -(s.req.arrival_s
+                                                       or 0.0)))
+                if victim.req.slack(now) <= best_q.slack(now):
+                    break                     # nobody is less urgent
+                self._park(victim)
+                self._take_queued(backend, best_q, now)
+                slot = self._grab_row(pool, backend, now, protect=victim)
+                slot.state = ACTIVE
+                slot.req = best_q
+                self.stats["admitted"] += 1
+                prefills.append((slot, best_q))
+        return prefills
+
+    def _run_prefills(self, backend: str,
+                      prefills: List[Tuple[_Slot, Request]],
+                      now: float) -> int:
+        """Batched prefill for this step's admissions, padded to
+        power-of-two prompt/batch buckets; scatter rows into the pool
+        cache.  -> #requests that completed during admission (KV budget
+        already exhausted on a re-prefill edge case)."""
+        pool = self._pool(backend)
+        rt = pool.rt
+        if pool.cache is None:
+            pool.cache = rt.model.init_cache(pool.rows, rt.max_seq)
+        done = 0
+        toks = [self._tokenize(rt, r) for _, r in prefills]
+        plen = min(_next_pow2(max(max(len(t) for t in toks), 1)),
+                   rt.max_seq)
+        bsz = _next_pow2(len(prefills))
+        prompt = np.zeros((bsz, plen), np.int32)
+        for i, t in enumerate(toks):
+            t = t[-plen:]              # keep the generation-side tail
+            prompt[i, plen - len(t):] = t
+        t0 = time.monotonic()
+        logits, new_cache = pool._prefill(rt.params, jnp.asarray(prompt))
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        k = len(prefills)
+        ids = [s.idx for s, _ in prefills] + \
+            [prefills[-1][0].idx] * (bsz - k)
+        src = list(range(k)) + [k - 1] * (bsz - k)
+        pool.cache = _scatter_rows(pool.cache, new_cache,
+                                   jnp.asarray(ids), jnp.asarray(src))
+        dt = time.monotonic() - t0
+        if (bsz, plen) in pool.warm_prefill:
+            self._prefill_ewma = dt if self._prefill_ewma is None \
+                else 0.7 * self._prefill_ewma + 0.3 * dt
+        else:                          # cold bucket: dt is compile time
+            pool.warm_prefill.add((bsz, plen))
+        for i, (slot, req) in enumerate(prefills):
+            if req.output_tokens:
+                self.stats["reprefills"] += 1
+            slot.pos = plen
+            slot.next_tok = int(first[i])
+            # KV budget guard: decode step j writes cache position
+            # plen + j, so never schedule more steps than the cache has
+            # room for (the whole-batch loop applies the same clamp)
+            kv_room = max(0, rt.max_seq - plen)
+            slot.budget = min(req.max_new_tokens,
+                              len(req.output_tokens) + kv_room)
+            if slot.budget < req.max_new_tokens and not req.truncated:
+                req.truncated = True
+                self.stats["truncated"] += 1
+            if len(req.output_tokens) >= slot.budget:
+                # nothing left to emit (oversized prompt): finish now
+                done += self._retire(backend, slot, now)
+        return done
+
+    # ---- decode ------------------------------------------------------------
+    def _retire(self, backend: str, slot: _Slot, now: float) -> int:
+        req = slot.req
+        slot.state = FREE
+        slot.req = None
+        self.cbatcher.finish_inflight(req)
+        self.stats["retired"] += 1
+        return finish_request(req, now=now)
+
+    def _decode_step(self, backend: str, now: float) -> int:
+        """One pooled decode step for every ACTIVE slot; appends the
+        pending token per slot and retires finished requests (the slot
+        frees this very step — no spinning to the batch max)."""
+        pool = self.pools[backend]
+        actives = pool.active()
+        if not actives:
+            return 0
+        rt = pool.rt
+        for s in actives:
+            pool.pos[s.idx] = s.pos
+            pool.tok[s.idx] = s.next_tok
+        mask = np.zeros(pool.rows, bool)
+        mask[[s.idx for s in actives]] = True
+        t0 = time.monotonic()
+        nxt, pool.cache = pool._pool_step(
+            rt.params, pool.cache, jnp.asarray(pool.tok),
+            jnp.asarray(pool.pos), jnp.asarray(mask))
+        nxt = np.asarray(nxt)
+        dt = time.monotonic() - t0
+        if pool.warm_decode:           # first step per pool = compile
+            self._step_ewma = dt if self._step_ewma is None \
+                else 0.7 * self._step_ewma + 0.3 * dt
+        pool.warm_decode = True
+        self.stats["decode_steps"] += 1
+        done = 0
+        for s in actives:
+            s.req.output_tokens.append(int(s.next_tok))
+            s.next_tok = int(nxt[s.idx])
+            s.pos += 1
+            if len(s.req.output_tokens) >= s.budget:
+                done += self._retire(backend, s, now)
+        return done
+
+    # ---- the loop ----------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> int:
+        """Admissions (+preemptions) between steps, then one decode step
+        across every backend with active slots.  -> #requests completed
+        (coalesced followers included)."""
+        now = self.cbatcher.clock() if now is None else now
+        done = 0
+        for backend in self._backends_with_work():
+            prefills = self._admit(backend, now)
+            if prefills:
+                done += self._run_prefills(backend, prefills, now)
+            done += self._decode_step(backend, now)
+        return done

@@ -24,7 +24,17 @@ def _extras(cfg):
     return extras
 
 
-@pytest.mark.parametrize("arch", list_archs())
+# the heaviest archs ride the `slow` marker: CI's tier-1 job deselects
+# them to stay inside its wall-clock budget (the full local run keeps
+# them); every cache family stays covered in the fast set (ATTN:
+# internlm2/stablelm, MLA: deepseek-7b, RGLRU ring: recurrentgemma,
+# RWKV: rwkv6, MoE: llama4-scout)
+_SLOW_ARCHS = {"deepseek-v2-lite-16b", "gemma3-27b", "whisper-large-v3"}
+
+
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow)
+             if a in _SLOW_ARCHS else a for a in list_archs()])
 def test_prefill_decode_matches_forward(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -80,6 +90,7 @@ def test_decode_with_pallas_kernel_matches(arch):
     assert jnp.abs(d0 - dk).max() < 2e-4
 
 
+@pytest.mark.slow
 def test_decode_greedy_generation_stable():
     cfg = get_config("rwkv6-1.6b", smoke=True)
     model = build_model(cfg)

@@ -243,6 +243,7 @@ def test_enqueue_routes_and_stamps_deadlines(svc):
     assert svc.cbatcher.pending() == 0
 
 
+@pytest.mark.slow
 def test_end_to_end_generation_two_backends():
     dsl = DSL + """
 BACKEND backend-math { arch: "internlm2-1.8b" }
@@ -272,6 +273,217 @@ BACKEND chat { arch: "internlm2-1.8b" }
     assert creqs[0].output_tokens == creqs[1].output_tokens
     assert len(creqs[2].output_tokens) == 3
     assert creqs[2].backend == "backend-science"
+
+
+# ---------------------------------------------------------------------------
+# Serving-path correctness: deterministic seeds, KV budget, empty batches
+# ---------------------------------------------------------------------------
+
+BACKEND_DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math]
+  default: math
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+GLOBAL { default_model: "backend-math" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+"""
+
+
+def _backend_dsl(max_seq=None):
+    if max_seq is None:
+        return BACKEND_DSL
+    return BACKEND_DSL.replace(
+        'BACKEND backend-math { arch: "internlm2-1.8b" }',
+        f'BACKEND backend-math {{ arch: "internlm2-1.8b" '
+        f'max_seq: {max_seq} }}')
+
+
+def _slot_svc(slots=1, max_seq=None):
+    """Backend-loaded service on a fake clock the test advances."""
+    t = [0.0]
+    svc = RouterService(_backend_dsl(max_seq), max_batch=4, slots=slots)
+    svc.cbatcher.clock = lambda: t[0]
+    return svc, t
+
+
+def test_backend_seeds_are_deterministic():
+    """Two services built in-process from the same DSL must produce
+    identical decode tokens: backend params are seeded with a stable
+    digest of the backend name, not salted ``hash()``."""
+    out = []
+    for _ in range(2):
+        svc = RouterService(BACKEND_DSL, max_batch=4)
+        reqs = svc.submit(["solve the integral of x squared dx",
+                           "derivative of an algebra equation"],
+                          max_new_tokens=4)
+        svc.drain()
+        out.append([r.output_tokens for r in reqs])
+        assert all(len(t) == 4 for t in out[-1])
+    assert out[0] == out[1]
+
+
+def test_max_seq_overrun_clamps_whole_batch():
+    """plen + max_new_tokens > max_seq must clamp decode to the KV
+    budget (and flag truncation) instead of advancing pos past the
+    prefill cache."""
+    svc = RouterService(_backend_dsl(48), max_batch=4)
+    rt = svc.backends["backend-math"]
+    text = "solve " * 16                 # prompt clamps to max_seq // 2
+    plen = min(len(text.encode()), rt.max_seq // 2)
+    reqs = svc.submit([text], max_new_tokens=1000)
+    svc.drain()
+    assert reqs[0].done and reqs[0].truncated
+    assert len(reqs[0].output_tokens) == rt.max_seq - plen
+
+
+def test_max_seq_overrun_clamps_slot_scheduler():
+    svc, t = _slot_svc(slots=2, max_seq=64)
+    rt = svc.backends["backend-math"]
+    text = "integral " * 12
+    reqs = svc.enqueue([text], max_new_tokens=1000)
+    for _ in range(200):
+        if reqs[0].done:
+            break
+        svc.serve_step()
+    assert reqs[0].done and reqs[0].truncated
+    # slot prefill pads the prompt to a power-of-two bucket; decode may
+    # never write past the cache: padded_plen + emitted == max_seq
+    ptoks = min(len(text.encode()), rt.max_seq // 2)
+    padded = 1 << (ptoks - 1).bit_length()
+    assert len(reqs[0].output_tokens) == rt.max_seq - padded
+    assert svc.scheduler.stats["truncated"] == 1
+
+
+def test_empty_batch_routes_and_serves():
+    """route_indices([]) must early-return an empty index array (no
+    phantom-row bucket compile) and submit/enqueue must tolerate it."""
+    svc = RouterService(DSL, load_backends=False)
+    idx = svc.route_indices([])
+    assert idx.shape == (0,)
+    assert svc.route([]) == []
+    assert svc.route_actions([]) == []
+    assert svc.submit([]) == []
+    assert svc.enqueue([]) == []
+    assert svc.cbatcher.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Preemptible slot scheduler: deadline flow, preemption, early retirement
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_meets_imminent_deadline():
+    """A deadline-imminent enqueue preempts the slot mid-decode and
+    completes within its SLO while the long request parks and resumes
+    with its KV intact."""
+    svc, t = _slot_svc(slots=1)
+    long_req = svc.enqueue(["a long background request"],
+                           max_new_tokens=24)[0]
+    svc.serve_step()
+    svc.serve_step()
+    assert len(long_req.output_tokens) == 2
+    urgent = svc.enqueue(["urgent integral question"], max_new_tokens=2,
+                         slo_ms=6.0)[0]
+    steps = 0
+    while not urgent.done and steps < 20:
+        t[0] += 0.001                       # 1 ms of decode per step
+        svc.serve_step()
+        steps += 1
+    assert urgent.done
+    assert urgent.finish_s is not None
+    assert urgent.finish_s <= urgent.deadline_s      # SLO met
+    assert not long_req.done                         # parked, not lost
+    assert svc.scheduler.stats["preemptions"] == 1
+    svc.serve_forever(max_steps=100)
+    assert long_req.done and len(long_req.output_tokens) == 24
+    # the single preemption parked in the spare row: KV survived
+    assert svc.scheduler.stats["resumed_inplace"] == 1
+    assert svc.scheduler.stats["evictions"] == 0
+
+
+def test_eviction_reprefills_and_finishes():
+    """When parked KV rows are reclaimed by further preemptions, the
+    evicted request re-prefills (prompt + generated tokens) and still
+    runs to completion."""
+    svc, t = _slot_svc(slots=1)
+    bg = svc.enqueue(["background request number one"],
+                     max_new_tokens=16)[0]
+    svc.serve_step()
+    u1 = svc.enqueue(["urgent one integral"], max_new_tokens=6,
+                     slo_ms=5.0)[0]
+    svc.serve_step()                        # bg parks; u1 takes spare row
+    u2 = svc.enqueue(["urgent two integral"], max_new_tokens=6,
+                     slo_ms=3.0)[0]
+    svc.serve_step()                        # u1 parks; bg's row evicted
+    svc.serve_forever(max_steps=300)
+    assert bg.done and u1.done and u2.done
+    assert len(bg.output_tokens) == 16
+    assert svc.scheduler.stats["evictions"] >= 1
+    assert svc.scheduler.stats["reprefills"] >= 1
+    assert bg.preemptions >= 1
+
+
+def test_coalesced_deadline_propagates_through_preemption():
+    """A follower's tighter deadline lands on the decoding leader (the
+    in-flight key survives slot admission), so the leader is no longer
+    the preemption victim for a less-urgent arrival."""
+    svc, t = _slot_svc(slots=1)
+    leader = svc.enqueue(["shared popular question"],
+                         max_new_tokens=12)[0]
+    svc.serve_step()                        # leader decoding, best-effort
+    assert leader.deadline_s is None
+    follower = svc.enqueue(["shared popular question"], max_new_tokens=12,
+                           slo_ms=2.0)[0]
+    assert follower.coalesced and leader.deadline_s is not None
+    # arrival more urgent than best-effort but less than the leader now
+    other = svc.enqueue(["some other math question"], max_new_tokens=2,
+                        slo_ms=8.0)[0]
+    svc.serve_step()
+    assert svc.scheduler.stats["preemptions"] == 0   # leader protected
+    svc.serve_forever(max_steps=100)
+    assert leader.done and follower.done and other.done
+    assert follower.output_tokens == leader.output_tokens
+
+
+def test_unprotected_leader_is_preempted_control():
+    """Control for the propagation test: without the coalesced tight
+    deadline the same arrival DOES preempt the best-effort leader."""
+    svc, t = _slot_svc(slots=1)
+    leader = svc.enqueue(["shared popular question"],
+                         max_new_tokens=12)[0]
+    svc.serve_step()
+    svc.enqueue(["some other math question"], max_new_tokens=2,
+                slo_ms=8.0)
+    svc.serve_step()
+    assert svc.scheduler.stats["preemptions"] == 1
+    svc.serve_forever(max_steps=100)
+    assert leader.done
+
+
+def test_early_retirement_no_wasted_steps():
+    """Mixed max_new_tokens: a short request frees its slot the step it
+    finishes and the next queued request is admitted immediately — the
+    pooled step count tracks the longest stream, not batch * max."""
+    svc, t = _slot_svc(slots=2)
+    reqs = []
+    for text, n in [("short question alpha", 2),
+                    ("long question of many tokens", 6),
+                    ("short question beta", 2)]:
+        reqs.extend(svc.enqueue([text], max_new_tokens=n))
+    svc.serve_forever(max_steps=100)
+    assert all(r.done for r in reqs)
+    assert [len(r.output_tokens) for r in reqs] == [2, 6, 2]
+    # whole-batch at max_batch=2 would spin 6 + 2 = 8 pooled steps;
+    # slot retirement admits the second short into the freed slot
+    assert svc.scheduler.stats["decode_steps"] == 6
 
 
 def test_pallas_voronoi_path_matches_numpy(svc):
