@@ -303,6 +303,164 @@ def bench_slo() -> tuple:
     return section, lines
 
 
+CHAOS_DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL embedding science {
+  candidates: ["physics quantum chemistry biology experiment"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive temperature: 0.1 threshold: 0.51
+  members: [math, science] default: science
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+ROUTE science_route { PRIORITY 100 WHEN embedding("science") MODEL "backend-science" }
+GLOBAL { default_model: "backend-science" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+BACKEND backend-science { arch: "stablelm-1.6b" }
+"""
+
+# near-identical ungrouped signals feeding competing routes: the
+# admission gate must flag the introduced T4 and refuse the swap
+CHAOS_T4_DSL = """
+SIGNAL embedding alpha {
+  candidates: ["solve the equation with algebra"] threshold: 0.05
+}
+SIGNAL embedding beta {
+  candidates: ["solve the equation with algebra today"] threshold: 0.05
+}
+ROUTE a { PRIORITY 200 WHEN embedding("alpha") MODEL "backend-math" }
+ROUTE b { PRIORITY 100 WHEN embedding("beta") MODEL "backend-science" }
+GLOBAL { default_model: "backend-science" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+BACKEND backend-science { arch: "stablelm-1.6b" }
+"""
+
+
+def _chaos_serve(svc, max_steps: int = 20000) -> dict:
+    """Drive the service loop to idle, counting steps that *escaped*
+    containment (an exception out of serve_step = a crashed step — the
+    fault tier's job is to make this zero)."""
+    crashed = steps = 0
+    while svc._has_pending_work() and steps < max_steps:
+        steps += 1
+        try:
+            svc.serve_step()
+        except Exception as e:  # noqa: BLE001 — that IS the measurement
+            crashed += 1
+            print(f"router/CHAOS_CRASHED_STEP,0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            break
+    return {"steps": steps, "crashed_steps": crashed}
+
+
+def bench_chaos() -> tuple:
+    """Fault-tier end-to-end: kill a backend mid-run (serve loop must
+    complete with every request terminal and the survivor absorbing the
+    diverted traffic inside SLO), hot-swap the policy under load with
+    zero dropped in-flight, and verify a T4-conflicting rebind is
+    rejected at admission.  -> (chaos section dict, printable lines,
+    list of failed check names)."""
+    from repro.serving.faults import BreakerConfig, RetryPolicy
+    from repro.serving.router import RouterService
+    lines, failed_checks = [], []
+    svc = RouterService(
+        CHAOS_DSL, max_batch=4, slots=2, audit=True,
+        retry=RetryPolicy(max_retries=1, backoff_base_s=0.001),
+        breaker=BreakerConfig(window=8, min_calls=2, cooldown_s=0.1))
+    # warmup: compile every prefill/decode bucket on both backends
+    warm = svc.enqueue(["solve the integral warm request",
+                        "what quantum physics energy warm"],
+                       max_new_tokens=4)
+    svc.serve_forever(max_steps=2000)
+    assert all(r.done for r in warm)
+
+    # -- phase 1: kill backend-math mid-run ---------------------------------
+    t0 = svc.cbatcher.clock()
+    reqs = svc.enqueue(
+        [f"solve the integral of x to the {i}" for i in range(8)]
+        + [f"what energy does particle {i} have" for i in range(4)],
+        max_new_tokens=4, slo_ms=4000.0)
+    svc.serve_step()
+    svc.serve_step()
+    svc.faults.inject("backend-math", dead=True)
+    loop = _chaos_serve(svc)
+    unterminated = sum(not r.done for r in reqs)
+    failed = sum(r.failed for r in reqs)
+    diverted = sum(r.fallback_used for r in reqs)
+    survivors = [r for r in reqs
+                 if r.done and not r.failed
+                 and r.backend == "backend-science"]
+    hits = sum(r.finish_s <= r.deadline_s for r in survivors)
+    hit_rate = hits / max(1, len(survivors))
+    kill = {
+        "n_requests": len(reqs), "killed": "backend-math",
+        "survivor": "backend-science",
+        **loop, "unterminated": unterminated, "failed": failed,
+        "diverted_to_fallback": diverted,
+        "survivor_slo_hit_rate": hit_rate, "slo_ms": 4000.0,
+        "fault_stats": dict(svc.faults.stats),
+        "breaker_states": svc.faults.states(),
+        "scheduler_stats": dict(svc.scheduler.stats),
+        "wall_s": svc.cbatcher.clock() - t0,
+    }
+    if loop["crashed_steps"]:
+        failed_checks.append("kill_backend_crashed_steps")
+    if unterminated or failed:
+        failed_checks.append("kill_backend_non_terminal_requests")
+    if hit_rate < 0.9:
+        failed_checks.append("kill_backend_survivor_slo")
+    lines.append(f"router/chaos_kill_backend,0,"
+                 f"crashed={loop['crashed_steps']},"
+                 f"unterminated={unterminated},failed={failed},"
+                 f"diverted={diverted},survivor_hit_rate={hit_rate:.2f}")
+
+    # -- phase 2: hot-swap under load ---------------------------------------
+    svc.faults.clear("backend-math")
+    wave1 = svc.enqueue(["what chemistry experiment works",
+                         "physics of quantum biology energy"],
+                        max_new_tokens=4)
+    svc.serve_step()
+    res = svc.rebind(
+        CHAOS_DSL.replace("ROUTE math_route", "ROUTE math_route_v2"))
+    wave2 = svc.enqueue(["particle energy experiment please"],
+                        max_new_tokens=4)
+    loop2 = _chaos_serve(svc)
+    dropped = sum(not r.done for r in wave1 + wave2)
+    swap = {
+        "accepted": res.accepted, "generation": res.generation,
+        **loop2, "dropped_inflight": dropped,
+        "inflight_generations": [r.generation for r in wave1],
+        "arrival_generations": [r.generation for r in wave2],
+        "old_generation_freed": 0 not in svc.generations(),
+    }
+    if not res.accepted or dropped or loop2["crashed_steps"]:
+        failed_checks.append("hot_swap_under_load")
+    lines.append(f"router/chaos_hot_swap,0,accepted={res.accepted},"
+                 f"gen={res.generation},dropped={dropped},"
+                 f"old_freed={swap['old_generation_freed']}")
+
+    # -- phase 3: conflicting rebind rejected at admission ------------------
+    res_t4 = svc.rebind(CHAOS_T4_DSL)
+    gate = {
+        "accepted": res_t4.accepted,
+        "blocking": [f"{f.kind.name} {f.rules}" for f in res_t4.blocking],
+        "serving_generation": svc.generation,
+    }
+    if res_t4.accepted or not res_t4.blocking:
+        failed_checks.append("t4_rebind_not_rejected")
+    lines.append(f"router/chaos_t4_rebind,0,rejected={not res_t4.accepted},"
+                 f"blocking={len(res_t4.blocking)}")
+    section = {"kill_backend": kill, "hot_swap": swap,
+               "rebind_admission_gate": gate,
+               "audit_counts": svc.audit.counts(),
+               "failed_checks": failed_checks}
+    return section, lines, failed_checks
+
+
 def sharded_worker() -> None:
     """Runs inside the 8-device subprocess: engine-level cache-miss
     qps for the PR 2 fused path, the jnp lowering, and the shard_map
@@ -388,16 +546,43 @@ def bench_sharded_subprocess(rows) -> list:
     return lines
 
 
+def run_chaos_smoke() -> list:
+    """CI entry (``--chaos-smoke``): just the fault-tier phases, merged
+    into the existing BENCH_router.json read-modify-write so the perf
+    rows from the last full run survive.  Exits 1 on any failed check."""
+    section, lines, failed_checks = bench_chaos()
+    data = {"unit": "us_per_call"}
+    if JSON_PATH.exists():
+        try:
+            data = json.loads(JSON_PATH.read_text())
+        except (OSError, json.JSONDecodeError):
+            pass
+    data["chaos"] = section
+    atomic_write_json(JSON_PATH, data)
+    lines.append(f"router/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    if failed_checks:
+        print(f"router/CHAOS_SMOKE_FAILED,0,{','.join(failed_checks)}",
+              file=sys.stderr)
+        sys.exit(1)
+    return lines
+
+
 def main(argv=None) -> list:
     argv = sys.argv[1:] if argv is None else argv
     if _WORKER_FLAG in argv:
         sharded_worker()
         return []
+    if "--chaos-smoke" in argv:
+        return run_chaos_smoke()
     rows: list = []
     lines = bench_route_level(rows)
     lines += bench_precision_engine(rows)
     slo_section, slo_lines = bench_slo()
     lines += slo_lines
+    chaos_section, chaos_lines, _ = bench_chaos()
+    lines += chaos_lines
     lines += bench_sharded_subprocess(rows)
     by_name = {r["name"]: r for r in rows}
     fused = by_name.get(
@@ -424,6 +609,7 @@ def main(argv=None) -> list:
         "rows": rows,
         "speedups": speedups,
         "slo": slo_section,
+        "chaos": chaos_section,
         "note": ("engine_* rows are cache-miss traffic on pre-embedded "
                  "batches (fresh embeddings per rep, embedder off the "
                  "clock); route_* rows include the HashEmbedder.  CPU "

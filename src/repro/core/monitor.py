@@ -49,26 +49,39 @@ class OnlineConflictMonitor:
 
     def observe_batch(self, scores: np.ndarray,
                       thresholds: np.ndarray) -> None:
-        """scores: (B, n_signals) raw confidences; thresholds: (n,)."""
-        scores = np.asarray(scores)
+        """scores: (B, n_signals) raw confidences; thresholds: (n,).
+
+        One matmul + one broadcast comparison for ALL pairs — this sits
+        on the live routing path (RouterService feeds it every batch),
+        so the per-pair Python loop only runs over the EWMA updates."""
+        scores = np.asarray(scores, np.float64)
+        b = scores.shape[0]
+        if b == 0 or len(self.names) < 2:
+            return
+        thresholds = np.asarray(thresholds, np.float64)
         fires = scores >= thresholds[None, :]
-        idx = {n: i for i, n in enumerate(self.names)}
-        for (a, b), st in self.pairs.items():
-            ia, ib = idx[a], idx[b]
-            both = fires[:, ia] & fires[:, ib]
+        # cofire[i, j] = P(i and j both fire) over this batch
+        ff = fires.astype(np.float64)
+        cofire = (ff.T @ ff) / b
+        # against[i, j] = P(both fire and j scores above i) — the rate
+        # at which priority-winner i overrides stronger evidence for j
+        n = len(self.names)
+        against = np.zeros((n, n))
+        for i in range(n):
+            m = fires[:, i:i + 1] & fires & (scores > scores[:, i:i + 1])
+            against[i] = m.mean(axis=0)
+        idx = {nm: i for i, nm in enumerate(self.names)}
+        w = self.decay ** b
+        for (a, bn), st in self.pairs.items():
+            ia, ib = idx[a], idx[bn]
             pa = self.priority_of.get(a, 0)
-            pb = self.priority_of.get(b, 0)
-            if pa >= pb:
-                against = both & (scores[:, ib] > scores[:, ia])
-            else:
-                against = both & (scores[:, ia] > scores[:, ib])
-            for x_new, attr in ((both.mean(), "cofire"),
-                                (against.mean(), "against_evidence")):
-                old = getattr(st, attr)
-                w = self.decay ** scores.shape[0]
-                setattr(st, attr, w * old + (1 - w) * float(x_new))
-            st.n += scores.shape[0]
-        self.total += scores.shape[0]
+            pb = self.priority_of.get(bn, 0)
+            agz = against[ia, ib] if pa >= pb else against[ib, ia]
+            st.cofire = w * st.cofire + (1 - w) * float(cofire[ia, ib])
+            st.against_evidence = (w * st.against_evidence
+                                   + (1 - w) * float(agz))
+            st.n += b
+        self.total += b
 
     def alerts(self, min_obs: int = 100) -> List[Finding]:
         out: List[Finding] = []

@@ -274,3 +274,32 @@ class ConflictDetector:
                 findings.extend(self._soft_shadowing(hi, lo))
                 findings.extend(self._calibration_findings(hi, lo))
         return findings
+
+
+# ---------------------------------------------------------------------------
+# Admission-gate helpers (serving hot-swap)
+# ---------------------------------------------------------------------------
+
+# Finding kinds that block a policy hot-swap at admission regardless of
+# severity: a T4 probable conflict is the paper's "co-fires on real
+# input mass" hazard — statically detectable, so a new generation that
+# *introduces* one must never reach traffic.
+BLOCKING_KINDS = (ConflictType.PROBABLE_CONFLICT,)
+
+
+def finding_key(f: Finding) -> Tuple:
+    """Identity of a finding for cross-generation comparison: kind +
+    the (order-free) rule pair + the evidencing signal pair.  Numeric
+    evidence (masses, margins) is excluded — a pre-existing conflict
+    whose mass drifts slightly is still the *same* conflict, not a new
+    one the admission gate should block on."""
+    ev = f.evidence or {}
+    sigs = tuple(sorted(str(s) for s in ev.get("signals", ())))
+    return (f.kind.name, tuple(sorted(f.rules)), sigs)
+
+
+def blocking_findings(findings: Sequence[Finding]) -> List[Finding]:
+    """The subset of ``findings`` that must block admission: every
+    error-severity finding plus every ``BLOCKING_KINDS`` hazard."""
+    return [f for f in findings
+            if f.severity == "error" or f.kind in BLOCKING_KINDS]

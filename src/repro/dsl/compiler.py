@@ -45,6 +45,7 @@ class RouterConfig:
     tests: Dict[str, Tuple[Tuple[str, str], ...]]
     trees: Dict[str, fdd.DecisionTree]
     atom_types: Dict[str, str]
+    source: str = ""                         # DSL text this was compiled from
 
     @property
     def default_action(self) -> Optional[Action]:
@@ -53,6 +54,12 @@ class RouterConfig:
 
     def exclusive_groups(self) -> List[Tuple[str, ...]]:
         return [g.names for g in self.groups.values()]
+
+    def fingerprint(self) -> str:
+        """Short content digest of the compiled source — the hot-swap
+        no-op check (rebinding the identical policy is skipped)."""
+        import hashlib
+        return hashlib.sha1(self.source.encode("utf-8")).hexdigest()[:12]
 
 
 DEFAULT_THRESHOLD = 0.5
@@ -144,4 +151,6 @@ def compile_program(prog: ast.Program,
 def compile_text(text: str) -> RouterConfig:
     from repro.dsl.parser import parse
     prog, atom_types = parse(text)
-    return compile_program(prog, atom_types)
+    cfg = compile_program(prog, atom_types)
+    cfg.source = text
+    return cfg

@@ -10,13 +10,29 @@ per backend, deadline-driven preemption; --no-preempt to disable, omit
 
   PYTHONPATH=src python -m repro.launch.serve --continuous --slots 2 \
       --slo-ms 250 --requests "solve x^2=4" "what is DNA"
+
+Operating the fault-tolerant tier:
+
+  --audit-log audit.jsonl --audit-retention 10000   # durable audit trail
+  --monitor                                         # online conflict monitor
+  --fault-rate backend-math:0.3 --retries 3         # chaos knobs
+  --kill-backend backend-math                       # dead from the start
+  --rebind-watch                                    # hot-swap on config edit
+
+``--rebind-watch`` polls the --config file's mtime from a daemon thread
+and calls ``RouterService.rebind`` on change: the new policy passes the
+conflict admission gate (or is rejected, old generation untouched) and
+new arrivals flip atomically to the new generation.
 """
 from __future__ import annotations
 
 import argparse
 import pathlib
+import threading
 import time
 
+from repro.serving.audit import AuditSink
+from repro.serving.faults import BreakerConfig, RetryPolicy
 from repro.serving.router import RouterService
 
 DEFAULT_DSL = """
@@ -44,6 +60,31 @@ BACKEND backend-science { arch: "stablelm-1.6b" }
 BACKEND fast-reject { arch: "internlm2-1.8b" }
 GLOBAL { default_model: "backend-science" }
 """
+
+
+def _watch_rebind(svc: RouterService, path: pathlib.Path,
+                  poll_s: float, stop: threading.Event) -> None:
+    """Daemon loop: poll the config file's mtime and hot-swap on change.
+    Rejections (compile/validate/admission-gate) are reported and leave
+    the serving generation untouched."""
+    try:
+        last = path.stat().st_mtime
+    except OSError:
+        last = 0.0
+    while not stop.wait(poll_s):
+        try:
+            mtime = path.stat().st_mtime
+        except OSError:
+            continue
+        if mtime == last:
+            continue
+        last = mtime
+        res = svc.rebind(path.read_text())
+        if res.accepted:
+            print(f"[rebind] accepted -> generation {res.generation}")
+        else:
+            print(f"[rebind] REJECTED (generation {res.generation} keeps "
+                  f"serving): " + "; ".join(res.reasons))
 
 
 def main(argv=None):
@@ -88,10 +129,39 @@ def main(argv=None):
                          "the lowest-urgency active slot (default on)")
     ap.add_argument("--no-preempt", dest="preempt", action="store_false",
                     help="disable preemption (slots still retire early)")
+    # ---- fault-tolerant tier ------------------------------------------------
+    ap.add_argument("--audit-log", default=None,
+                    help="JSONL audit-trail path (enables the audit "
+                         "sink; omit for no audit)")
+    ap.add_argument("--audit-cap", type=int, default=4096,
+                    help="in-memory audit ring capacity")
+    ap.add_argument("--audit-retention", type=int, default=None,
+                    help="max JSONL lines kept on disk (compacted when "
+                         "exceeded 2x; default: --audit-cap)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="feed the online conflict monitor from the "
+                         "live score stream and print its alerts")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="per-request backend retry budget")
+    ap.add_argument("--breaker-cooldown-s", type=float, default=None,
+                    help="open -> half-open probe delay per backend")
+    ap.add_argument("--fault-rate", action="append", default=[],
+                    metavar="BACKEND:P",
+                    help="inject failures: backend fails each call with "
+                         "probability P (repeatable)")
+    ap.add_argument("--kill-backend", action="append", default=[],
+                    help="mark a backend dead from the start (chaos: "
+                         "exercises breaker + fallback; repeatable)")
+    ap.add_argument("--rebind-watch", action="store_true",
+                    help="poll --config for edits and hot-swap the "
+                         "policy through the conflict admission gate")
+    ap.add_argument("--rebind-poll-s", type=float, default=0.5)
     args = ap.parse_args(argv)
     if args.slots is not None and not args.continuous:
         ap.error("--slots requires --continuous (the slot scheduler "
                  "drives the continuous-batching loop)")
+    if args.rebind_watch and not args.config:
+        ap.error("--rebind-watch requires --config (it watches the file)")
 
     text = pathlib.Path(args.config).read_text() if args.config \
         else DEFAULT_DSL
@@ -110,26 +180,71 @@ def main(argv=None):
             print(f"[serve] WARNING: --mesh {args.mesh} is inert with "
                   f"--kernel {kernel}; the shard_map routing path needs "
                   f"--kernel fused")
+    audit = None
+    if args.audit_log or args.monitor:
+        audit = AuditSink(capacity=args.audit_cap, path=args.audit_log,
+                          retention=args.audit_retention)
+    retry = (RetryPolicy(max_retries=args.retries)
+             if args.retries is not None else None)
+    breaker = (BreakerConfig(cooldown_s=args.breaker_cooldown_s)
+               if args.breaker_cooldown_s is not None else None)
     svc = RouterService(text, use_pallas_voronoi=args.pallas_voronoi,
                         kernel=kernel, precision=args.precision,
-                        mesh=mesh, slots=args.slots, preempt=args.preempt)
+                        mesh=mesh, slots=args.slots, preempt=args.preempt,
+                        audit=audit, monitor=args.monitor or None,
+                        retry=retry, breaker=breaker)
     for d in svc.diagnostics:
         print(f"[validate] {d}")
-    t0 = time.time()
-    if args.continuous:
-        reqs = svc.enqueue(args.requests, max_new_tokens=args.new_tokens,
-                           slo_ms=args.slo_ms)
-        done = svc.serve_forever()
-        print(f"[serve] continuous stats: {svc.cbatcher.stats}")
-        if svc.scheduler is not None:
-            print(f"[serve] scheduler stats: {svc.scheduler.stats}")
-    else:
-        reqs = svc.submit(args.requests, max_new_tokens=args.new_tokens)
-        done = svc.drain()
-    dt = time.time() - t0
+    for spec in args.fault_rate:
+        name, _, p = spec.rpartition(":")
+        svc.faults.inject(name, error_rate=float(p))
+        print(f"[faults] {name}: error_rate={float(p)}")
+    for name in args.kill_backend:
+        svc.faults.inject(name, dead=True)
+        print(f"[faults] {name}: dead")
+    stop = threading.Event()
+    if args.rebind_watch:
+        threading.Thread(
+            target=_watch_rebind,
+            args=(svc, pathlib.Path(args.config), args.rebind_poll_s,
+                  stop),
+            daemon=True).start()
+        print(f"[serve] watching {args.config} for policy hot-swaps")
+    # one clock for admission deadlines AND wall-time reporting: the
+    # batcher's injectable monotonic clock (time.time() here would skew
+    # against scheduler slack computations under NTP adjustment)
+    t0 = svc.cbatcher.clock()
+    try:
+        if args.continuous:
+            reqs = svc.enqueue(args.requests,
+                               max_new_tokens=args.new_tokens,
+                               slo_ms=args.slo_ms)
+            done = svc.serve_forever()
+            print(f"[serve] continuous stats: {svc.cbatcher.stats}")
+            if svc.scheduler is not None:
+                print(f"[serve] scheduler stats: {svc.scheduler.stats}")
+        else:
+            reqs = svc.submit(args.requests,
+                              max_new_tokens=args.new_tokens)
+            done = svc.drain()
+    finally:
+        stop.set()
+    dt = svc.cbatcher.clock() - t0
     for r in reqs:
+        state = "FAILED:" + r.error if r.failed else \
+            f"tokens={r.output_tokens}"
+        fb = " (fallback)" if r.fallback_used else ""
         print(f"[serve] {r.text[:48]!r} -> route={r.route} "
-              f"backend={r.backend} tokens={r.output_tokens}")
+              f"backend={r.backend}{fb} gen={r.generation} {state}")
+    if svc.faults.breakers:
+        print(f"[serve] breakers: {svc.faults.states()} "
+              f"stats: {svc.faults.stats}")
+    if args.monitor:
+        for f in svc.conflict_alerts(min_obs=1):
+            print(f"[monitor] {f.kind.name} {f.rules}: {f.detail}")
+    if svc.audit is not None:
+        print(f"[serve] audit: {svc.audit.counts()}"
+              + (f" -> {args.audit_log}" if args.audit_log else ""))
     print(f"[serve] {done} requests in {dt:.2f}s "
           f"({done*args.new_tokens/max(dt,1e-9):.1f} tok/s)")
     return reqs

@@ -1,0 +1,151 @@
+"""Structured routing audit trail with retention enforcement.
+
+Every consequential serving event appends a typed ``AuditRecord`` to an
+``AuditSink``: a bounded in-memory ring (always) plus an optional JSONL
+file whose length is kept under a retention cap by periodic compaction
+(tempfile + atomic rename, modeled on management-command-style
+``enforce_audit_retention`` jobs).  Record kinds:
+
+  * ``route``           — one per routing decision: query hash, policy
+                          generation, fired signals, winning route,
+                          margin (the winner's confidence score)
+  * ``serve``           — one per request reaching a terminal state:
+                          backend, retries, fallback-used, failed(+why),
+                          latency
+  * ``rebind``          — hot-swap attempts: accepted/rejected + why
+  * ``fault``           — contained backend failures
+  * ``breaker``         — circuit-breaker state transitions
+  * ``reroute``         — fallback re-routing of a request/batch
+  * ``conflict_alert``  — OnlineConflictMonitor findings surfaced from
+                          the live score stream (paper §10 made
+                          operational)
+
+Query *text* never enters the trail — only its hash — so the audit file
+can outlive the requests' privacy budget.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+def qhash(text: str) -> str:
+    """Stable short digest of a query text (no raw text in the trail)."""
+    return hashlib.sha1(text.encode("utf-8")).hexdigest()[:12]
+
+
+@dataclasses.dataclass
+class AuditRecord:
+    ts: float
+    kind: str
+    generation: int = -1
+    query_hash: str = ""
+    route: str = ""
+    backend: str = ""
+    fired: Tuple[str, ...] = ()
+    margin: float = 0.0
+    retries: int = 0
+    fallback_used: bool = False
+    failed: bool = False
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["fired"] = list(self.fired)
+        return d
+
+
+class AuditSink:
+    """Bounded ring + optional JSONL file with retention enforcement.
+
+    The ring (``capacity`` newest records) answers in-process queries
+    (``records``/``tail``/``counts``); the JSONL file is the durable
+    trail.  The file is compacted down to ``retention`` lines whenever
+    it grows past ``2 * retention`` (amortized O(1) per append), and
+    ``enforce_retention()`` forces a compaction on demand.
+    """
+
+    def __init__(self, capacity: int = 4096, path: Optional[str] = None,
+                 retention: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.path = str(path) if path else None
+        self.retention = (retention if retention is not None
+                          else capacity) if self.path else None
+        self.clock = clock
+        self._ring: collections.deque = collections.deque(maxlen=capacity)
+        self._kind_counts: collections.Counter = collections.Counter()
+        self._file_lines = 0
+        if self.path and os.path.exists(self.path):
+            with open(self.path, "r", encoding="utf-8") as f:
+                self._file_lines = sum(1 for _ in f)
+
+    # -- append --------------------------------------------------------------
+    def log(self, kind: str, **fields) -> AuditRecord:
+        rec = AuditRecord(ts=self.clock(), kind=kind, **fields)
+        self._ring.append(rec)
+        self._kind_counts[kind] += 1
+        if self.path:
+            with open(self.path, "a", encoding="utf-8") as f:
+                f.write(json.dumps(rec.to_json(),
+                                   sort_keys=True, default=str) + "\n")
+            self._file_lines += 1
+            if self._file_lines > 2 * self.retention:
+                self.enforce_retention()
+        return rec
+
+    # -- queries -------------------------------------------------------------
+    def records(self, kind: Optional[str] = None) -> List[AuditRecord]:
+        if kind is None:
+            return list(self._ring)
+        return [r for r in self._ring if r.kind == kind]
+
+    def tail(self, n: int = 10) -> List[AuditRecord]:
+        return list(self._ring)[-n:]
+
+    def counts(self) -> Dict[str, int]:
+        """Records logged per kind over the sink's lifetime (not capped
+        by the ring)."""
+        return dict(self._kind_counts)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def __bool__(self) -> bool:
+        # __len__ would otherwise make an *empty* sink falsy, silently
+        # disabling every ``if self.audit:`` guard until the first record
+        return True
+
+    # -- retention -----------------------------------------------------------
+    def enforce_retention(self) -> int:
+        """Compact the JSONL file down to the newest ``retention`` lines
+        (tempfile + atomic rename).  -> #lines dropped."""
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        with open(self.path, "r", encoding="utf-8") as f:
+            lines = f.readlines()
+        keep = lines[-self.retention:]
+        dropped = len(lines) - len(keep)
+        if dropped <= 0:
+            self._file_lines = len(lines)
+            return 0
+        d = os.path.dirname(os.path.abspath(self.path))
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".audit.tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                f.writelines(keep)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._file_lines = len(keep)
+        return dropped

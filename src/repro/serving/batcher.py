@@ -53,6 +53,12 @@ class Request:
     truncated: bool = False               # decode clamped to the KV budget
     finish_s: Optional[float] = None      # completion clock stamp
     preemptions: int = 0                  # times bumped from a decode slot
+    # fault-containment / hot-swap bookkeeping:
+    failed: bool = False                  # terminal, but NOT served
+    error: str = ""                       # why (when failed)
+    retries: int = 0                      # backend attempts beyond the first
+    fallback_used: bool = False           # re-routed off the routed backend
+    generation: int = 0                   # policy generation that routed it
 
     def slack(self, now: float) -> float:
         """Seconds until the deadline; +inf for best-effort requests."""
@@ -200,17 +206,27 @@ class ContinuousBatcher:
             del self._inflight[key]
 
 
-def finish_request(req: Request, now: Optional[float] = None) -> int:
+def finish_request(req: Request, now: Optional[float] = None,
+                   on_done: Optional[Callable[[Request], None]] = None
+                   ) -> int:
     """Mark ``req`` done and fan its output out to coalesced followers
-    (completion stamp and truncation flag included).
+    (completion stamp, truncation flag, and failure state included).
+    ``on_done`` fires once per completed request — leader AND followers
+    — which is how the router's generation refcount and audit trail see
+    every terminal request exactly once.
     -> number of requests completed (leader + followers)."""
     req.done = True
     req.finish_s = now
-    for f in req.followers:
+    followers, req.followers = req.followers, []
+    for f in followers:
         f.output_tokens = list(req.output_tokens)
         f.truncated = req.truncated
+        f.failed = req.failed
+        f.error = req.error
         f.done = True
         f.finish_s = now
-    n = 1 + len(req.followers)
-    req.followers = []
-    return n
+    if on_done is not None:
+        on_done(req)
+        for f in followers:
+            on_done(f)
+    return 1 + len(followers)

@@ -1,0 +1,286 @@
+"""Backend failure containment: fault injection, retries, breakers.
+
+A production router cannot let one backend exception kill the serve
+loop.  This module is the containment layer the serving tier threads
+through every backend call:
+
+* ``FaultSpec`` — the fault-injection hook on a ``BackendRuntime``:
+  configurable error rate, injected latency, fail-the-next-N-calls
+  flakiness, and a persistent ``dead`` switch (the chaos bench's
+  "kill one backend mid-run").  Injection raises ``BackendFaultError``
+  from the same call sites real JAX/runtime exceptions surface, so the
+  containment path is exercised identically by tests and by reality.
+* ``RetryPolicy`` — per-request retry budget with exponential backoff
+  and full jitter (deterministic RNG so tests reproduce).
+* ``CircuitBreaker`` — per-backend closed -> open (error-rate over a
+  sliding outcome window) -> half-open (one probe after a cooldown)
+  -> closed/open.  While open, admission re-routes to the policy's
+  fallback backend instead of burning retries against a dead model.
+* ``FaultManager`` — the per-service bundle: one spec + breaker per
+  backend, the shared retry policy and backoff RNG, and the
+  transition hook the audit trail subscribes to.
+
+Everything takes an injectable monotonic clock (defaulting to
+``time.monotonic``) so tests drive breaker cooldowns on a fake clock,
+matching the ``ContinuousBatcher`` convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+class BackendFaultError(RuntimeError):
+    """Raised by fault injection at a guarded backend call site."""
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultSpec:
+    """Injected failure behavior for one backend (all composable)."""
+    error_rate: float = 0.0     # P(raise) per guarded call
+    latency_s: float = 0.0      # injected sleep per guarded call
+    fail_next: int = 0          # deterministically fail the next N calls
+    dead: bool = False          # persistent failure (chaos: killed backend)
+
+    def active(self) -> bool:
+        return (self.dead or self.fail_next > 0 or self.error_rate > 0.0
+                or self.latency_s > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# retry with exponential backoff + jitter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 2        # attempts = max_retries + 1
+    backoff_base_s: float = 0.005
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 0.25
+    jitter: float = 0.5         # fraction of the delay randomized away
+
+    def backoff_s(self, attempt: int, rng: np.random.Generator) -> float:
+        """Delay before retry ``attempt`` (0-based): exponential, capped,
+        with full jitter on the ``jitter`` fraction so synchronized
+        batches do not re-hammer a recovering backend in lockstep."""
+        d = min(self.max_backoff_s,
+                self.backoff_base_s * self.backoff_mult ** attempt)
+        return d * (1.0 - self.jitter * float(rng.random()))
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+
+@dataclasses.dataclass
+class BreakerConfig:
+    window: int = 16            # sliding outcome window length
+    error_threshold: float = 0.5
+    min_calls: int = 4          # don't trip on the first unlucky call
+    cooldown_s: float = 0.25    # open -> half-open probe delay
+
+
+class CircuitBreaker:
+    """Closed -> open -> half-open -> closed per-backend state machine.
+
+    ``admission()`` is the gate decision: ``"ok"`` (closed), ``"open"``
+    (failing fast — re-route or reject), or ``"probe"`` (half-open: let
+    exactly ONE attempt through; its ``record()`` outcome closes or
+    re-opens the breaker).  Successes recorded while open are ignored —
+    only the probe may close a tripped breaker.
+    """
+
+    def __init__(self, cfg: BreakerConfig = BreakerConfig(), *,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self._state = CLOSED
+        self._outcomes: list = []          # rolling bools, newest last
+        self._opened_at = 0.0
+        self._probe_inflight = False
+        self.transitions = 0
+
+    # -- state ---------------------------------------------------------------
+    def state(self, now: Optional[float] = None) -> str:
+        """Current state, applying the open -> half-open timer."""
+        now = self.clock() if now is None else now
+        if self._state == OPEN and \
+                now - self._opened_at >= self.cfg.cooldown_s:
+            self._transition(HALF_OPEN)
+            self._probe_inflight = False
+        return self._state
+
+    def is_open(self, now: Optional[float] = None) -> bool:
+        """True while failing fast (open, or half-open with the probe
+        already in flight) — the non-consuming check for routing-time
+        fallback decisions."""
+        s = self.state(now)
+        return s == OPEN or (s == HALF_OPEN and self._probe_inflight)
+
+    def admission(self, now: Optional[float] = None) -> str:
+        """-> "ok" | "probe" | "open".  "probe" marks the half-open
+        probe as taken: the caller MUST follow with ``record()``."""
+        s = self.state(now)
+        if s == CLOSED:
+            return "ok"
+        if s == HALF_OPEN and not self._probe_inflight:
+            self._probe_inflight = True
+            return "probe"
+        return "open"
+
+    def _transition(self, state: str) -> None:
+        if state != self._state:
+            self._state = state
+            self.transitions += 1
+            if self.on_transition is not None:
+                self.on_transition(self, state)
+
+    on_transition: Optional[Callable] = None
+
+    # -- outcomes ------------------------------------------------------------
+    def record(self, ok: bool, now: Optional[float] = None) -> None:
+        now = self.clock() if now is None else now
+        s = self.state(now)
+        if s == HALF_OPEN:
+            self._probe_inflight = False
+            if ok:                         # probe succeeded: recover
+                self._outcomes = []
+                self._transition(CLOSED)
+            else:                          # probe failed: back to open
+                self._opened_at = now
+                self._transition(OPEN)
+            return
+        if s == OPEN:
+            return                         # only the probe can close
+        self._outcomes.append(bool(ok))
+        if len(self._outcomes) > self.cfg.window:
+            self._outcomes.pop(0)
+        n = len(self._outcomes)
+        if n >= self.cfg.min_calls:
+            err = 1.0 - sum(self._outcomes) / n
+            if err >= self.cfg.error_threshold:
+                self._opened_at = now
+                self._transition(OPEN)
+
+
+# ---------------------------------------------------------------------------
+# the per-service bundle
+# ---------------------------------------------------------------------------
+
+class FaultManager:
+    """Per-backend fault specs + breakers, one shared retry policy.
+
+    The serving tier calls four hooks:
+
+    * ``pre_call(backend)`` — inside every guarded attempt: injects the
+      backend's configured latency and raises ``BackendFaultError`` per
+      its spec (real exceptions from the model call flow through the
+      same ``except`` as these).
+    * ``record(backend, ok)`` — attempt outcome, feeding the breaker.
+    * ``admission(backend)`` / ``is_open(backend)`` — the gate decision
+      before decoding / the non-consuming routing-time check.
+    * ``backoff_s(attempt)`` — jittered retry delay.
+
+    ``on_transition(backend, state)`` fires on every breaker state
+    change (the audit trail subscribes).
+    """
+
+    def __init__(self, *, retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[BreakerConfig] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 seed: int = 0,
+                 on_transition: Optional[Callable[[str, str], None]] = None):
+        self.retry = retry or RetryPolicy()
+        self.breaker_cfg = breaker or BreakerConfig()
+        self.clock = clock
+        self.rng = np.random.default_rng(seed)
+        self.on_transition = on_transition
+        self.specs: Dict[str, FaultSpec] = {}
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        self.stats = {"injected": 0, "failures": 0, "retries": 0,
+                      "breaker_opens": 0, "breaker_closes": 0}
+
+    # -- injection -----------------------------------------------------------
+    def spec(self, backend: str) -> FaultSpec:
+        s = self.specs.get(backend)
+        if s is None:
+            s = self.specs[backend] = FaultSpec()
+        return s
+
+    def inject(self, backend: str, **kw) -> FaultSpec:
+        """Configure fault injection for ``backend``; e.g.
+        ``inject("m0", dead=True)`` or ``inject("m0", fail_next=2)``."""
+        s = self.spec(backend)
+        for k, v in kw.items():
+            if not hasattr(s, k):
+                raise TypeError(f"FaultSpec has no field {k!r}")
+            setattr(s, k, v)
+        return s
+
+    def clear(self, backend: str) -> None:
+        self.specs.pop(backend, None)
+
+    def pre_call(self, backend: str) -> None:
+        s = self.specs.get(backend)
+        if s is None or not s.active():
+            return
+        if s.latency_s > 0.0:
+            time.sleep(s.latency_s)
+        fail = s.dead
+        if not fail and s.fail_next > 0:
+            s.fail_next -= 1
+            fail = True
+        if not fail and s.error_rate > 0.0:
+            fail = float(self.rng.random()) < s.error_rate
+        if fail:
+            self.stats["injected"] += 1
+            raise BackendFaultError(
+                f"injected fault on backend {backend!r}")
+
+    # -- breaker -------------------------------------------------------------
+    def breaker(self, backend: str) -> CircuitBreaker:
+        b = self.breakers.get(backend)
+        if b is None:
+            b = CircuitBreaker(self.breaker_cfg, clock=self.clock)
+            b.on_transition = self._make_transition_hook(backend)
+            self.breakers[backend] = b
+        return b
+
+    def _make_transition_hook(self, backend: str):
+        def hook(_breaker, state):
+            if state == OPEN:
+                self.stats["breaker_opens"] += 1
+            elif state == CLOSED:
+                self.stats["breaker_closes"] += 1
+            if self.on_transition is not None:
+                self.on_transition(backend, state)
+        return hook
+
+    def admission(self, backend: str) -> str:
+        return self.breaker(backend).admission()
+
+    def is_open(self, backend: str) -> bool:
+        return self.breaker(backend).is_open()
+
+    def record(self, backend: str, ok: bool) -> None:
+        if not ok:
+            self.stats["failures"] += 1
+        self.breaker(backend).record(ok)
+
+    def backoff_s(self, attempt: int) -> float:
+        self.stats["retries"] += 1
+        return self.retry.backoff_s(attempt, self.rng)
+
+    def states(self) -> Dict[str, str]:
+        """Breaker state per backend seen so far (for stats/audit)."""
+        return {b: br.state() for b, br in self.breakers.items()}

@@ -38,6 +38,30 @@ between steps, immediate slot retirement, and deadline-driven
 preemption — instead of the whole-batch fallback that decodes each
 released batch to completion.
 
+The fault-tolerant tier wraps all of the above:
+
+* **Policy generations + hot-swap** — the bound policy lives in a
+  refcounted ``PolicyGeneration``; ``rebind(dsl_text)`` compiles,
+  validates, and binds a replacement, runs the paper's detection
+  hierarchy (SAT + spherical-cap taxonomy) as an *admission gate* — a
+  policy that fails compile/validate or introduces a new T4 probable
+  conflict is rejected with the old generation untouched — then
+  atomically flips new arrivals to generation N+1 while in-flight
+  requests finish on N; a retired generation is freed once its
+  refcount drains.
+* **Failure containment** — every backend decode is guarded by
+  ``serving/faults.py``: fault injection for chaos tests, per-request
+  retry with jittered exponential backoff, a per-backend circuit
+  breaker, and graceful degradation to the policy's default backend
+  when a breaker opens.  A failed batch marks only its own requests
+  ``failed`` (with the error recorded); the serve loop never dies.
+* **Audit trail** — with ``audit=`` enabled, every routing decision,
+  terminal request, fault, re-route, breaker transition, and rebind
+  appends a structured record to a bounded ring/JSONL sink
+  (serving/audit.py), and each generation's ``OnlineConflictMonitor``
+  watches the live score stream for co-fire/against-evidence drift
+  (``conflict_alerts()``).
+
 Backends are real JAX models (reduced configs on CPU; the full configs
 are exercised by launch/dryrun.py on the production mesh).
 """
@@ -45,6 +69,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import zlib
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -53,12 +78,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.dsl.compiler import RouterConfig, compile_text
+from repro.core.monitor import OnlineConflictMonitor
+from repro.core.taxonomy import (ConflictDetector, Finding,
+                                 blocking_findings, finding_key)
+from repro.dsl.compiler import CompileError, RouterConfig, compile_text
 from repro.dsl.validate import Diagnostic, Validator, has_errors
 from repro.models.model import build_model
 from repro.serving import policy as policy_mod
+from repro.serving.audit import AuditSink, qhash
 from repro.serving.batcher import (Batcher, ContinuousBatcher, Request,
                                    finish_request)
+from repro.serving.faults import (BreakerConfig, FaultManager, RetryPolicy)
 from repro.signals import engine as engine_mod
 from repro.signals.embedder import HashEmbedder
 
@@ -67,14 +97,19 @@ from repro.signals.embedder import HashEmbedder
                    static_argnames=("n_rules", "kernel_mode", "interpret"))
 def _route_core(emb, crisp_raw, tensors, jt, n_rules, kernel_mode,
                 interpret):
-    """embeddings + crisp scores -> (route index, score): the whole
-    signal pipeline and the policy argmax as one XLA program.
-    ``kernel_mode`` picks the signal lowering (jnp / grouped Pallas /
-    the fully-fused centroid-resident fused_route kernel)."""
-    _, _, fired, conf = engine_mod._signal_eval_core(
+    """embeddings + crisp scores -> (route index, score, normalized
+    activations, fired mask): the whole signal pipeline and the policy
+    argmax as one XLA program.  ``kernel_mode`` picks the signal
+    lowering (jnp / grouped Pallas / the fully-fused centroid-resident
+    fused_route kernel).  The activation outputs feed the online
+    conflict monitor and the audit trail; callers that ignore them pay
+    nothing (they are intermediates of the fused program either way,
+    and stay on device unless materialized)."""
+    _, normalized, fired, conf = engine_mod._signal_eval_core(
         emb, crisp_raw, tensors, kernel_mode=kernel_mode,
         interpret=interpret)
-    return policy_mod.evaluate_policy(jt, n_rules, fired, conf)
+    idx, score = policy_mod.evaluate_policy(jt, n_rules, fired, conf)
+    return idx, score, normalized, fired
 
 
 @functools.lru_cache(maxsize=16)
@@ -86,8 +121,9 @@ def _sharded_route_core(mesh, n_rules: int):
 
     @jax.jit
     def fn(emb, crisp_raw, st, jt):
-        _, _, fired, conf = eval_fn(emb, crisp_raw, st)
-        return policy_mod.evaluate_policy(jt, n_rules, fired, conf)
+        _, normalized, fired, conf = eval_fn(emb, crisp_raw, st)
+        idx, score = policy_mod.evaluate_policy(jt, n_rules, fired, conf)
+        return idx, score, normalized, fired
 
     return fn
 
@@ -103,6 +139,41 @@ class BackendRuntime:
     max_seq: int = 128
 
 
+@dataclasses.dataclass
+class PolicyGeneration:
+    """One bound policy version: everything routing needs, refcounted.
+
+    ``inflight`` counts admitted-but-not-terminal requests stamped with
+    this generation; a retired generation is freed (dropped from the
+    service's table, device tables garbage-collected) once it drains.
+    ``blocking_keys`` caches the identity set of this generation's
+    blocking taxonomy findings so the admission gate can tell *new*
+    conflicts from pre-existing ones."""
+    gen_id: int
+    config: RouterConfig
+    engine: Any                    # SignalEngine
+    tables: policy_mod.PolicyTables
+    jt: Dict[str, jnp.ndarray]
+    diagnostics: List[Diagnostic]
+    fingerprint: str
+    monitor: Optional[OnlineConflictMonitor] = None
+    inflight: int = 0
+    retired: bool = False
+    blocking_keys: Optional[frozenset] = None
+
+
+@dataclasses.dataclass
+class RebindResult:
+    """Outcome of a hot-swap attempt.  ``generation`` is the generation
+    actually serving after the call — the new one on accept, the old
+    (uninterrupted) one on reject."""
+    accepted: bool
+    generation: int
+    reasons: List[str] = dataclasses.field(default_factory=list)
+    diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
+    blocking: List[Finding] = dataclasses.field(default_factory=list)
+
+
 class RouterService:
     def __init__(self, dsl_text: str, *, embedder=None,
                  load_backends: bool = True, max_batch: int = 8,
@@ -111,29 +182,47 @@ class RouterService:
                  precision: Optional[str] = None,
                  mesh=None,
                  slots: Optional[int] = None, preempt: bool = True,
-                 validate: bool = True, run_taxonomy: bool = False):
-        from repro.signals.engine import SignalEngine
-        self.config: RouterConfig = compile_text(dsl_text)
-        self.diagnostics: List[Diagnostic] = []
-        if validate:
-            self.diagnostics = Validator(self.config).validate(
-                run_taxonomy=run_taxonomy)
-            if has_errors(self.diagnostics):
-                msgs = "\n".join(str(d) for d in self.diagnostics
-                                 if d.severity == "error")
-                raise ValueError(f"config has validation errors:\n{msgs}")
+                 validate: bool = True, run_taxonomy: bool = False,
+                 audit=None, monitor: Optional[bool] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[BreakerConfig] = None,
+                 fault_seed: int = 0):
         self.embedder = embedder or HashEmbedder()
-        self.engine = SignalEngine(self.config, self.embedder,
-                                   use_pallas=use_pallas_voronoi,
-                                   kernel=kernel, precision=precision,
-                                   mesh=mesh)
-        self.tables = policy_mod.build_tables(self.config)
-        self._jt = self.tables.as_jax()       # device-resident, cached
+        self._engine_opts = dict(use_pallas=use_pallas_voronoi,
+                                 kernel=kernel, precision=precision,
+                                 mesh=mesh)
+        self._validate = validate
+        self._run_taxonomy = run_taxonomy
+        self._load_backends_flag = load_backends
         self.batcher = Batcher(max_batch=max_batch)
         self.cbatcher = ContinuousBatcher(max_batch=max_batch)
+        # audit: AuditSink instance | True (default in-memory ring) |
+        # None/False (disabled — zero serving-path overhead).  The
+        # sink's clock chains through the batcher's so fake-clock tests
+        # stamp audit records consistently.
+        if isinstance(audit, AuditSink):
+            self.audit: Optional[AuditSink] = audit
+        elif audit:
+            self.audit = AuditSink(clock=lambda: self.cbatcher.clock())
+        else:
+            self.audit = None
+        # monitor default follows audit: observability on or off as one
+        self._monitor_enabled = bool(audit) if monitor is None \
+            else bool(monitor)
+        self.faults = FaultManager(
+            retry=retry, breaker=breaker,
+            clock=lambda: self.cbatcher.clock(), seed=fault_seed,
+            on_transition=self._audit_breaker)
+        # ---- generation 0 ----------------------------------------------------
+        self._gen_counter = 0
+        gen = self._build_generation(dsl_text, gen_id=0,
+                                     validate=validate,
+                                     run_taxonomy=run_taxonomy)
+        self._gens: Dict[int, PolicyGeneration] = {0: gen}
+        self._gen = gen
         self.backends: Dict[str, BackendRuntime] = {}
         if load_backends:
-            self._load_backends()
+            self._load_backends(gen.config)
         # slots=N switches the continuous loop from whole-batch decode to
         # the preemptible slot scheduler (serving/scheduler.py); slots=
         # None keeps the whole-batch fallback
@@ -142,11 +231,209 @@ class RouterService:
             from repro.serving.scheduler import DecodeScheduler
             self.scheduler = DecodeScheduler(
                 self.backends, self.cbatcher, n_slots=slots,
-                preempt=preempt)
+                preempt=preempt, faults=self.faults,
+                fallback=self._fallback_for,
+                on_done=self._on_request_done, audit=self.audit)
+
+    # ---- generation plumbing (back-compat views) ------------------------------
+    @property
+    def config(self) -> RouterConfig:
+        return self._gen.config
+
+    @property
+    def engine(self):
+        return self._gen.engine
+
+    @property
+    def tables(self) -> policy_mod.PolicyTables:
+        return self._gen.tables
+
+    @property
+    def _jt(self):
+        return self._gen.jt
+
+    @property
+    def diagnostics(self) -> List[Diagnostic]:
+        return self._gen.diagnostics
+
+    @property
+    def generation(self) -> int:
+        """The generation id new arrivals are stamped with."""
+        return self._gen.gen_id
+
+    def generations(self) -> Dict[int, Dict[str, Any]]:
+        """Live generation table: {gen_id: {inflight, retired}}."""
+        return {g.gen_id: {"inflight": g.inflight, "retired": g.retired}
+                for g in self._gens.values()}
+
+    def _build_generation(self, dsl_text: str, gen_id: int,
+                          validate: bool = True,
+                          run_taxonomy: bool = False) -> PolicyGeneration:
+        from repro.signals.engine import SignalEngine
+        config = compile_text(dsl_text)
+        diagnostics: List[Diagnostic] = []
+        if validate:
+            diagnostics = Validator(config).validate(
+                run_taxonomy=run_taxonomy)
+            if has_errors(diagnostics):
+                msgs = "\n".join(str(d) for d in diagnostics
+                                 if d.severity == "error")
+                raise ValueError(f"config has validation errors:\n{msgs}")
+        engine = SignalEngine(config, self.embedder, **self._engine_opts)
+        tables = policy_mod.build_tables(config)
+        mon = None
+        if self._monitor_enabled:
+            mon = OnlineConflictMonitor(
+                engine.names, priority_of=self._atom_priorities(config))
+        return PolicyGeneration(
+            gen_id=gen_id, config=config, engine=engine, tables=tables,
+            jt=tables.as_jax(), diagnostics=diagnostics,
+            fingerprint=config.fingerprint(), monitor=mon)
+
+    @staticmethod
+    def _atom_priorities(config: RouterConfig) -> Dict[str, int]:
+        """Per-signal priority for the online monitor's against-evidence
+        direction: the highest priority among rules referencing it."""
+        pr: Dict[str, int] = {}
+        for r in config.rules:
+            for a in r.condition.atoms():
+                pr[a] = max(pr.get(a, r.priority), r.priority)
+        return pr
+
+    def _blocking_keys(self, gen: PolicyGeneration) -> frozenset:
+        """Identity set of ``gen``'s blocking taxonomy findings, cached.
+        Computed post-bind (its engine already wrote live centroids back
+        into the atoms), so old and new generations compare on the same
+        geometry."""
+        if gen.blocking_keys is None:
+            det = ConflictDetector(gen.config.signals,
+                                   gen.config.exclusive_groups())
+            gen.blocking_keys = frozenset(
+                finding_key(f)
+                for f in blocking_findings(det.analyze(gen.config.rules)))
+        return gen.blocking_keys
+
+    # ---- hot-swap --------------------------------------------------------------
+    def rebind(self, dsl_text: str, *,
+               run_taxonomy: bool = True) -> RebindResult:
+        """Zero-downtime policy hot-swap with a conflict admission gate.
+
+        Compiles and binds ``dsl_text`` beside the serving generation
+        (device tables are memoized per content/mesh/precision, so a
+        re-bind of known content is cheap), then gates admission on the
+        paper's detection hierarchy: compile errors, validation errors,
+        and any *newly introduced* blocking finding (a T4 probable
+        conflict, or any error-severity finding, not already present in
+        the serving generation) reject the swap — the old generation
+        keeps serving, untouched.  On accept, new arrivals flip
+        atomically to generation N+1; in-flight requests finish on N,
+        and N is freed once its refcount drains."""
+        old = self._gen
+
+        def reject(reasons, diags=(), blocking=()):
+            if self.audit:
+                self.audit.log("rebind", generation=old.gen_id,
+                               failed=True,
+                               detail={"reasons": list(reasons)})
+            return RebindResult(False, old.gen_id, list(reasons),
+                                list(diags), list(blocking))
+
+        # 1. compile (ParseError is a SyntaxError, not a CompileError)
+        try:
+            config = compile_text(dsl_text)
+        except (CompileError, SyntaxError) as e:
+            return reject([f"compile error: {e}"])
+        if config.fingerprint() == old.fingerprint and not old.retired:
+            if self.audit:
+                self.audit.log("rebind", generation=old.gen_id,
+                               detail={"noop": True})
+            return RebindResult(True, old.gen_id,
+                                ["no-op: identical policy source"])
+        # 2. validate (static checks; the geometric taxonomy runs
+        #    post-bind below, on live centroids)
+        diags = Validator(config).validate(run_taxonomy=False)
+        if has_errors(diags):
+            return reject(
+                [str(d) for d in diags if d.severity == "error"], diags)
+        # 3. bind: builds the engine (embedder + live centroids written
+        #    back into the atoms) + policy tables, old gen still serving
+        try:
+            gen = self._build_generation(dsl_text,
+                                         gen_id=self._gen_counter + 1,
+                                         validate=False)
+        except Exception as e:  # noqa: BLE001 — bind must not kill serving
+            return reject([f"bind error: {type(e).__name__}: {e}"], diags)
+        gen.diagnostics = diags
+        # 4. admission gate: the full detection hierarchy on the bound
+        #    policy; block on conflicts the swap would *introduce*
+        if run_taxonomy:
+            findings = ConflictDetector(
+                gen.config.signals,
+                gen.config.exclusive_groups()).analyze(gen.config.rules)
+            blocking = blocking_findings(findings)
+            gen.blocking_keys = frozenset(finding_key(f) for f in blocking)
+            introduced = [f for f in blocking
+                          if finding_key(f) not in self._blocking_keys(old)]
+            if introduced:
+                return reject(
+                    [f"{f.kind.name} {f.rules}: {f.detail}"
+                     for f in introduced], diags, introduced)
+        # 5. backends the new policy needs that are not loaded yet
+        if self._load_backends_flag:
+            self._load_backends(gen.config)
+        # 6. atomic flip: one reference assignment — new arrivals route
+        #    on N+1 from the next enqueue/submit; in-flight finish on N
+        self._gen_counter = gen.gen_id
+        self._gens[gen.gen_id] = gen
+        old.retired = True
+        self._gen = gen
+        self._free_if_drained(old)
+        if self.audit:
+            self.audit.log("rebind", generation=gen.gen_id,
+                           detail={"from": old.gen_id,
+                                   "fingerprint": gen.fingerprint})
+        return RebindResult(True, gen.gen_id)
+
+    def _free_if_drained(self, gen: PolicyGeneration) -> None:
+        if gen.retired and gen.inflight <= 0 and gen is not self._gen:
+            self._gens.pop(gen.gen_id, None)
+
+    def _on_request_done(self, req: Request) -> None:
+        """Terminal hook for every request (leaders and coalesced
+        followers alike): drop the generation refcount, free drained
+        retired generations, and append the ``serve`` audit record."""
+        gen = self._gens.get(req.generation)
+        if gen is not None:
+            gen.inflight -= 1
+            if gen.retired:
+                self._free_if_drained(gen)
+        if self.audit:
+            lat = (req.finish_s - req.arrival_s
+                   if req.finish_s is not None and req.arrival_s is not None
+                   else None)
+            self.audit.log(
+                "serve", generation=req.generation,
+                query_hash=qhash(req.text), route=req.route,
+                backend=req.backend, retries=req.retries,
+                fallback_used=req.fallback_used, failed=req.failed,
+                detail={"error": req.error, "latency_s": lat,
+                        "tokens": len(req.output_tokens),
+                        "truncated": req.truncated,
+                        "coalesced": req.coalesced})
+
+    def _audit_breaker(self, backend: str, state: str) -> None:
+        if self.audit:
+            self.audit.log("breaker", backend=backend,
+                           detail={"state": state})
 
     # ---- backends -------------------------------------------------------------
-    def _load_backends(self):
-        for name, fields in self.config.backends.items():
+    def _load_backends(self, config: Optional[RouterConfig] = None):
+        """Load every backend ``config`` declares that is not already
+        resident (rebind reuses loaded models across generations)."""
+        config = config if config is not None else self.config
+        for name, fields in config.backends.items():
+            if name in self.backends:
+                continue
             arch = str(fields.get("arch", "internlm2-1.8b"))
             cfg = get_config(arch, smoke=True)
             model = build_model(cfg)
@@ -164,49 +451,104 @@ class RouterService:
                                                   max_seq=max_seq)),
                 max_seq=max_seq)
 
+    def _fallback_for(self, backend: str,
+                      gen: Optional[PolicyGeneration] = None
+                      ) -> Optional[str]:
+        """The degradation target when ``backend`` is failing: the
+        policy's default model, if it is loaded, distinct, and its own
+        breaker is not open."""
+        gen = gen or self._gen
+        da = gen.config.default_action
+        if da is None:
+            return None
+        fb = da.target
+        if fb == backend or fb not in self.backends:
+            return None
+        if self.faults.is_open(fb):
+            return None
+        return fb
+
     # ---- routing ---------------------------------------------------------------
-    def route_indices(self, texts: Sequence[str],
-                      metadata: Optional[Sequence[Dict[str, Any]]] = None
-                      ) -> np.ndarray:
-        """-> winning route index per request (n_rules == default), from
-        ONE evaluation of the fused signal+policy program.
+    def _route_eval(self, texts: Sequence[str],
+                    metadata: Optional[Sequence[Dict[str, Any]]] = None,
+                    gen: Optional[PolicyGeneration] = None):
+        """-> (route idx, score) per request from ONE evaluation of the
+        fused signal+policy program, feeding the activation stream to
+        the generation's conflict monitor and the audit trail when
+        either is enabled.
 
         Batches are padded up to the next power-of-two bucket so the
         jit cache compiles one variant per power of two up to the
         largest batch seen (instead of one per distinct batch size)."""
+        gen = gen or self._gen
         if not texts:
             # (b-1).bit_length() on b == 0 would pad a phantom row and
             # compile a 1-row variant just to slice it away again
-            return np.zeros((0,), np.int64)
-        if self.engine.fused_ok:
+            return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
+        observe = gen.monitor is not None or self.audit is not None
+        engine = gen.engine
+        if engine.fused_ok:
             b = len(texts)
-            emb = self.engine.embed(texts)
-            crisp = self.engine.crisp_scores(texts, metadata)
+            emb = engine.embed(texts)
+            crisp = engine.crisp_scores(texts, metadata)
             bucket = 1 << max(0, (b - 1).bit_length())
-            if self.engine.sharded_active:
+            if engine.sharded_active:
                 # keep buckets divisible by the mesh's data axes so the
                 # batch shards instead of replicating
-                dsz = engine_mod.mesh_data_size(self.engine.mesh)
+                dsz = engine_mod.mesh_data_size(engine.mesh)
                 bucket += (-bucket) % dsz
             if bucket != b:
                 pad = ((0, bucket - b), (0, 0))
                 emb = np.pad(emb, pad)
                 crisp = np.pad(crisp, pad)
-            if self.engine.sharded_active:
-                idx, _ = _sharded_route_core(
-                    self.engine.mesh, self.tables.n_rules)(
+            if engine.sharded_active:
+                idx, score, norm, fired = _sharded_route_core(
+                    engine.mesh, gen.tables.n_rules)(
                     jnp.asarray(emb), jnp.asarray(crisp),
-                    self.engine.sharded_tensors, self._jt)
-                return np.asarray(idx)[:b]
-            idx, _ = _route_core(
-                jnp.asarray(emb), jnp.asarray(crisp), self.engine.tensors,
-                self._jt, self.tables.n_rules,
-                kernel_mode=self.engine.kernel_mode,
-                interpret=self.engine.interpret)
-            return np.asarray(idx)[:b]
-        res = self.engine.evaluate(texts, metadata)
-        idx, _ = policy_mod.evaluate_indices(self.tables, res.fired,
-                                             res.confidence)
+                    engine.sharded_tensors, gen.jt)
+            else:
+                idx, score, norm, fired = _route_core(
+                    jnp.asarray(emb), jnp.asarray(crisp), engine.tensors,
+                    gen.jt, gen.tables.n_rules,
+                    kernel_mode=engine.kernel_mode,
+                    interpret=engine.interpret)
+            idx = np.asarray(idx)[:b]
+            score = np.asarray(score)[:b]
+            if observe:
+                self._observe(gen, texts, idx, score,
+                              np.asarray(norm)[:b], np.asarray(fired)[:b])
+            return idx, score
+        res = engine.evaluate(texts, metadata)
+        idx, score = policy_mod.evaluate_indices(gen.tables, res.fired,
+                                                 res.confidence)
+        if observe:
+            self._observe(gen, texts, idx, score, res.normalized,
+                          res.fired)
+        return idx, score
+
+    def _observe(self, gen: PolicyGeneration, texts, idx, score,
+                 normalized, fired) -> None:
+        if gen.monitor is not None:
+            gen.monitor.observe_batch(np.asarray(normalized),
+                                      gen.engine.effective_thresholds)
+        if self.audit is not None:
+            names = gen.engine.names
+            fired = np.asarray(fired, bool)
+            for k, text in enumerate(texts):
+                s = float(score[k])
+                self.audit.log(
+                    "route", generation=gen.gen_id,
+                    query_hash=qhash(text),
+                    route=gen.tables.rule_name(int(idx[k])),
+                    fired=tuple(names[j]
+                                for j in np.flatnonzero(fired[k])),
+                    margin=s if np.isfinite(s) else 0.0)
+
+    def route_indices(self, texts: Sequence[str],
+                      metadata: Optional[Sequence[Dict[str, Any]]] = None
+                      ) -> np.ndarray:
+        """-> winning route index per request (n_rules == default)."""
+        idx, _ = self._route_eval(texts, metadata)
         return idx
 
     def route(self, texts: Sequence[str],
@@ -225,23 +567,41 @@ class RouterService:
         return Validator(self.config).run_tests(
             lambda q: self.route([q])[0])
 
+    def conflict_alerts(self, min_obs: int = 100) -> List[Finding]:
+        """The serving generation's online-monitor findings (T5/T6 drift
+        under the live distribution), mirrored into the audit sink."""
+        gen = self._gen
+        if gen.monitor is None:
+            return []
+        alerts = gen.monitor.alerts(min_obs=min_obs)
+        if self.audit:
+            for f in alerts:
+                self.audit.log(
+                    "conflict_alert", generation=gen.gen_id,
+                    detail={"kind": f.kind.name, "rules": list(f.rules),
+                            "evidence": dict(f.evidence or {}),
+                            "detail": f.detail})
+        return alerts
+
     # ---- serving ---------------------------------------------------------------
     def submit(self, texts: Sequence[str], metadata=None,
                max_new_tokens: int = 8) -> List[Request]:
         metadata = metadata or [None] * len(texts)
         # evaluate the signal pipeline ONCE; actions and route names are
         # two string views of the same winning indices
-        indices = self.route_indices(texts, metadata)
-        actions = [self.tables.action_key(i) for i in indices]
-        names = [self.tables.rule_name(i) for i in indices]
+        gen = self._gen
+        indices, _ = self._route_eval(texts, metadata, gen=gen)
+        actions = [gen.tables.action_key(i) for i in indices]
+        names = [gen.tables.rule_name(i) for i in indices]
         reqs = []
         for text, meta, action, rname in zip(texts, metadata, actions, names):
             kind, _, target = action.partition(":")
             req = Request(text=text, metadata=meta,
                           max_new_tokens=max_new_tokens)
             req.route, req.action = rname, action
+            req.generation = gen.gen_id
             if kind == "model" and target in self.backends:
-                req.backend = target
+                req.backend = self._admit_target(req, target, gen)
             elif kind == "plugin":
                 req.backend = "__plugin__:" + target
                 req.done = True          # plugins are terminal here
@@ -249,13 +609,97 @@ class RouterService:
                 req.backend = "__reject__"
                 req.done = True
             if not req.done:
+                gen.inflight += 1
                 self.batcher.submit(req)
             reqs.append(req)
         return reqs
 
-    def _decode_batch(self, backend: str, batch: List[Request]) -> int:
-        """Prefill + greedy decode one batch on ``backend``; completes
-        every request (and its coalesced followers).  -> #completed.
+    def _admit_target(self, req: Request, target: str,
+                      gen: PolicyGeneration) -> str:
+        """Admission-time degradation: an open breaker re-routes the
+        request to the policy's fallback before it ever queues."""
+        if self.faults.is_open(target):
+            fb = self._fallback_for(target, gen)
+            if fb is not None:
+                req.fallback_used = True
+                if self.audit:
+                    self.audit.log("reroute", backend=fb,
+                                   query_hash=qhash(req.text),
+                                   generation=gen.gen_id,
+                                   detail={"from": target,
+                                           "at": "admission"})
+                return fb
+        return target
+
+    def _decode_batch(self, backend: str, batch: List[Request],
+                      _fallback_ok: bool = True) -> int:
+        """Guarded prefill + greedy decode of one batch on ``backend``:
+        breaker admission gate, per-request retry with jittered backoff,
+        degradation to the policy's fallback backend, and terminal
+        ``failed`` marking when every option is exhausted.  Always
+        completes every request (and its coalesced followers) one way or
+        another.  -> #completed."""
+        fm = self.faults
+        gate = fm.admission(backend)
+        attempts = (0 if gate == "open"
+                    else 1 if gate == "probe"
+                    else fm.retry.max_retries + 1)
+        err: Optional[BaseException] = None
+        for attempt in range(attempts):
+            if attempt:
+                time.sleep(fm.backoff_s(attempt - 1))
+            for r in batch:            # a retry re-decodes from scratch
+                r.output_tokens = []
+                r.truncated = False
+            try:
+                fm.pre_call(backend)
+                n = self._decode_batch_attempt(backend, batch)
+                fm.record(backend, True)
+                return n
+            except Exception as e:  # noqa: BLE001 — containment boundary
+                err = e
+                fm.record(backend, False)
+                for r in batch:
+                    r.retries += 1
+                if self.audit:
+                    self.audit.log(
+                        "fault", backend=backend,
+                        detail={"error": f"{type(e).__name__}: {e}",
+                                "attempt": attempt,
+                                "batch": len(batch)})
+        # retries exhausted (or breaker open): degrade, then fail
+        fb = self._fallback_for(backend) if _fallback_ok else None
+        if fb is not None:
+            for r in batch:
+                r.backend = fb
+                r.fallback_used = True
+            if self.audit:
+                self.audit.log("reroute", backend=fb,
+                               detail={"from": backend,
+                                       "batch": len(batch)})
+            return self._decode_batch(fb, batch, _fallback_ok=False)
+        msg = (f"circuit breaker open on backend {backend!r}"
+               if attempts == 0
+               else f"{type(err).__name__}: {err}")
+        return self._fail_batch(batch, msg)
+
+    def _fail_batch(self, batch: List[Request], msg: str) -> int:
+        """Terminal failure for a contained batch: requests are marked
+        ``failed`` with the error recorded and finish normally (audit +
+        refcount via the done-hook) — the serve loop moves on."""
+        now = self.cbatcher.clock()
+        n = 0
+        for r in batch:
+            r.failed = True
+            r.error = msg
+            self.cbatcher.finish_inflight(r)
+            n += finish_request(r, now=now, on_done=self._on_request_done)
+        return n
+
+    def _decode_batch_attempt(self, backend: str,
+                              batch: List[Request]) -> int:
+        """One unguarded prefill + greedy decode attempt (the pre-fault-
+        tier ``_decode_batch`` body).
 
         Decode steps are clamped to the KV budget: step ``j`` writes
         cache position ``plen + j``, so a long prompt plus a large
@@ -288,7 +732,9 @@ class RouterService:
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos += 1
         now = self.cbatcher.clock()
-        return sum(finish_request(r, now=now) for r in batch)
+        return sum(finish_request(r, now=now,
+                                  on_done=self._on_request_done)
+                   for r in batch)
 
     def step(self) -> int:
         """Serve one batch from the fullest backend queue.  -> #completed."""
@@ -313,27 +759,32 @@ class RouterService:
         Routes the whole batch through the fused signal+policy program
         once (duplicate texts are free: the embedder LRU and the
         batcher's in-flight coalescing both key on the exact text),
-        stamps each request's deadline from ``slo_ms``, and admits
-        model-bound requests into the per-backend admission queues.
-        Plugin/reject actions complete immediately, exactly like
-        ``submit``.  Call ``serve_step``/``serve_forever`` to decode.
+        stamps each request's deadline from ``slo_ms`` and its policy
+        generation (the hot-swap refcount), and admits model-bound
+        requests into the per-backend admission queues — re-routed at
+        admission when the target's breaker is open.  Plugin/reject
+        actions complete immediately, exactly like ``submit``.  Call
+        ``serve_step``/``serve_forever`` to decode.
         """
         metadata = metadata or [None] * len(texts)
         now = self.cbatcher.clock() if now is None else now
-        indices = self.route_indices(texts, metadata)
+        gen = self._gen
+        indices, _ = self._route_eval(texts, metadata, gen=gen)
         reqs = []
         for text, meta, i in zip(texts, metadata, indices):
-            action = self.tables.action_key(i)
+            action = gen.tables.action_key(i)
             kind, _, target = action.partition(":")
             req = Request(text=text, metadata=meta,
                           max_new_tokens=max_new_tokens,
                           arrival_s=now,
                           deadline_s=(now + slo_ms / 1e3
                                       if slo_ms is not None else None))
-            req.route = self.tables.rule_name(i)
+            req.route = gen.tables.rule_name(i)
             req.action = action
+            req.generation = gen.gen_id
             if kind == "model" and target in self.backends:
-                req.backend = target
+                req.backend = self._admit_target(req, target, gen)
+                gen.inflight += 1
                 self.cbatcher.admit(req, now=now)
             elif kind == "plugin":
                 req.backend = "__plugin__:" + target
@@ -398,5 +849,5 @@ class RouterService:
                 break
             if self.scheduler is not None and self.scheduler.pending():
                 continue              # slots mid-decode: step again now
-            _time.sleep(poll_s)       # under-full queues: let them age
+            _time.sleep(poll_s)
         return served

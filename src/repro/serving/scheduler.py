@@ -37,13 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.batcher import ContinuousBatcher, Request, finish_request
+from repro.serving.faults import HALF_OPEN, FaultManager
 
 FREE, ACTIVE, PARKED = "free", "active", "parked"
 
@@ -158,7 +159,11 @@ class DecodeScheduler:
 
     def __init__(self, backends: Dict[str, Any], cbatcher: ContinuousBatcher,
                  *, n_slots: int = 4, preempt: bool = True,
-                 preempt_margin_s: Optional[float] = None):
+                 preempt_margin_s: Optional[float] = None,
+                 faults: Optional[FaultManager] = None,
+                 fallback: Optional[Callable[[str], Optional[str]]] = None,
+                 on_done: Optional[Callable[[Request], None]] = None,
+                 audit=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.backends = backends
@@ -168,12 +173,22 @@ class DecodeScheduler:
         self.preempt_margin_s = (cbatcher.deadline_margin_s
                                  if preempt_margin_s is None
                                  else preempt_margin_s)
+        # failure containment (all optional — a bare scheduler behaves
+        # exactly like the pre-fault tier): the shared FaultManager, the
+        # policy's fallback resolver, the router's terminal-request hook
+        # (generation refcount + audit), and the audit sink
+        self.faults = faults
+        self.fallback = fallback
+        self.on_done = on_done
+        self.audit = audit
         self.pools: Dict[str, _BackendPool] = {}
         # evicted (re-prefill) requests, per backend, staleness order
         self.requeue: Dict[str, List[Request]] = {}
         self.stats = {"admitted": 0, "decode_steps": 0, "retired": 0,
                       "preemptions": 0, "resumed_inplace": 0,
-                      "evictions": 0, "reprefills": 0, "truncated": 0}
+                      "evictions": 0, "reprefills": 0, "truncated": 0,
+                      "step_faults": 0, "prefill_faults": 0,
+                      "failed": 0, "diverted": 0}
         self._park_clock = 0.0
         # self-measured service-time model (EWMA, real wall clock): how
         # long a prefill and one pooled decode step actually take, so
@@ -277,12 +292,17 @@ class DecodeScheduler:
         slot.req.preemptions += 1
         self.stats["preemptions"] += 1
 
-    def _admit(self, backend: str, now: float) -> List[Tuple[_Slot, Request]]:
+    def _admit(self, backend: str, now: float,
+               limit: Optional[int] = None) -> List[Tuple[_Slot, Request]]:
         """Fill scheduling capacity for ``backend``; returns the
-        (slot, request) pairs that need a prefill this step."""
+        (slot, request) pairs that need a prefill this step.  ``limit``
+        caps *new* admissions (the half-open probe admits at most one
+        request and skips preemption; resume-in-place stays free)."""
         pool = self._pool(backend)
         prefills: List[Tuple[_Slot, Request]] = []
         while len(pool.active()) < pool.n_slots:
+            if limit is not None and len(prefills) >= limit:
+                break
             queued = self._queued_candidates(backend, now)
             parked = pool.parked()
             if not queued and not parked:
@@ -313,7 +333,7 @@ class DecodeScheduler:
 
         # preemption: capacity full, a queued deadline is imminent, and
         # some active request is strictly less urgent
-        if self.preempt:
+        if self.preempt and limit is None:
             while len(pool.active()) >= pool.n_slots:
                 queued = self._queued_candidates(backend, now)
                 if not queued:
@@ -399,7 +419,7 @@ class DecodeScheduler:
         slot.req = None
         self.cbatcher.finish_inflight(req)
         self.stats["retired"] += 1
-        return finish_request(req, now=now)
+        return finish_request(req, now=now, on_done=self.on_done)
 
     def _decode_step(self, backend: str, now: float) -> int:
         """One pooled decode step for every ACTIVE slot; appends the
@@ -435,16 +455,144 @@ class DecodeScheduler:
                 done += self._retire(backend, s, now)
         return done
 
+    # ---- failure containment -----------------------------------------------
+    def _divert_or_fail(self, backend: str, req: Request, msg: str,
+                        now: float) -> int:
+        """Terminal handling for a request its backend cannot serve:
+        re-admit on the policy's fallback backend when one is available
+        (generated tokens ride along — re-prefill replays them), else
+        mark it failed with the error recorded and finish it.
+        -> #completed (0 when diverted)."""
+        self.cbatcher.finish_inflight(req)
+        fb = self.fallback(backend) if self.fallback else None
+        if fb is not None:
+            req.backend = fb
+            req.fallback_used = True
+            self.stats["diverted"] += 1
+            if self.audit:
+                self.audit.log("reroute", backend=fb,
+                               generation=req.generation,
+                               detail={"from": backend})
+            leader = self.cbatcher.admit(req, now=now)
+            if leader is not req:
+                # the diverted leader coalesced onto an in-flight
+                # duplicate: its own followers must ride along too
+                leader.followers.extend(req.followers)
+                req.followers = []
+            return 0
+        req.failed = True
+        req.error = msg
+        self.stats["failed"] += 1
+        return finish_request(req, now=now, on_done=self.on_done)
+
+    def _divert_queued(self, backend: str, now: float) -> int:
+        """Breaker open: nothing new runs on ``backend`` — move every
+        queued/evicted request to the fallback (or fail it) so open-
+        breaker traffic drains instead of waiting on a dead model."""
+        pending: List[Request] = list(self.requeue.pop(backend, []))
+        q = self.cbatcher.queues.pop(backend, None)
+        if q:
+            pending.extend(q)
+        done = 0
+        msg = f"circuit breaker open on backend {backend!r}"
+        for req in pending:
+            done += self._divert_or_fail(backend, req, msg, now)
+        return done
+
+    def _contain_prefill_fault(self, backend: str,
+                               prefills: List[Tuple[_Slot, Request]],
+                               exc: BaseException, now: float) -> int:
+        """A faulted prefill frees this step's admissions and requeues
+        them for a natural retry next step (divert/fail once the retry
+        budget is spent); slots already decoding are untouched."""
+        self.stats["prefill_faults"] += 1
+        msg = f"{type(exc).__name__}: {exc}"
+        if self.audit:
+            self.audit.log("fault", backend=backend,
+                           detail={"error": msg, "where": "prefill",
+                                   "batch": len(prefills)})
+        budget = self.faults.retry.max_retries if self.faults else 0
+        done = 0
+        for slot, req in prefills:
+            slot.state = FREE
+            slot.req = None
+            req.retries += 1
+            if req.retries <= budget:
+                self.requeue.setdefault(backend, []).append(req)
+            else:
+                done += self._divert_or_fail(backend, req, msg, now)
+        return done
+
+    def _contain_decode_fault(self, backend: str, exc: BaseException,
+                              now: float) -> int:
+        """A faulted pooled decode step marks only the affected slots:
+        the pool cache was not advanced (the step's assignment never
+        ran), so surviving requests retry naturally next step; requests
+        out of retry budget divert or fail.  Parked slots are untouched."""
+        pool = self.pools.get(backend)
+        if pool is None:
+            return 0
+        self.stats["step_faults"] += 1
+        msg = f"{type(exc).__name__}: {exc}"
+        if self.audit:
+            self.audit.log("fault", backend=backend,
+                           detail={"error": msg, "where": "decode"})
+        budget = self.faults.retry.max_retries if self.faults else 0
+        done = 0
+        for s in pool.active():
+            s.req.retries += 1
+            if s.req.retries > budget:
+                req = s.req
+                s.state = FREE
+                s.req = None
+                done += self._divert_or_fail(backend, req, msg, now)
+        return done
+
     # ---- the loop ----------------------------------------------------------
     def step(self, now: Optional[float] = None) -> int:
         """Admissions (+preemptions) between steps, then one decode step
-        across every backend with active slots.  -> #requests completed
-        (coalesced followers included)."""
+        across every backend with active slots, each backend's work
+        guarded by its circuit breaker and fault spec.  A backend fault
+        is contained to that backend's affected slots; the step always
+        completes.  -> #requests completed (coalesced followers
+        included)."""
         now = self.cbatcher.clock() if now is None else now
+        fm = self.faults
         done = 0
         for backend in self._backends_with_work():
-            prefills = self._admit(backend, now)
+            if fm is not None and fm.is_open(backend):
+                done += self._divert_queued(backend, now)
+                continue
+            # half-open: admit at most one request, no preemption — the
+            # whole per-backend step is the breaker's single probe
+            probing = (fm is not None
+                       and fm.breaker(backend).state() == HALF_OPEN)
+            prefills = self._admit(backend, now,
+                                   limit=1 if probing else None)
+            pool = self.pools.get(backend)
+            ran = bool(prefills) or bool(pool and pool.active())
+            if not ran:
+                continue
+            if fm is not None and probing:
+                fm.admission(backend)          # claim the probe slot
+            ok = True
             if prefills:
-                done += self._run_prefills(backend, prefills, now)
-            done += self._decode_step(backend, now)
+                try:
+                    if fm is not None:
+                        fm.pre_call(backend)
+                    done += self._run_prefills(backend, prefills, now)
+                except Exception as e:  # noqa: BLE001 — containment
+                    ok = False
+                    done += self._contain_prefill_fault(
+                        backend, prefills, e, now)
+            if ok:
+                try:
+                    if fm is not None and self.pools[backend].active():
+                        fm.pre_call(backend)
+                    done += self._decode_step(backend, now)
+                except Exception as e:  # noqa: BLE001 — containment
+                    ok = False
+                    done += self._contain_decode_fault(backend, e, now)
+            if fm is not None:
+                fm.record(backend, ok)
         return done

@@ -619,6 +619,16 @@ class SignalEngine:
             "member_full": member_full,
             "default_full": default_full,
         }
+        # effective firing threshold per signal column (self.names
+        # order): group θ for grouped probabilistic signals, the atom's
+        # own threshold otherwise — what `fired` actually compares
+        # against, which is what the online conflict monitor must use
+        eff = np.zeros(len(self.names), np.float32)
+        if n_prob:
+            eff[np_tensors["prob_cols"]] = col_thr
+        if self._crisp_names:
+            eff[np_tensors["crisp_cols"]] = np_tensors["thr_crisp"]
+        self.effective_thresholds = eff
         # memoized device put: a second engine bound to the same DSL /
         # embedder / (mesh, precision) reuses the resident tables
         self.tensors: Dict[str, jnp.ndarray] = _device_tables(

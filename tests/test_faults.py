@@ -1,0 +1,317 @@
+"""Backend failure containment: fault injection, retry with backoff,
+circuit breaker state machine, fallback degradation, and scheduler-level
+containment — the failure paths the fault-tolerant serving tier must
+survive without killing the serve loop."""
+import numpy as np
+import pytest
+
+from repro.serving.faults import (CLOSED, HALF_OPEN, OPEN,
+                                  BackendFaultError, BreakerConfig,
+                                  CircuitBreaker, FaultManager, FaultSpec,
+                                  RetryPolicy)
+from repro.serving.router import RouterService
+
+pytestmark = pytest.mark.faults
+
+
+# ---------------------------------------------------------------------------
+# units: spec / retry / breaker / manager (no backends, fake clocks)
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_behaviors():
+    s = FaultSpec()
+    assert not s.active()
+    s.fail_next = 2
+    assert s.active()
+    fm = FaultManager()
+    fm.specs["b"] = s
+    for _ in range(2):
+        with pytest.raises(BackendFaultError):
+            fm.pre_call("b")
+    fm.pre_call("b")                       # countdown exhausted: clean
+    fm.inject("b", dead=True)
+    with pytest.raises(BackendFaultError):
+        fm.pre_call("b")
+    with pytest.raises(TypeError):
+        fm.inject("b", not_a_field=1)
+    fm.clear("b")
+    fm.pre_call("b")
+    assert fm.stats["injected"] == 3
+
+
+def test_fault_injection_error_rate_is_deterministic():
+    a = FaultManager(seed=7)
+    b = FaultManager(seed=7)
+    for m in (a, b):
+        m.inject("x", error_rate=0.5)
+    outcomes = []
+    for m in (a, b):
+        seq = []
+        for _ in range(32):
+            try:
+                m.pre_call("x")
+                seq.append(True)
+            except BackendFaultError:
+                seq.append(False)
+        outcomes.append(seq)
+    assert outcomes[0] == outcomes[1]
+    assert not all(outcomes[0]) and any(outcomes[0])
+
+
+def test_retry_backoff_exponential_capped_jittered():
+    rp = RetryPolicy(max_retries=5, backoff_base_s=0.01, backoff_mult=2.0,
+                     max_backoff_s=0.05, jitter=0.5)
+    rng = np.random.default_rng(0)
+    for attempt, base in [(0, 0.01), (1, 0.02), (2, 0.04), (3, 0.05),
+                          (9, 0.05)]:
+        for _ in range(16):
+            d = rp.backoff_s(attempt, rng)
+            assert base * 0.5 <= d <= base + 1e-12
+    # jitter actually varies the delay
+    ds = {rp.backoff_s(0, rng) for _ in range(8)}
+    assert len(ds) > 1
+
+
+def test_breaker_state_machine_on_fake_clock():
+    t = [0.0]
+    br = CircuitBreaker(BreakerConfig(window=8, error_threshold=0.5,
+                                      min_calls=4, cooldown_s=1.0),
+                        clock=lambda: t[0])
+    assert br.state() == CLOSED
+    br.record(False)
+    br.record(False)
+    br.record(False)                       # 3 < min_calls: still closed
+    assert br.state() == CLOSED
+    br.record(False)                       # 4/4 errors >= 0.5: trips
+    assert br.state() == OPEN
+    assert br.is_open()
+    br.record(True)                        # ignored while open
+    assert br.state() == OPEN
+    t[0] = 1.0                             # cooldown elapses
+    assert br.state() == HALF_OPEN
+    assert br.admission() == "probe"
+    assert br.is_open()                    # probe in flight: fail fast
+    assert br.admission() == "open"        # only ONE probe
+    br.record(False)                       # probe failed: re-open
+    assert br.state() == OPEN
+    t[0] = 2.0
+    assert br.admission() == "probe"
+    br.record(True)                        # probe succeeded: recover
+    assert br.state() == CLOSED
+    assert not br.is_open()
+    # recovery reset the outcome window: one failure does not re-trip
+    br.record(False)
+    assert br.state() == CLOSED
+
+
+def test_breaker_mixed_window_below_threshold_stays_closed():
+    br = CircuitBreaker(BreakerConfig(window=8, error_threshold=0.5,
+                                      min_calls=4), clock=lambda: 0.0)
+    for ok in [True, False, True, True, False, True, True, True]:
+        br.record(ok)
+    assert br.state() == CLOSED            # 2/8 errors < 0.5
+
+
+def test_fault_manager_transition_hook_and_stats():
+    t = [0.0]
+    seen = []
+    fm = FaultManager(breaker=BreakerConfig(window=4, min_calls=2,
+                                            cooldown_s=0.5),
+                      clock=lambda: t[0],
+                      on_transition=lambda b, s: seen.append((b, s)))
+    for _ in range(2):
+        fm.record("b", False)
+    assert fm.states() == {"b": OPEN}
+    assert fm.stats["breaker_opens"] == 1
+    t[0] = 1.0
+    assert fm.admission("b") == "probe"
+    fm.record("b", True)
+    assert fm.states() == {"b": CLOSED}
+    assert fm.stats["breaker_closes"] == 1
+    assert seen == [("b", OPEN), ("b", HALF_OPEN), ("b", CLOSED)]
+
+
+# ---------------------------------------------------------------------------
+# integration: the router's containment paths (real smoke backends)
+# ---------------------------------------------------------------------------
+
+ONE_DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive temperature: 0.1 threshold: 0.51
+  members: [math] default: math
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+GLOBAL { default_model: "backend-math" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+"""
+
+FB_DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL embedding science {
+  candidates: ["physics quantum chemistry biology experiment"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive temperature: 0.1 threshold: 0.51
+  members: [math, science] default: science
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+ROUTE science_route { PRIORITY 100 WHEN embedding("science") MODEL "backend-science" }
+GLOBAL { default_model: "backend-science" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+BACKEND backend-science { arch: "stablelm-1.6b" }
+"""
+
+MATH_Q = "solve the integral of x squared dx"
+
+
+@pytest.fixture(scope="module")
+def fb_svc():
+    """Two-backend service with an audit ring, rebuilt breaker state per
+    test via ``reset``."""
+    svc = RouterService(FB_DSL, max_batch=4, audit=True,
+                        breaker=BreakerConfig(window=8, min_calls=2,
+                                              cooldown_s=30.0))
+    return svc
+
+
+def _reset_faults(svc):
+    svc.faults.specs.clear()
+    svc.faults.breakers.clear()
+
+
+def test_injected_fault_retries_then_succeeds(fb_svc):
+    _reset_faults(fb_svc)
+    fb_svc.faults.inject("backend-math", fail_next=1)
+    r = fb_svc.submit([MATH_Q], max_new_tokens=3)[0]
+    fb_svc.drain()
+    assert r.done and not r.failed
+    assert r.retries == 1 and not r.fallback_used
+    assert len(r.output_tokens) == 3
+    assert any(rec.kind == "fault" for rec in fb_svc.audit.records())
+
+
+def test_dead_backend_exhausts_retries_opens_breaker_falls_back(fb_svc):
+    _reset_faults(fb_svc)
+    fb_svc.faults.inject("backend-math", dead=True)
+    r = fb_svc.submit([MATH_Q], max_new_tokens=3)[0]
+    fb_svc.drain()
+    # retries exhausted on the dead backend, then served by the fallback
+    assert r.done and not r.failed
+    assert r.fallback_used and r.backend == "backend-science"
+    assert r.retries == fb_svc.faults.retry.max_retries + 1
+    assert len(r.output_tokens) == 3
+    # enough recorded failures tripped the breaker (min_calls=2)
+    assert fb_svc.faults.breaker("backend-math").state() == OPEN
+    # ...so the NEXT submit re-routes at admission, zero decode attempts
+    injected_before = fb_svc.faults.stats["injected"]
+    r2 = fb_svc.submit([MATH_Q], max_new_tokens=3)[0]
+    fb_svc.drain()
+    assert r2.backend == "backend-science" and r2.fallback_used
+    assert r2.retries == 0
+    assert fb_svc.faults.stats["injected"] == injected_before
+    kinds = [rec.kind for rec in fb_svc.audit.records()]
+    assert "reroute" in kinds and "breaker" in kinds
+
+
+def test_half_open_probe_recovers_breaker(fb_svc):
+    _reset_faults(fb_svc)
+    t = [0.0]
+    fb_svc.cbatcher.clock = lambda: t[0]   # faults.clock chains through
+    try:
+        fb_svc.faults.inject("backend-math", dead=True)
+        fb_svc.submit([MATH_Q], max_new_tokens=3)
+        fb_svc.drain()
+        assert fb_svc.faults.breaker("backend-math").state() == OPEN
+        fb_svc.faults.clear("backend-math")   # backend recovers
+        t[0] = 100.0                          # cooldown elapses
+        r = fb_svc.submit([MATH_Q], max_new_tokens=3)[0]
+        fb_svc.drain()
+        # the probe ran on the recovered backend and closed the breaker
+        assert r.done and not r.failed and not r.fallback_used
+        assert r.backend == "backend-math"
+        assert fb_svc.faults.breaker("backend-math").state() == CLOSED
+    finally:
+        import time
+        fb_svc.cbatcher.clock = time.monotonic
+
+
+def test_dead_backend_without_fallback_fails_requests_not_loop():
+    svc = RouterService(ONE_DSL, max_batch=4,
+                        retry=RetryPolicy(max_retries=1,
+                                          backoff_base_s=0.0))
+    svc.faults.inject("backend-math", dead=True)
+    reqs = svc.submit([MATH_Q, "derivative of x"], max_new_tokens=3)
+    done = svc.drain()                     # must NOT raise
+    assert done == 2
+    assert all(r.done and r.failed for r in reqs)
+    assert all("injected fault" in r.error for r in reqs)
+    # the loop survives: a healthy submit afterwards still serves
+    svc.faults.clear("backend-math")
+    svc.faults.breakers.clear()
+    r = svc.submit([MATH_Q], max_new_tokens=3)[0]
+    svc.drain()
+    assert r.done and not r.failed
+
+
+def test_real_exception_is_contained_too(monkeypatch):
+    """Containment must catch genuine runtime exceptions at the same
+    boundary as injected ones (the pre-fault tier let them kill
+    ``step()``)."""
+    svc = RouterService(ONE_DSL, max_batch=4,
+                        retry=RetryPolicy(max_retries=0))
+    rt = svc.backends["backend-math"]
+
+    def boom(params, prompt):
+        raise RuntimeError("device OOM")
+    monkeypatch.setattr(rt, "prefill", boom)
+    r = svc.submit([MATH_Q], max_new_tokens=3)[0]
+    svc.drain()
+    assert r.done and r.failed and "device OOM" in r.error
+
+
+@pytest.mark.slow
+def test_slot_scheduler_contains_dead_backend_and_diverts():
+    svc = RouterService(FB_DSL, max_batch=4, slots=2, audit=True,
+                        retry=RetryPolicy(max_retries=1,
+                                          backoff_base_s=0.0))
+    svc.faults.inject("backend-math", dead=True)
+    reqs = svc.enqueue([MATH_Q, "what is quantum physics energy"],
+                       max_new_tokens=3)
+    done = svc.serve_forever(max_steps=2000)
+    assert done == 2
+    math_req = next(r for r in reqs if r.route == "math_route")
+    sci_req = next(r for r in reqs if r.route == "science_route")
+    assert math_req.done and not math_req.failed
+    assert math_req.fallback_used and math_req.backend == "backend-science"
+    assert sci_req.done and not sci_req.failed and not sci_req.fallback_used
+    assert svc.scheduler.stats["prefill_faults"] > 0
+    assert svc.scheduler.stats["diverted"] == 1
+    assert svc.scheduler.stats["failed"] == 0
+
+
+@pytest.mark.slow
+def test_slot_scheduler_decode_fault_marks_only_affected_slots():
+    """A faulted pooled decode step (backend dies mid-generation) must
+    fail only that backend's active requests; the pool cache was not
+    advanced, other backends are untouched, the loop completes."""
+    svc = RouterService(ONE_DSL, max_batch=4, slots=2,
+                        retry=RetryPolicy(max_retries=0))
+    reqs = svc.enqueue([MATH_Q], max_new_tokens=6)
+    # let prefill land and a couple of decode steps run...
+    for _ in range(3):
+        svc.serve_step()
+    assert not reqs[0].done
+    # ...then the backend dies mid-run (prefill survived, decode faults)
+    svc.faults.inject("backend-math", dead=True)
+    done = svc.serve_forever(max_steps=500)
+    assert done == 1
+    assert reqs[0].done and reqs[0].failed
+    assert svc.scheduler.stats["step_faults"] > 0

@@ -1,0 +1,298 @@
+"""Zero-downtime policy hot-swap: the conflict admission gate, versioned
+generations with refcounted draining, the structured audit trail, and
+the online conflict monitor fed from the live score stream."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.monitor import OnlineConflictMonitor
+from repro.core.taxonomy import (ConflictType, blocking_findings,
+                                 finding_key)
+from repro.serving.audit import AuditSink, qhash
+from repro.serving.router import RouterService
+
+DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL embedding science {
+  candidates: ["physics quantum chemistry biology experiment"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive temperature: 0.1 threshold: 0.51
+  members: [math, science] default: science
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+ROUTE science_route { PRIORITY 100 WHEN embedding("science") MODEL "backend-science" }
+GLOBAL { default_model: "backend-science" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+BACKEND backend-science { arch: "stablelm-1.6b" }
+"""
+
+# two near-identical ungrouped embedding signals with generous
+# thresholds feeding competing routes: the taxonomy's spherical-cap
+# analysis flags a T4 probable conflict
+T4_DSL = """
+SIGNAL embedding alpha {
+  candidates: ["solve the equation with algebra"] threshold: 0.05
+}
+SIGNAL embedding beta {
+  candidates: ["solve the equation with algebra today"] threshold: 0.05
+}
+ROUTE a { PRIORITY 200 WHEN embedding("alpha") MODEL "backend-math" }
+ROUTE b { PRIORITY 100 WHEN embedding("beta") MODEL "backend-science" }
+GLOBAL { default_model: "backend-science" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+BACKEND backend-science { arch: "stablelm-1.6b" }
+"""
+
+MATH_Q = "solve the integral of x squared dx"
+
+
+# ---------------------------------------------------------------------------
+# admission gate (no backends: routing-only services)
+# ---------------------------------------------------------------------------
+
+def test_rebind_accepts_and_flips_routing():
+    svc = RouterService(DSL, load_backends=False, audit=True)
+    assert svc.generation == 0
+    assert svc.route([MATH_Q]) == ["math_route"]
+    # swap in a revision that renames the math route
+    swapped = DSL.replace("ROUTE math_route", "ROUTE math_route_v2")
+    res = svc.rebind(swapped)
+    assert res.accepted and res.generation == 1
+    assert svc.generation == 1
+    assert svc.route([MATH_Q]) == ["math_route_v2"]
+    recs = svc.audit.records("rebind")
+    assert recs and recs[-1].generation == 1 and not recs[-1].failed
+
+
+def test_rebind_identical_source_is_noop():
+    svc = RouterService(DSL, load_backends=False)
+    res = svc.rebind(DSL)
+    assert res.accepted and res.generation == 0
+    assert "no-op" in res.reasons[0]
+    assert svc.generation == 0
+
+
+def test_rebind_rejects_compile_error_old_generation_serves():
+    svc = RouterService(DSL, load_backends=False)
+    res = svc.rebind("ROUTE broken {")
+    assert not res.accepted and res.generation == 0
+    assert "compile error" in res.reasons[0]
+    assert svc.generation == 0
+    assert svc.route([MATH_Q]) == ["math_route"]
+
+
+def test_rebind_rejects_validation_error():
+    svc = RouterService(DSL, load_backends=False, audit=True)
+    bad = DSL.replace('embedding("science")', 'embedding("nope")')
+    res = svc.rebind(bad)
+    assert not res.accepted
+    assert any("undeclared signal" in r for r in res.reasons)
+    assert svc.generation == 0
+    rec = svc.audit.records("rebind")[-1]
+    assert rec.failed and rec.detail["reasons"]
+
+
+def test_rebind_rejects_introduced_t4_conflict():
+    svc = RouterService(DSL, load_backends=False)
+    res = svc.rebind(T4_DSL)
+    assert not res.accepted and res.generation == 0
+    assert res.blocking
+    assert all(f.kind is ConflictType.PROBABLE_CONFLICT
+               for f in res.blocking)
+    # the old policy keeps serving, uninterrupted
+    assert svc.generation == 0
+    assert svc.route([MATH_Q]) == ["math_route"]
+
+
+def test_rebind_allows_preexisting_t4_conflict():
+    """The gate blocks conflicts a swap would *introduce* — a hazard the
+    serving policy already carries must not freeze operations."""
+    svc = RouterService(T4_DSL, load_backends=False)
+    res = svc.rebind(T4_DSL.replace("PRIORITY 100", "PRIORITY 120"))
+    assert res.accepted and res.generation == 1
+
+
+def test_finding_key_ignores_numeric_evidence_drift():
+    from repro.core.taxonomy import Decidability, Finding
+    f1 = Finding(ConflictType.PROBABLE_CONFLICT, Decidability.GEOMETRIC,
+                 ("a", "b"), "x",
+                 evidence={"cofire_prob": 0.11, "signals": ("s1", "s2")})
+    f2 = Finding(ConflictType.PROBABLE_CONFLICT, Decidability.GEOMETRIC,
+                 ("b", "a"), "y",
+                 evidence={"cofire_prob": 0.93, "signals": ("s2", "s1")})
+    assert finding_key(f1) == finding_key(f2)
+    assert blocking_findings([f1]) == [f1]
+
+
+# ---------------------------------------------------------------------------
+# generations under load (real backends, slot scheduler, fake clock)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_hot_swap_under_load_drains_old_generation():
+    svc = RouterService(DSL, max_batch=4, slots=2, audit=True)
+    t = [0.0]
+    svc.cbatcher.clock = lambda: t[0]
+    old = svc.enqueue([MATH_Q, "what is quantum physics energy"],
+                      max_new_tokens=4)
+    svc.serve_step()                       # old generation mid-flight
+    assert svc.generations()[0]["inflight"] == 2
+    res = svc.rebind(DSL.replace("PRIORITY 100", "PRIORITY 120"))
+    assert res.accepted and res.generation == 1
+    assert svc.generations()[0]["retired"]
+    new = svc.enqueue(["derivative of the algebra equation"],
+                      max_new_tokens=4)
+    done = svc.serve_forever(max_steps=2000)
+    assert done == 3
+    # zero dropped in-flight: everything admitted reached terminal state
+    assert all(r.done and not r.failed for r in old + new)
+    assert [r.generation for r in old] == [0, 0]
+    assert new[0].generation == 1
+    # the drained retired generation was freed
+    assert 0 not in svc.generations()
+    assert svc.generations()[1]["inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# audit sink
+# ---------------------------------------------------------------------------
+
+def test_audit_ring_is_bounded_and_counts_lifetime():
+    sink = AuditSink(capacity=8, clock=lambda: 1.5)
+    for i in range(20):
+        sink.log("route", route=f"r{i}")
+    assert len(sink) == 8
+    assert sink.counts() == {"route": 20}
+    assert [r.route for r in sink.tail(2)] == ["r18", "r19"]
+    assert sink.records("route")[0].route == "r12"
+    assert sink.records("nope") == []
+    assert sink.records()[0].ts == 1.5
+
+
+def test_audit_jsonl_retention_compaction(tmp_path):
+    p = tmp_path / "audit.jsonl"
+    sink = AuditSink(capacity=64, path=str(p), retention=10)
+    for i in range(25):                    # crosses 2*retention at 21
+        sink.log("serve", query_hash=f"h{i}")
+    lines = p.read_text().splitlines()
+    assert len(lines) <= 20
+    recs = [json.loads(ln) for ln in lines]
+    assert recs[-1]["query_hash"] == "h24"
+    assert all("ts" in r and r["kind"] == "serve" for r in recs)
+    dropped = sink.enforce_retention()
+    assert dropped == len(lines) - 10
+    assert [json.loads(ln)["query_hash"]
+            for ln in p.read_text().splitlines()][-1] == "h24"
+
+
+def test_route_audit_records_schema():
+    svc = RouterService(DSL, load_backends=False, audit=True)
+    svc.route([MATH_Q])
+    rec = svc.audit.records("route")[-1]
+    assert rec.query_hash == qhash(MATH_Q)
+    assert rec.generation == 0
+    assert rec.route == "math_route"
+    assert "math" in rec.fired
+    assert rec.margin > 0.0
+    # raw query text never enters the trail
+    assert MATH_Q not in json.dumps(rec.to_json())
+
+
+@pytest.mark.faults
+def test_serve_audit_records_for_terminal_requests():
+    svc = RouterService(DSL, load_backends=False, audit=True)
+    # no backends loaded: model routes degrade to __reject__, which is
+    # terminal at admission — only 'route' records; force a serve record
+    # through the monitor-free fail path instead
+    svc2 = RouterService(
+        "SIGNAL keyword greeting { keywords: [\"hello\"] }\n"
+        "ROUTE greet { PRIORITY 10 WHEN keyword(\"greeting\") "
+        "MODEL \"m\" }\n"
+        "GLOBAL { default_model: \"m\" }\n"
+        "BACKEND m { arch: \"internlm2-1.8b\" }\n",
+        max_batch=2, audit=True)
+    r = svc2.submit(["hello there"], max_new_tokens=2)[0]
+    svc2.drain()
+    rec = svc2.audit.records("serve")[-1]
+    assert rec.query_hash == qhash("hello there")
+    assert rec.backend == "m" and not rec.failed
+    assert rec.detail["tokens"] == 2
+
+
+# ---------------------------------------------------------------------------
+# online conflict monitor on the live stream
+# ---------------------------------------------------------------------------
+
+def test_observe_batch_vectorized_matches_reference():
+    rng = np.random.default_rng(3)
+    names = ["a", "b", "c", "d"]
+    pr = {"a": 3, "b": 2, "c": 1, "d": 0}
+    fast = OnlineConflictMonitor(names, priority_of=pr, halflife=50)
+    slow = OnlineConflictMonitor(names, priority_of=pr, halflife=50)
+    thr = np.full(4, 0.4)
+    for _ in range(5):
+        scores = rng.random((16, 4))
+        fast.observe_batch(scores, thr)
+        # reference: the original per-pair formulation
+        fires = scores >= thr[None, :]
+        for (a, b), st in slow.pairs.items():
+            ia, ib = names.index(a), names.index(b)
+            both = fires[:, ia] & fires[:, ib]
+            if pr[a] >= pr[b]:
+                against = both & (scores[:, ib] > scores[:, ia])
+            else:
+                against = both & (scores[:, ia] > scores[:, ib])
+            w = slow.decay ** 16
+            st.cofire = w * st.cofire + (1 - w) * both.mean()
+            st.against_evidence = (w * st.against_evidence
+                                   + (1 - w) * against.mean())
+            st.n += 16
+    for pair in fast.pairs:
+        np.testing.assert_allclose(fast.pairs[pair].cofire,
+                                   slow.pairs[pair].cofire, atol=1e-12)
+        np.testing.assert_allclose(fast.pairs[pair].against_evidence,
+                                   slow.pairs[pair].against_evidence,
+                                   atol=1e-12)
+
+
+def test_observe_batch_empty_is_noop():
+    m = OnlineConflictMonitor(["a", "b"])
+    m.observe_batch(np.zeros((0, 2)), np.zeros(2))
+    assert m.total == 0
+
+
+def test_monitor_wired_into_route_path_and_alerts():
+    svc = RouterService(T4_DSL, load_backends=False, audit=True,
+                        monitor=True)
+    gen = svc._gen
+    assert gen.monitor is not None and gen.monitor.total == 0
+    queries = ["solve the equation with algebra please"] * 8
+    for _ in range(16):
+        svc.route(queries)
+    assert gen.monitor.total == 16 * 8
+    # both near-identical signals fire on every query: co-fire EWMA is
+    # saturated and surfaces as a calibration-conflict alert
+    alerts = svc.conflict_alerts(min_obs=10)
+    assert any(f.kind is ConflictType.CALIBRATION_CONFLICT
+               for f in alerts)
+    assert svc.audit.records("conflict_alert")
+    # monitor disabled -> no observation cost, no alerts
+    svc2 = RouterService(T4_DSL, load_backends=False, monitor=False)
+    svc2.route(queries)
+    assert svc2._gen.monitor is None
+    assert svc2.conflict_alerts() == []
+
+
+def test_effective_thresholds_fold_group_theta():
+    svc = RouterService(DSL, load_backends=False)
+    eng = svc.engine
+    eff = dict(zip(eng.names, eng.effective_thresholds))
+    # grouped members carry the group threshold, not their own
+    assert eff["math"] == pytest.approx(0.51)
+    assert eff["science"] == pytest.approx(0.51)
