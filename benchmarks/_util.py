@@ -4,6 +4,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import sys
 import tempfile
 
 
@@ -25,3 +26,35 @@ def atomic_write_json(path: pathlib.Path, payload: dict) -> None:
         except OSError:
             pass
         raise
+
+
+def merge_bench_json(path: pathlib.Path, key: str, section) -> dict:
+    """Read-modify-write one top-level ``key`` of a BENCH_*.json.
+
+    The partial CI entries (chaos smoke, workload smoke, scenario runs)
+    must not clobber the perf rows a full run wrote — but they must
+    also never *crash* on whatever is on disk: a missing file, corrupt
+    JSON, or a valid-JSON-but-not-an-object payload (e.g. ``[]``) all
+    degrade to writing a fresh file with a warning on stderr, instead
+    of a traceback mid-suite.
+
+    Returns the full dict written to ``path``.
+    """
+    path = pathlib.Path(path)
+    data: dict = {"unit": "us_per_call"}
+    try:
+        existing = json.loads(path.read_text())
+        if isinstance(existing, dict):
+            data = existing
+        else:
+            print(f"bench/WARN,0,{path.name} held "
+                  f"{type(existing).__name__} not object; rewriting fresh",
+                  file=sys.stderr)
+    except FileNotFoundError:
+        pass
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench/WARN,0,{path.name} unreadable "
+              f"({type(e).__name__}); rewriting fresh", file=sys.stderr)
+    data[key] = section
+    atomic_write_json(path, data)
+    return data

@@ -36,10 +36,10 @@ import time
 import numpy as np
 
 try:
-    from benchmarks._util import atomic_write_json
+    from benchmarks._util import atomic_write_json, merge_bench_json
 except ModuleNotFoundError:          # run as a script from benchmarks/
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks._util import atomic_write_json
+    from benchmarks._util import atomic_write_json, merge_bench_json
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 JSON_PATH = ROOT / "BENCH_router.json"
@@ -549,16 +549,10 @@ def bench_sharded_subprocess(rows) -> list:
 def run_chaos_smoke() -> list:
     """CI entry (``--chaos-smoke``): just the fault-tier phases, merged
     into the existing BENCH_router.json read-modify-write so the perf
-    rows from the last full run survive.  Exits 1 on any failed check."""
+    rows from the last full run survive (``merge_bench_json`` tolerates
+    a missing/corrupt/non-object file).  Exits 1 on any failed check."""
     section, lines, failed_checks = bench_chaos()
-    data = {"unit": "us_per_call"}
-    if JSON_PATH.exists():
-        try:
-            data = json.loads(JSON_PATH.read_text())
-        except (OSError, json.JSONDecodeError):
-            pass
-    data["chaos"] = section
-    atomic_write_json(JSON_PATH, data)
+    merge_bench_json(JSON_PATH, "chaos", section)
     lines.append(f"router/json,0,{JSON_PATH.name}")
     for ln in lines:
         print(ln)
@@ -569,13 +563,210 @@ def run_chaos_smoke() -> list:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# trace-driven workload harness (src/repro/workloads, docs/workloads.md)
+# ---------------------------------------------------------------------------
+
+# autoscale A/B geometry: baseline capacity 1, ceiling 7 — both arms get
+# rows = next_pow2(7 + 1) = 8 pooled KV rows, the calibrated pooled-step
+# shape (slo.step_ms_calibration), so the pooled decode step costs the
+# SAME on both arms and the A/B isolates *scheduling capacity*, not
+# compiled batch shape
+WORKLOAD_SLOTS = 1
+WORKLOAD_MAX_SLOTS = 7
+
+
+def _workload_service():
+    """A slot-scheduler service on the two-backend chaos policy, warmed
+    across the prefill/decode buckets the workload traces hit (batch
+    1/2/4/8 at both prompt-length buckets, on both backends) so replay
+    measures serving, not XLA compiles — and both A/B arms, built by
+    this same function, start identically warm."""
+    from repro.serving.router import RouterService
+    svc = RouterService(CHAOS_DSL, max_batch=8, slots=WORKLOAD_SLOTS,
+                        max_slots=WORKLOAD_MAX_SLOTS, audit=True)
+    pad = " padding words here repeated again and again for length"
+    for backend_phrase in ("solve the integral algebra",
+                           "quantum physics experiment"):
+        # every pow2 prefill-batch bucket an autoscaled pool can hit:
+        # cap 7 admits batches that pad to 8, cap 4 -> 4, 2 -> 2, 1 -> 1
+        for cap in (WORKLOAD_MAX_SLOTS, 4, 2, 1):
+            for b in svc.backends:
+                svc.scheduler.set_slots(b, cap)
+            w = svc.enqueue(
+                [f"{backend_phrase} warm c{cap} r{i}" for i in range(cap)]
+                + [f"{backend_phrase} warm long c{cap} r{i}{pad}"
+                   for i in range(cap)],
+                max_new_tokens=2)
+            svc.serve_forever(max_steps=4000)
+            assert all(r.done for r in w)
+    for b in svc.backends:
+        svc.scheduler.set_slots(b, WORKLOAD_SLOTS)
+    return svc
+
+
+def _merge_workload_entry(name: str, entry: dict) -> None:
+    """Update one entry of BENCH_router.json's ``workloads`` section
+    without clobbering other profiles' entries (or the perf rows)."""
+    wl: dict = {}
+    try:
+        existing = json.loads(JSON_PATH.read_text())
+        if isinstance(existing, dict) and \
+                isinstance(existing.get("workloads"), dict):
+            wl = existing["workloads"]
+    except (OSError, json.JSONDecodeError):
+        pass
+    wl[name] = entry
+    merge_bench_json(JSON_PATH, "workloads", wl)
+
+
+def _replay_profile(profile, *, autoscale: bool, diag_path) -> dict:
+    """One replay arm: fresh warmed service, diagnostics to JSONL,
+    optional SLO autoscaler.  -> report dict (diag summary included)."""
+    from repro.workloads import (AutoscaleConfig, DiagnosticsConfig,
+                                 DiagnosticsManager, SloAutoscaler,
+                                 replay_trace)
+    svc = _workload_service()
+    diag = DiagnosticsManager(
+        DiagnosticsConfig(path=str(diag_path) if diag_path else None),
+        clock=svc.cbatcher.clock)
+    scaler = None
+    if autoscale:
+        scaler = SloAutoscaler(svc.scheduler, AutoscaleConfig(
+            min_slots=WORKLOAD_SLOTS, max_slots=WORKLOAD_MAX_SLOTS,
+            cooldown_s=0.3))
+    rep = replay_trace(svc, profile, diagnostics=diag, autoscaler=scaler)
+    diag.close()
+    out = rep.to_json()
+    out["autoscale_on"] = autoscale
+    out["diag_jsonl"] = str(diag_path) if diag_path else None
+    out["scheduler_stats"] = dict(svc.scheduler.stats)
+    return out
+
+
+def run_scenario(name: str, *, autoscale: bool,
+                 diag_path: str = None) -> list:
+    """CI/CLI entry (``--scenario NAME [--autoscale] [--diag-log P]``).
+
+    Replays the full named profile against the slot scheduler with
+    per-step diagnostics JSONL.  With ``--autoscale`` it runs the
+    on-vs-off A/B (same trace, identically warmed services) and records
+    both arms plus the SLO hit-rate comparison.  Results merge into
+    BENCH_router.json ``workloads[NAME]``; exits 1 on crashed steps."""
+    from repro.workloads import get_profile
+    profile = get_profile(name)
+    lines = []
+    diag_off = diag_path or ROOT / f"BENCH_diag_{name}.jsonl"
+    off = _replay_profile(profile, autoscale=False, diag_path=diag_off)
+    entry = {"profile": profile.to_dict(), "run": off}
+    crashed = off["crashed_steps"]
+    hr = off["summary"].get("slo_hit_rate")
+    lines.append(
+        f"router/workload_{name},0,completed={off['completed']}"
+        f"/{off['enqueued']},crashed={crashed},"
+        f"hit_rate={'n/a' if hr is None else f'{hr:.2f}'}")
+    if autoscale:
+        diag_on = (diag_path or ROOT / f"BENCH_diag_{name}.jsonl")
+        diag_on = pathlib.Path(str(diag_on)).with_suffix("") \
+            .as_posix() + "_autoscale.jsonl"
+        on = _replay_profile(profile, autoscale=True, diag_path=diag_on)
+        crashed += on["crashed_steps"]
+        hr_on = on["summary"].get("slo_hit_rate")
+        entry["autoscale_ab"] = {
+            "off": off, "on": on,
+            "slo_hit_rate_off": hr, "slo_hit_rate_on": hr_on,
+            "on_wins_or_ties": (hr is None or hr_on is None
+                                or hr_on >= hr),
+        }
+        lines.append(
+            f"router/workload_{name}_autoscale_ab,0,"
+            f"on={'n/a' if hr_on is None else f'{hr_on:.2f}'},"
+            f"off={'n/a' if hr is None else f'{hr:.2f}'},"
+            f"grows={on['autoscale'].get('grows', 0)},"
+            f"final_slots={on['autoscale'].get('final_slots')}")
+    _merge_workload_entry(name, entry)
+    lines.append(f"router/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    if crashed:
+        print(f"router/WORKLOAD_CRASHED_STEPS,0,{crashed}",
+              file=sys.stderr)
+        sys.exit(1)
+    return lines
+
+
+def run_workload_smoke() -> list:
+    """CI entry (``--workload-smoke``): replay a miniature of EVERY
+    named profile against the slot scheduler on one shared warmed
+    service, gating on zero crashed steps, every request terminal, and
+    diagnostics-JSONL schema validity for every emitted record.  Merges
+    a per-profile summary into BENCH_router.json ``workload_smoke``."""
+    import tempfile as _tempfile
+
+    from repro.workloads import (DiagnosticsConfig, DiagnosticsManager,
+                                 get_profile, profile_names, replay_trace,
+                                 validate_record)
+    lines, failures = [], []
+    svc = _workload_service()
+    section: dict = {}
+    for name in profile_names():
+        mini = get_profile(name).miniature()
+        with _tempfile.NamedTemporaryFile(
+                mode="r", suffix=f".{name}.jsonl", delete=False) as tf:
+            diag_path = tf.name
+        diag = DiagnosticsManager(DiagnosticsConfig(path=diag_path),
+                                  clock=svc.cbatcher.clock)
+        rep = replay_trace(svc, mini, diagnostics=diag)
+        diag.close()
+        problems: list = []
+        with open(diag_path, "r", encoding="utf-8") as f:
+            n_recs = 0
+            for line in f:
+                n_recs += 1
+                problems.extend(validate_record(json.loads(line)))
+        os.unlink(diag_path)
+        ok = (rep.crashed_steps == 0 and rep.completed == rep.enqueued
+              and not problems and n_recs == rep.steps)
+        if not ok:
+            failures.append(name)
+        section[name] = {**rep.to_json(), "jsonl_records": n_recs,
+                         "schema_problems": problems[:5], "ok": ok}
+        lines.append(f"router/workload_smoke_{name},0,"
+                     f"completed={rep.completed}/{rep.enqueued},"
+                     f"crashed={rep.crashed_steps},records={n_recs},"
+                     f"schema_ok={not problems}")
+    merge_bench_json(JSON_PATH, "workload_smoke", section)
+    lines.append(f"router/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    if failures:
+        print(f"router/WORKLOAD_SMOKE_FAILED,0,{','.join(failures)}",
+              file=sys.stderr)
+        sys.exit(1)
+    return lines
+
+
 def main(argv=None) -> list:
-    argv = sys.argv[1:] if argv is None else argv
+    argv = sys.argv[1:] if argv is None else list(argv)
     if _WORKER_FLAG in argv:
         sharded_worker()
         return []
     if "--chaos-smoke" in argv:
         return run_chaos_smoke()
+    if "--workload-smoke" in argv:
+        return run_workload_smoke()
+    if "--scenario" in argv:
+        i = argv.index("--scenario")
+        if i + 1 >= len(argv):
+            print("--scenario requires a profile name", file=sys.stderr)
+            sys.exit(2)
+        diag = None
+        if "--diag-log" in argv:
+            j = argv.index("--diag-log")
+            diag = argv[j + 1] if j + 1 < len(argv) else None
+        return run_scenario(argv[i + 1],
+                            autoscale="--autoscale" in argv,
+                            diag_path=diag)
     rows: list = []
     lines = bench_route_level(rows)
     lines += bench_precision_engine(rows)

@@ -16,10 +16,35 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import inspect
 import pathlib
 import sys
 import time
 import traceback
+
+# flags that consume the next argv token as their value (anything else
+# starting with "-" is a bare switch) — keeps the unknown-suite typo
+# check intact while letting `run bench_router --scenario flash_crowd
+# --autoscale` pass its flags through to the suite
+VALUE_FLAGS = {"--scenario", "--diag-log"}
+
+
+def _split_argv(args):
+    """-> (suite-name set, passthrough flag list).  Accepts both bare
+    suite names (``router``) and module names (``bench_router``)."""
+    only, flags = set(), []
+    it = iter(args)
+    for a in it:
+        if a.startswith("-"):
+            flags.append(a)
+            if a in VALUE_FLAGS:
+                try:
+                    flags.append(next(it))
+                except StopIteration:
+                    pass
+        else:
+            only.add(a[len("bench_"):] if a.startswith("bench_") else a)
+    return only, flags
 
 
 def main() -> None:
@@ -45,11 +70,15 @@ def main() -> None:
         ("moe_voronoi", bench_moe_voronoi.main),
         ("roofline", bench_roofline.main),
     ]
-    only = set(sys.argv[1:])
+    only, flags = _split_argv(sys.argv[1:])
     unknown = only - {name for name, _ in suites}
     if unknown:
         print(f"unknown suite name(s): {sorted(unknown)}; choose from "
               f"{[name for name, _ in suites]}", file=sys.stderr)
+        sys.exit(2)
+    if flags and not only:
+        print("flags require naming the suite they go to, e.g. "
+              "`run.py bench_router --scenario steady`", file=sys.stderr)
         sys.exit(2)
     print("name,us_per_call,derived")
     failed = []
@@ -58,7 +87,11 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn()
+            # suites whose main() accepts argv get the passthrough flags
+            if flags and inspect.signature(fn).parameters:
+                fn(flags)
+            else:
+                fn()
         except SystemExit as e:                # a suite's own gate tripped
             if e.code not in (None, 0):
                 failed.append(name)

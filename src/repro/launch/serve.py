@@ -156,10 +156,29 @@ def main(argv=None):
                     help="poll --config for edits and hot-swap the "
                          "policy through the conflict admission gate")
     ap.add_argument("--rebind-poll-s", type=float, default=0.5)
+    # ---- workload harness (docs/workloads.md) -------------------------------
+    ap.add_argument("--scenario", default=None,
+                    help="replay a named workload profile (e.g. "
+                         "flash_crowd) through the service instead of "
+                         "--requests; implies --continuous")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="autoscale ceiling for the slot scheduler "
+                         "(pooled rows sized for it up front)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the SLO-aware slot autoscaler during "
+                         "--scenario replay (requires --slots)")
+    ap.add_argument("--diag-log", default=None,
+                    help="per-step diagnostics JSONL path for "
+                         "--scenario replay")
     args = ap.parse_args(argv)
+    if args.scenario:
+        args.continuous = True
     if args.slots is not None and not args.continuous:
         ap.error("--slots requires --continuous (the slot scheduler "
                  "drives the continuous-batching loop)")
+    if args.autoscale and args.slots is None:
+        ap.error("--autoscale requires --slots (it resizes the slot "
+                 "scheduler's pools)")
     if args.rebind_watch and not args.config:
         ap.error("--rebind-watch requires --config (it watches the file)")
 
@@ -190,7 +209,8 @@ def main(argv=None):
                if args.breaker_cooldown_s is not None else None)
     svc = RouterService(text, use_pallas_voronoi=args.pallas_voronoi,
                         kernel=kernel, precision=args.precision,
-                        mesh=mesh, slots=args.slots, preempt=args.preempt,
+                        mesh=mesh, slots=args.slots,
+                        max_slots=args.max_slots, preempt=args.preempt,
                         audit=audit, monitor=args.monitor or None,
                         retry=retry, breaker=breaker)
     for d in svc.diagnostics:
@@ -215,6 +235,34 @@ def main(argv=None):
     # against scheduler slack computations under NTP adjustment)
     t0 = svc.cbatcher.clock()
     try:
+        if args.scenario:
+            from repro.workloads import (AutoscaleConfig,
+                                         DiagnosticsConfig,
+                                         DiagnosticsManager,
+                                         SloAutoscaler, get_profile,
+                                         replay_trace)
+            profile = get_profile(args.scenario)
+            diag = DiagnosticsManager(DiagnosticsConfig(path=args.diag_log),
+                                      clock=svc.cbatcher.clock)
+            scaler = None
+            if args.autoscale:
+                scaler = SloAutoscaler(svc.scheduler, AutoscaleConfig(
+                    min_slots=args.slots,
+                    max_slots=args.max_slots or max(args.slots, 4)))
+            rep = replay_trace(svc, profile, diagnostics=diag,
+                               autoscaler=scaler)
+            diag.close()
+            print(f"[serve] scenario {profile.name}: "
+                  f"{rep.completed}/{rep.enqueued} completed, "
+                  f"{rep.crashed_steps} crashed steps, "
+                  f"{rep.steps} steps in {rep.wall_s:.2f}s")
+            print(f"[serve] diagnostics: {rep.summary}"
+                  + (f" -> {args.diag_log}" if args.diag_log else ""))
+            if scaler is not None:
+                print(f"[serve] autoscale: {rep.autoscale}")
+            if svc.scheduler is not None:
+                print(f"[serve] scheduler stats: {svc.scheduler.stats}")
+            return []
         if args.continuous:
             reqs = svc.enqueue(args.requests,
                                max_new_tokens=args.new_tokens,

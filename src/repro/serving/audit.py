@@ -42,6 +42,9 @@ def qhash(text: str) -> str:
 
 @dataclasses.dataclass
 class AuditRecord:
+    """One structured audit event (see the module docstring for the
+    record kinds and what each field means per kind)."""
+
     ts: float
     kind: str
     generation: int = -1
@@ -56,6 +59,7 @@ class AuditRecord:
     detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> Dict[str, Any]:
+        """JSON-serializable dict view (tuples become lists)."""
         d = dataclasses.asdict(self)
         d["fired"] = list(self.fired)
         return d
@@ -90,6 +94,16 @@ class AuditSink:
 
     # -- append --------------------------------------------------------------
     def log(self, kind: str, **fields) -> AuditRecord:
+        """Append one record (ring + JSONL file when configured).
+
+        Args:
+            kind: record kind (``route``/``serve``/``rebind``/...).
+            **fields: ``AuditRecord`` field overrides.
+
+        Returns:
+            The stamped record.  Appending may trigger an amortized
+            retention compaction of the JSONL file.
+        """
         rec = AuditRecord(ts=self.clock(), kind=kind, **fields)
         self._ring.append(rec)
         self._kind_counts[kind] += 1
@@ -104,11 +118,14 @@ class AuditSink:
 
     # -- queries -------------------------------------------------------------
     def records(self, kind: Optional[str] = None) -> List[AuditRecord]:
+        """In-ring records, optionally filtered to one ``kind``
+        (oldest first; the ring holds the newest ``capacity``)."""
         if kind is None:
             return list(self._ring)
         return [r for r in self._ring if r.kind == kind]
 
     def tail(self, n: int = 10) -> List[AuditRecord]:
+        """The newest ``n`` in-ring records, oldest first."""
         return list(self._ring)[-n:]
 
     def counts(self) -> Dict[str, int]:

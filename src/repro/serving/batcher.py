@@ -34,6 +34,13 @@ _req_counter = itertools.count()
 
 @dataclasses.dataclass
 class Request:
+    """One serving request through its whole lifecycle: routing fields
+    (``route``/``action``/``backend``), decode output, continuous-
+    batching stamps (arrival/deadline/finish), coalescing links, and
+    the fault/hot-swap bookkeeping (retries, fallback, generation).
+    Inline comments below group the fields by the layer that owns
+    them."""
+
     text: str
     metadata: Optional[Dict[str, Any]] = None
     max_new_tokens: int = 16
@@ -67,14 +74,18 @@ class Request:
 
 
 class Batcher:
+    """FIFO per-backend batching for the one-shot ``submit`` path."""
+
     def __init__(self, max_batch: int = 8):
         self.max_batch = max_batch
         self.queues: Dict[str, deque] = defaultdict(deque)
 
     def submit(self, req: Request) -> None:
+        """Queue ``req`` on its backend (FIFO)."""
         self.queues[req.backend].append(req)
 
     def pending(self) -> int:
+        """Total queued requests across backends."""
         return sum(len(q) for q in self.queues.values())
 
     def next_batch(self) -> Optional[tuple]:

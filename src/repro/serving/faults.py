@@ -50,6 +50,8 @@ class FaultSpec:
     dead: bool = False          # persistent failure (chaos: killed backend)
 
     def active(self) -> bool:
+        """True when any injection knob is set (the fast-path guard:
+        inactive specs cost one dict lookup per call)."""
         return (self.dead or self.fail_next > 0 or self.error_rate > 0.0
                 or self.latency_s > 0.0)
 
@@ -60,6 +62,8 @@ class FaultSpec:
 
 @dataclasses.dataclass
 class RetryPolicy:
+    """Per-request retry budget with capped exponential backoff."""
+
     max_retries: int = 2        # attempts = max_retries + 1
     backoff_base_s: float = 0.005
     backoff_mult: float = 2.0
@@ -84,6 +88,8 @@ CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
 
 @dataclasses.dataclass
 class BreakerConfig:
+    """Circuit-breaker tuning: trip window/threshold and cooldown."""
+
     window: int = 16            # sliding outcome window length
     error_threshold: float = 0.5
     min_calls: int = 4          # don't trip on the first unlucky call
@@ -149,6 +155,17 @@ class CircuitBreaker:
 
     # -- outcomes ------------------------------------------------------------
     def record(self, ok: bool, now: Optional[float] = None) -> None:
+        """Record one attempt outcome and run the state machine.
+
+        Args:
+            ok: whether the guarded attempt succeeded.
+            now: clock override (tests drive cooldowns on fakes).
+
+        Half-open: the probe's outcome closes (success, window reset)
+        or re-opens the breaker.  Closed: the outcome joins the sliding
+        window; error rate >= threshold (with ``min_calls`` seen) trips
+        it open.  Open: ignored — only the probe can close it.
+        """
         now = self.clock() if now is None else now
         s = self.state(now)
         if s == HALF_OPEN:
@@ -212,6 +229,7 @@ class FaultManager:
 
     # -- injection -----------------------------------------------------------
     def spec(self, backend: str) -> FaultSpec:
+        """The (created-on-demand) fault spec for ``backend``."""
         s = self.specs.get(backend)
         if s is None:
             s = self.specs[backend] = FaultSpec()
@@ -228,9 +246,20 @@ class FaultManager:
         return s
 
     def clear(self, backend: str) -> None:
+        """Remove ``backend``'s fault spec (stop injecting)."""
         self.specs.pop(backend, None)
 
     def pre_call(self, backend: str) -> None:
+        """Fault-injection hook inside every guarded backend attempt.
+
+        Args:
+            backend: the backend about to be called.
+
+        Raises:
+            BackendFaultError: per the backend's spec (dead,
+                fail-next-N, or probabilistic error rate); injected
+            latency sleeps first.
+        """
         s = self.specs.get(backend)
         if s is None or not s.active():
             return
@@ -249,6 +278,8 @@ class FaultManager:
 
     # -- breaker -------------------------------------------------------------
     def breaker(self, backend: str) -> CircuitBreaker:
+        """The (created-on-demand) circuit breaker for ``backend``,
+        wired to the shared clock and transition hook."""
         b = self.breakers.get(backend)
         if b is None:
             b = CircuitBreaker(self.breaker_cfg, clock=self.clock)
@@ -267,17 +298,24 @@ class FaultManager:
         return hook
 
     def admission(self, backend: str) -> str:
+        """Consuming gate decision before decoding on ``backend``:
+        ``"ok"`` | ``"probe"`` (caller MUST ``record``) | ``"open"``."""
         return self.breaker(backend).admission()
 
     def is_open(self, backend: str) -> bool:
+        """Non-consuming failing-fast check (routing-time fallback)."""
         return self.breaker(backend).is_open()
 
     def record(self, backend: str, ok: bool) -> None:
+        """Feed one attempt outcome to ``backend``'s breaker (and the
+        failure counter)."""
         if not ok:
             self.stats["failures"] += 1
         self.breaker(backend).record(ok)
 
     def backoff_s(self, attempt: int) -> float:
+        """Jittered delay before retry ``attempt`` (0-based), from the
+        shared policy and RNG."""
         self.stats["retries"] += 1
         return self.retry.backoff_s(attempt, self.rng)
 

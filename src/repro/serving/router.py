@@ -130,6 +130,9 @@ def _sharded_route_core(mesh, n_rules: int):
 
 @dataclasses.dataclass
 class BackendRuntime:
+    """One loaded backend model: params plus its jitted prefill /
+    decode-step callables and the KV budget (``max_seq``)."""
+
     name: str
     arch: str
     model: Any
@@ -175,18 +178,58 @@ class RebindResult:
 
 
 class RouterService:
+    """The end-to-end serving pipeline for one DSL policy.
+
+    Compiles/validates/binds ``dsl_text`` into generation 0, loads the
+    policy's backends (real JAX models), and serves through either the
+    one-shot ``submit``/``step``/``drain`` path or the continuous
+    ``enqueue``/``serve_step`` loop (whole-batch, or the preemptible
+    slot scheduler with ``slots=N``).  See the module docstring for the
+    full dataflow; docs/architecture.md for the layer map.
+    """
+
     def __init__(self, dsl_text: str, *, embedder=None,
                  load_backends: bool = True, max_batch: int = 8,
                  use_pallas_voronoi: bool = False,
                  kernel: Optional[str] = None,
                  precision: Optional[str] = None,
                  mesh=None,
-                 slots: Optional[int] = None, preempt: bool = True,
+                 slots: Optional[int] = None,
+                 max_slots: Optional[int] = None, preempt: bool = True,
                  validate: bool = True, run_taxonomy: bool = False,
                  audit=None, monitor: Optional[bool] = None,
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[BreakerConfig] = None,
                  fault_seed: int = 0):
+        """Args:
+            dsl_text: Semantic Router DSL source (docs/dsl.md).
+            embedder: signal embedder (default ``HashEmbedder``).
+            load_backends: load the policy's declared backend models.
+            max_batch: batch cap for both batchers.
+            use_pallas_voronoi: legacy alias for ``kernel="grouped"``.
+            kernel: signal lowering — ``"jnp"``, ``"grouped"``, or the
+                fully fused ``"fused"`` Pallas launch.
+            precision: centroid store precision (``"bf16"``/``"int8"``).
+            mesh: JAX mesh for the sharded routing lowering.
+            slots: ``N`` switches continuous serving to the preemptible
+                slot scheduler with N slots per backend; ``None`` keeps
+                whole-batch decode.
+            max_slots: autoscale ceiling for the slot scheduler (pooled
+                KV rows are sized for it up front; see
+                ``DecodeScheduler.set_slots``).
+            preempt: enable deadline-driven preemption in slot mode.
+            validate: run static validation (errors raise).
+            run_taxonomy: include the geometric taxonomy in validation.
+            audit: ``AuditSink`` | True (in-memory ring) | None/False.
+            monitor: online conflict monitor on/off (defaults to follow
+                ``audit``).
+            retry: backend retry policy (default ``RetryPolicy()``).
+            breaker: circuit-breaker config (default ``BreakerConfig()``).
+            fault_seed: RNG seed for fault injection/backoff jitter.
+
+        Raises:
+            ValueError: when validation finds errors in ``dsl_text``.
+        """
         self.embedder = embedder or HashEmbedder()
         self._engine_opts = dict(use_pallas=use_pallas_voronoi,
                                  kernel=kernel, precision=precision,
@@ -231,21 +274,24 @@ class RouterService:
             from repro.serving.scheduler import DecodeScheduler
             self.scheduler = DecodeScheduler(
                 self.backends, self.cbatcher, n_slots=slots,
-                preempt=preempt, faults=self.faults,
+                max_slots=max_slots, preempt=preempt, faults=self.faults,
                 fallback=self._fallback_for,
                 on_done=self._on_request_done, audit=self.audit)
 
     # ---- generation plumbing (back-compat views) ------------------------------
     @property
     def config(self) -> RouterConfig:
+        """The serving generation's compiled ``RouterConfig``."""
         return self._gen.config
 
     @property
     def engine(self):
+        """The serving generation's bound ``SignalEngine``."""
         return self._gen.engine
 
     @property
     def tables(self) -> policy_mod.PolicyTables:
+        """The serving generation's tensorized policy tables."""
         return self._gen.tables
 
     @property
@@ -254,6 +300,7 @@ class RouterService:
 
     @property
     def diagnostics(self) -> List[Diagnostic]:
+        """Validation diagnostics from the serving generation's bind."""
         return self._gen.diagnostics
 
     @property
@@ -559,6 +606,8 @@ class RouterService:
                 for i in self.route_indices(texts, metadata)]
 
     def route_actions(self, texts: Sequence[str], metadata=None) -> List[str]:
+        """-> winning action key (``model:NAME``/``plugin:NAME``/...)
+        per request."""
         return [self.tables.action_key(i)
                 for i in self.route_indices(texts, metadata)]
 
@@ -586,6 +635,18 @@ class RouterService:
     # ---- serving ---------------------------------------------------------------
     def submit(self, texts: Sequence[str], metadata=None,
                max_new_tokens: int = 8) -> List[Request]:
+        """Route a batch and queue model-bound requests (one-shot path).
+
+        Args:
+            texts: prompts to route.
+            metadata: optional per-request metadata dicts.
+            max_new_tokens: decode budget per request.
+
+        Returns:
+            One ``Request`` per text; plugin/reject actions come back
+            already terminal, model-bound requests decode via
+            ``step``/``drain``.
+        """
         metadata = metadata or [None] * len(texts)
         # evaluate the signal pipeline ONCE; actions and route names are
         # two string views of the same winning indices
@@ -744,6 +805,8 @@ class RouterService:
         return self._decode_batch(*nb)
 
     def drain(self) -> int:
+        """Serve ``step`` until the one-shot queues empty.
+        -> #completed."""
         n = 0
         while self.batcher.pending():
             n += self.step()
@@ -821,6 +884,39 @@ class RouterService:
         if self.scheduler is not None:
             return self.scheduler.pending()
         return self.cbatcher.pending() > 0
+
+    def telemetry(self) -> Dict[str, Any]:
+        """One structured snapshot of the service's observable state.
+
+        The contract the workloads ``DiagnosticsManager`` records each
+        serve step (docs/workloads.md documents the JSONL schema built
+        from it).
+
+        Returns:
+            Dict with ``queue_depth`` (waiting requests per backend),
+            ``batcher`` (admission counters), and — when the matching
+            subsystem is on — ``scheduler`` (slot-scheduler counters),
+            ``requeue`` (evicted requests per backend), ``slots``
+            (per-backend occupancy), ``breakers`` (circuit state per
+            backend), ``generations`` (hot-swap refcounts), and
+            ``audit`` (records logged per kind).
+        """
+        out: Dict[str, Any] = {
+            "queue_depth": {b: len(q) for b, q in
+                            self.cbatcher.queues.items()},
+            "batcher": dict(self.cbatcher.stats),
+            "generations": self.generations(),
+        }
+        if self.scheduler is not None:
+            out["scheduler"] = dict(self.scheduler.stats)
+            out["requeue"] = {b: len(q) for b, q in
+                              self.scheduler.requeue.items() if q}
+            out["slots"] = self.scheduler.slot_occupancy()
+        if self.faults is not None and self.faults.breakers:
+            out["breakers"] = self.faults.states()
+        if self.audit is not None:
+            out["audit"] = self.audit.counts()
+        return out
 
     def serve_forever(self, *, max_steps: Optional[int] = None,
                       stop_when_idle: bool = True,

@@ -98,12 +98,17 @@ class _Slot:
 class _BackendPool:
     """Per-backend slot pool: pooled KV cache + jitted pooled step."""
 
-    def __init__(self, rt, n_slots: int):
+    def __init__(self, rt, n_slots: int, max_slots: Optional[int] = None):
         self.rt = rt
-        self.n_slots = n_slots                      # max ACTIVE
+        self.n_slots = n_slots                      # max ACTIVE (mutable)
+        # rows are sized for the autoscale ceiling up front: growing
+        # n_slots later activates spare rows without a cache realloc or
+        # a decode recompile (pooled step cost depends on rows, not on
+        # how many are active)
+        self.max_slots = max(n_slots, max_slots or n_slots)
         # +1 spare row so a single preemption parks in place instead of
         # evicting; pow2 keeps the decode batch in one compiled variant
-        self.rows = _next_pow2(n_slots + 1)
+        self.rows = _next_pow2(self.max_slots + 1)
         self.slots = [_Slot(i) for i in range(self.rows)]
         self.cache = None                           # lazy: first admission
         self.pos = np.zeros(self.rows, np.int64)
@@ -158,17 +163,43 @@ class DecodeScheduler:
     """
 
     def __init__(self, backends: Dict[str, Any], cbatcher: ContinuousBatcher,
-                 *, n_slots: int = 4, preempt: bool = True,
+                 *, n_slots: int = 4, max_slots: Optional[int] = None,
+                 preempt: bool = True,
                  preempt_margin_s: Optional[float] = None,
                  faults: Optional[FaultManager] = None,
                  fallback: Optional[Callable[[str], Optional[str]]] = None,
                  on_done: Optional[Callable[[Request], None]] = None,
                  audit=None):
+        """Args:
+            backends: ``{name: BackendRuntime}`` the service loaded.
+            cbatcher: the service's ``ContinuousBatcher`` (admission
+                queues + canonical clock).
+            n_slots: initial scheduling capacity per backend pool.
+            max_slots: autoscale ceiling — pooled KV rows are sized for
+                it up front so ``set_slots`` never recompiles; defaults
+                to ``n_slots`` (no autoscale headroom).
+            preempt: enable deadline-driven preemption.
+            preempt_margin_s: fixed slack floor for "deadline-imminent"
+                (defaults to the batcher's deadline margin).
+            faults: shared ``FaultManager`` guarding backend calls.
+            fallback: resolver mapping a failing backend to the
+                policy's degradation target (or ``None``).
+            on_done: terminal-request hook (generation refcount +
+                audit on the router).
+            audit: optional ``AuditSink``.
+
+        Raises:
+            ValueError: when ``n_slots < 1`` or ``max_slots < n_slots``.
+        """
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if max_slots is not None and max_slots < n_slots:
+            raise ValueError(
+                f"max_slots ({max_slots}) must be >= n_slots ({n_slots})")
         self.backends = backends
         self.cbatcher = cbatcher
         self.n_slots = n_slots
+        self.max_slots = max_slots or n_slots
         self.preempt = preempt
         self.preempt_margin_s = (cbatcher.deadline_margin_s
                                  if preempt_margin_s is None
@@ -223,8 +254,78 @@ class DecodeScheduler:
         pool = self.pools.get(backend)
         if pool is None:
             pool = self.pools[backend] = _BackendPool(
-                self.backends[backend], self.n_slots)
+                self.backends[backend], self.n_slots,
+                max_slots=self.max_slots)
         return pool
+
+    # ---- autoscale surface --------------------------------------------------
+    def set_slots(self, backend: str, n: int) -> int:
+        """Resize ``backend``'s scheduling capacity (the autoscaler's
+        actuator).
+
+        Growing activates spare pooled rows immediately (no realloc,
+        no recompile — rows were sized for ``max_slots`` up front);
+        shrinking drains naturally: ``_admit`` stops filling above the
+        new capacity and slots free as requests retire, so nothing
+        in-flight is killed.
+
+        Args:
+            backend: pool to resize (created on demand).
+            n: requested capacity; clamped to ``[1, max_slots]``.
+
+        Returns:
+            The capacity actually applied after clamping.
+        """
+        pool = self._pool(backend)
+        n = max(1, min(int(n), pool.max_slots))
+        pool.n_slots = n
+        return n
+
+    def slot_occupancy(self) -> Dict[str, Dict[str, int]]:
+        """Per-backend slot usage for diagnostics and the autoscaler.
+
+        Returns:
+            ``{backend: {active, parked, free, capacity, rows}}`` —
+            ``free`` is unclaimed *scheduling* capacity
+            (``capacity - active``), distinct from free cache rows.
+        """
+        out: Dict[str, Dict[str, int]] = {}
+        for backend, pool in self.pools.items():
+            a, p = len(pool.active()), len(pool.parked())
+            out[backend] = {"active": a, "parked": p,
+                            "free": max(0, pool.n_slots - a),
+                            "capacity": pool.n_slots, "rows": pool.rows}
+        return out
+
+    def queue_depths(self) -> Dict[str, int]:
+        """Waiting requests per backend (admission + re-prefill
+        queues; not counting requests already in slots).
+
+        Returns:
+            ``{backend: count}`` over every backend with any state.
+        """
+        out: Dict[str, int] = {}
+        for b in set(self.cbatcher.queues) | set(self.requeue) \
+                | set(self.pools):
+            out[b] = (len(self.cbatcher.queues.get(b, ()))
+                      + len(self.requeue.get(b, ())))
+        return out
+
+    def service_time_model(self) -> Dict[str, Dict[str, Optional[float]]]:
+        """The scheduler's self-measured EWMA service times, in ms.
+
+        Returns:
+            ``{backend: {step_ms, prefill_ms}}`` per pool; values are
+            ``None`` until warm (compile-excluded) samples exist.  The
+            EWMAs are shared across pools — every backend decodes
+            through the same host — so each backend reports the same
+            numbers today; the shape leaves room for per-backend
+            models.
+        """
+        step = self._step_ewma * 1e3 if self._step_ewma else None
+        pre = self._prefill_ewma * 1e3 if self._prefill_ewma else None
+        return {b: {"step_ms": step, "prefill_ms": pre}
+                for b in self.pools}
 
     def pending(self) -> bool:
         """Work anywhere: queued admissions, evicted requests, or busy

@@ -1,0 +1,36 @@
+"""Trace-driven load harness: scenario profiles, deterministic trace
+generation, replay against any serving mode, live diagnostics, and
+SLO-aware autoscaling.
+
+The harness exists so every perf PR proves itself on the SAME workload:
+
+* ``profiles``    — dacite-style dataclass scenario configs with a named
+                    registry (diurnal, flash_crowd, heavy_tail,
+                    multi_tenant, unique_flood, steady);
+* ``generator``   — profile -> deterministic, seeded arrival/length
+                    streams (``TraceEvent`` list);
+* ``replay``      — drive any profile through ``RouterService.enqueue``
+                    / ``serve_step`` (whole-batch or slot scheduler,
+                    preempt on/off, faults on/off);
+* ``diagnostics`` — per-step telemetry into structured JSONL plus an
+                    end-of-run summary (fv3net-runtime-diagnostics
+                    style manager);
+* ``autoscale``   — close the loop: grow/shrink per-backend slot pools
+                    and admission rates from the scheduler's EWMA
+                    service-time model, with hysteresis.
+
+See docs/workloads.md for every profile's knobs and how to add one.
+"""
+from repro.workloads.autoscale import (AdmissionController,  # noqa: F401
+                                       AutoscaleConfig, ScaleAction,
+                                       SloAutoscaler)
+from repro.workloads.diagnostics import (DiagnosticsConfig,  # noqa: F401
+                                         DiagnosticsManager,
+                                         validate_record)
+from repro.workloads.generator import (TraceEvent,  # noqa: F401
+                                       generate_trace, trace_fingerprint)
+from repro.workloads.profiles import (PROFILES, ArrivalModel,  # noqa: F401
+                                      LengthDist, ScenarioProfile,
+                                      TenantSpec, get_profile,
+                                      profile_names)
+from repro.workloads.replay import ReplayReport, replay_trace  # noqa: F401

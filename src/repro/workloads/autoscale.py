@@ -1,0 +1,246 @@
+"""SLO-aware autoscaling for the slot scheduler.
+
+``SloAutoscaler`` closes the control loop the scheduler already has the
+sensors for: per-backend queue depth, slot occupancy, and the EWMA
+service-time model (``DecodeScheduler.service_time_model``).  Each
+``observe`` tick it estimates the queue wait a newly admitted request
+would see — ``queued / n_slots * ewma_step_cost * expected_tokens`` —
+compares that pressure against grow/shrink thresholds, and resizes the
+backend's slot pool through ``DecodeScheduler.set_slots`` with
+hysteresis (a per-backend cooldown between actions, and a shrink
+threshold well below the grow threshold so the two can never chatter).
+
+Growing slots is nearly free in this codebase: ``_BackendPool`` sizes
+its pooled KV rows from ``max_slots`` up front, and the pooled decode
+step cost depends on rows (a compile-time shape), not on how many slots
+are active — so activating more slots raises throughput without a
+recompile.  Shrinking reduces memory pressure / per-request latency on
+pools where the queue has drained.
+
+``AdmissionController`` is the second actuator: a token bucket whose
+refill rate the autoscaler modulates, shedding arrivals early when even
+``max_slots`` cannot meet the SLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+__all__ = ["AdmissionController", "AutoscaleConfig", "ScaleAction",
+           "SloAutoscaler"]
+
+
+@dataclasses.dataclass
+class AutoscaleConfig:
+    """Autoscaler knobs.
+
+    Args:
+        min_slots: floor for any backend's slot pool.
+        max_slots: ceiling; must match the scheduler's ``max_slots``
+            (rows are sized from it at construction).
+        grow_queue_per_slot: grow when queued-requests-per-active-slot
+            exceeds this.
+        shrink_queue_per_slot: shrink when pressure stays below this
+            (kept well under the grow threshold for hysteresis).
+        slo_headroom: grow when estimated queue wait exceeds this
+            fraction of the tightest observed SLO.
+        cooldown_s: minimum seconds between scale actions on one
+            backend (the hysteresis window).
+        shed_wait_factor: admission sheds load when estimated wait at
+            max_slots exceeds this multiple of the tightest SLO.
+    """
+    min_slots: int = 1
+    max_slots: int = 8
+    grow_queue_per_slot: float = 1.5
+    shrink_queue_per_slot: float = 0.25
+    slo_headroom: float = 0.5
+    cooldown_s: float = 0.4
+    shed_wait_factor: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleAction:
+    """One autoscaler decision, for the diagnostics log.
+
+    Args:
+        t_s: decision time (service clock).
+        backend: pool that was resized.
+        kind: ``"grow"`` or ``"shrink"``.
+        n_slots: new slot count after the action.
+        reason: human-readable trigger (pressure / wait estimate).
+    """
+    t_s: float
+    backend: str
+    kind: str
+    n_slots: int
+    reason: str
+
+
+class AdmissionController:
+    """Token-bucket admission gate modulated by the autoscaler.
+
+    ``try_admit(n, now)`` spends ``n`` tokens if available; the bucket
+    refills at ``rate_qps`` up to ``burst`` tokens.  ``set_rate`` lets
+    the autoscaler throttle or reopen the gate at runtime.
+    """
+
+    def __init__(self, rate_qps: float = 1e9, burst: float = 32.0):
+        """Args:
+            rate_qps: sustained admissions per second (default is
+                effectively unlimited until the autoscaler says
+                otherwise).
+            burst: bucket capacity (max tokens banked while idle).
+        """
+        self.rate_qps = float(rate_qps)
+        self.burst = float(burst)
+        self._tokens = float(burst)
+        self._last: Optional[float] = None
+        self.rejected = 0
+
+    def set_rate(self, rate_qps: float) -> None:
+        """Change the sustained admission rate (tokens/s)."""
+        self.rate_qps = max(0.0, float(rate_qps))
+
+    def try_admit(self, n: int, now: float) -> bool:
+        """Spend ``n`` tokens if the bucket holds them.
+
+        Args:
+            n: arrivals asking to enter together.
+            now: current time on the service clock.
+
+        Returns:
+            True when admitted; False when the batch is shed (also
+            bumps ``rejected``).
+        """
+        if self._last is not None:
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._last)
+                               * self.rate_qps)
+        self._last = now
+        if self._tokens >= n:
+            self._tokens -= n
+            return True
+        self.rejected += n
+        return False
+
+
+class SloAutoscaler:
+    """Grow/shrink per-backend slot pools from queue pressure and the
+    scheduler's EWMA service-time model, with hysteresis.
+
+    Call ``observe(now)`` once per serve step.  Requires a scheduler
+    exposing ``slot_occupancy()``, ``service_time_model()``,
+    ``queue_depths()`` and ``set_slots(backend, n)`` (the real
+    ``DecodeScheduler`` does; tests use a stub).
+    """
+
+    def __init__(self, scheduler, config: Optional[AutoscaleConfig] = None,
+                 admission: Optional[AdmissionController] = None,
+                 expected_tokens: float = 8.0):
+        """Args:
+            scheduler: the slot scheduler to actuate.
+            config: thresholds/cooldowns (defaults are tuned for the
+                2-core CI host).
+            admission: optional token bucket to modulate; ``None``
+                disables the admission actuator.
+            expected_tokens: decode-length prior used in the wait
+                estimate before real traffic calibrates it.
+        """
+        self.sched = scheduler
+        self.config = config or AutoscaleConfig()
+        self.admission = admission
+        self.expected_tokens = float(expected_tokens)
+        self.actions: List[ScaleAction] = []
+        self._last_action_t: Dict[str, float] = {}
+        self._tightest_slo_s: Optional[float] = None
+
+    def note_slo(self, slo_ms: Optional[float]) -> None:
+        """Track the tightest SLO seen, for the wait-based grow rule."""
+        if slo_ms is None:
+            return
+        s = slo_ms / 1e3
+        if self._tightest_slo_s is None or s < self._tightest_slo_s:
+            self._tightest_slo_s = s
+
+    def _est_wait_s(self, queued: int, n_slots: int,
+                    step_ms: Optional[float]) -> Optional[float]:
+        """Estimated queue wait: requests ahead, divided across slots,
+        each costing ``expected_tokens`` decode steps."""
+        if step_ms is None or n_slots <= 0:
+            return None
+        return (queued / n_slots) * (step_ms / 1e3) * self.expected_tokens
+
+    def observe(self, now: float) -> List[ScaleAction]:
+        """Run one control tick; apply at most one action per backend.
+
+        Args:
+            now: current time on the service clock.
+
+        Returns:
+            The actions applied this tick (also appended to
+            ``self.actions``).
+        """
+        cfg = self.config
+        occ = self.sched.slot_occupancy()
+        model = self.sched.service_time_model()
+        queues = self.sched.queue_depths()
+        applied: List[ScaleAction] = []
+        for backend, slots in occ.items():
+            queued = int(queues.get(backend, 0))
+            n = int(slots["capacity"])
+            active = int(slots["active"]) + int(slots["parked"])
+            step_ms = model.get(backend, {}).get("step_ms")
+            pressure = queued / max(1, n)
+            wait = self._est_wait_s(queued, n, step_ms)
+            last = self._last_action_t.get(backend)
+            in_cooldown = last is not None and (now - last) < cfg.cooldown_s
+
+            want_grow = pressure > cfg.grow_queue_per_slot
+            if (not want_grow and wait is not None
+                    and self._tightest_slo_s is not None):
+                want_grow = wait > cfg.slo_headroom * self._tightest_slo_s
+            want_shrink = (pressure < cfg.shrink_queue_per_slot
+                           and queued == 0 and active < n)
+
+            if want_grow and n < cfg.max_slots and not in_cooldown:
+                new_n = min(cfg.max_slots, max(n + 1, int(n * 2)))
+                self.sched.set_slots(backend, new_n)
+                act = ScaleAction(
+                    t_s=now, backend=backend, kind="grow", n_slots=new_n,
+                    reason=f"queued={queued} pressure={pressure:.2f} "
+                           f"wait_est={wait if wait is None else round(wait, 3)}")
+                applied.append(act)
+                self._last_action_t[backend] = now
+            elif want_shrink and n > cfg.min_slots and not in_cooldown:
+                new_n = max(cfg.min_slots, n - 1)
+                self.sched.set_slots(backend, new_n)
+                act = ScaleAction(
+                    t_s=now, backend=backend, kind="shrink", n_slots=new_n,
+                    reason=f"idle pool: active={active} capacity={n}")
+                applied.append(act)
+                self._last_action_t[backend] = now
+
+            # admission actuator: shed only when even max_slots can't
+            # meet the tightest SLO
+            if self.admission is not None and step_ms is not None:
+                wait_at_max = self._est_wait_s(queued, cfg.max_slots, step_ms)
+                slo = self._tightest_slo_s
+                if (slo is not None and wait_at_max is not None
+                        and wait_at_max > cfg.shed_wait_factor * slo):
+                    # throttle to roughly the pool's service rate
+                    svc_rate = cfg.max_slots / max(
+                        1e-6, (step_ms / 1e3) * self.expected_tokens)
+                    self.admission.set_rate(svc_rate)
+                elif self.admission.rate_qps < 1e8:
+                    self.admission.set_rate(1e9)
+        self.actions.extend(applied)
+        return applied
+
+    def summary(self) -> Dict[str, Any]:
+        """Aggregate action counts for the end-of-run report."""
+        grows = sum(a.kind == "grow" for a in self.actions)
+        shrinks = sum(a.kind == "shrink" for a in self.actions)
+        return {"actions": len(self.actions), "grows": grows,
+                "shrinks": shrinks,
+                "final_slots": {b: int(s["capacity"]) for b, s in
+                                self.sched.slot_occupancy().items()}}

@@ -1,0 +1,278 @@
+"""Live serving diagnostics: per-step telemetry to JSONL + a summary.
+
+``DiagnosticsManager`` is the harness's runtime diagnostics manager
+(modeled on fv3net's prognostic-run ``runtime/diagnostics/manager.py``):
+the replay loop feeds it one telemetry snapshot per serve step, it
+buffers structured records, appends them to a JSONL file (tempfile-free
+append; the file is line-oriented and each line is self-contained), and
+produces an end-of-run summary that the benchmarks merge into
+``BENCH_router.json``.
+
+Each JSONL record is one serve step:
+
+  step              1-based step index
+  t_s               seconds since replay start
+  queued            total admission-queue depth across backends
+  queue_depth       per-backend depth (admission + re-prefill queues)
+  slots             per-backend {active, parked, free, capacity} (slot
+                    scheduler only)
+  completed         requests completed this step (followers included)
+  completed_total   running total
+  admission_rejects running count of load-shed arrivals
+  p50_ms / p99_ms   latency percentiles over finished requests so far
+  counters          scheduler/batcher counters (preemptions, evictions,
+                    truncated, faults, ...)
+  breakers          circuit-breaker state per backend (when any exist)
+  audit_alerts      running count of conflict_alert audit records
+
+``validate_record`` is the schema gate the workload-smoke CI job (and
+the unit tests) run over every emitted line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["DiagnosticsConfig", "DiagnosticsManager", "validate_record"]
+
+# field name -> (required, type check) for one JSONL step record
+_SCHEMA: Dict[str, tuple] = {
+    "step": (True, lambda v: isinstance(v, int) and v >= 1),
+    "t_s": (True, lambda v: isinstance(v, (int, float)) and v >= 0),
+    "queued": (True, lambda v: isinstance(v, int) and v >= 0),
+    "queue_depth": (True, lambda v: isinstance(v, dict)),
+    "completed": (True, lambda v: isinstance(v, int) and v >= 0),
+    "completed_total": (True, lambda v: isinstance(v, int) and v >= 0),
+    "admission_rejects": (True, lambda v: isinstance(v, int) and v >= 0),
+    "p50_ms": (True, lambda v: v is None or isinstance(v, (int, float))),
+    "p99_ms": (True, lambda v: v is None or isinstance(v, (int, float))),
+    "counters": (True, lambda v: isinstance(v, dict)),
+    "slots": (False, lambda v: isinstance(v, dict)),
+    "breakers": (False, lambda v: isinstance(v, dict)),
+    "audit_alerts": (False, lambda v: isinstance(v, int) and v >= 0),
+}
+
+
+def validate_record(rec: Dict[str, Any]) -> List[str]:
+    """Schema-check one JSONL step record.
+
+    Args:
+        rec: a parsed JSONL line.
+
+    Returns:
+        List of human-readable problems; empty means the record is
+        valid.  Unknown keys are rejected so schema drift is loud.
+    """
+    problems = []
+    for key, (required, check) in _SCHEMA.items():
+        if key not in rec:
+            if required:
+                problems.append(f"missing required field {key!r}")
+            continue
+        if not check(rec[key]):
+            problems.append(f"field {key!r} failed type/range check: "
+                            f"{rec[key]!r}")
+    for key in rec:
+        if key not in _SCHEMA:
+            problems.append(f"unknown field {key!r}")
+    return problems
+
+
+@dataclasses.dataclass
+class DiagnosticsConfig:
+    """Manager configuration (dacite-style plain dataclass).
+
+    Args:
+        path: JSONL output path; ``None`` keeps records in memory only.
+        interval_steps: emit every Nth step record (1 = every step);
+            the summary always integrates every step regardless.
+        flush_every: buffered records between file flushes.
+    """
+    path: Optional[str] = None
+    interval_steps: int = 1
+    flush_every: int = 64
+
+
+class DiagnosticsManager:
+    """Collects per-step serving telemetry and finished-request
+    latencies; writes JSONL; summarizes at the end of a run.
+
+    The replay driver calls ``observe_step`` once per serve step with
+    the service's ``telemetry()`` snapshot, ``on_request_done`` once
+    per finished request, and ``record_reject`` for load-shed
+    arrivals.  ``summary()``/``close()`` finish the run.
+    """
+
+    def __init__(self, config: Optional[DiagnosticsConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        """Args:
+            config: output/sampling configuration (default: in-memory,
+                every step).
+            clock: injectable monotonic clock (tests use fakes; the
+                replay driver passes the service's batcher clock so
+                stamps line up with deadlines).
+        """
+        self.config = config or DiagnosticsConfig()
+        self.clock = clock
+        self.records: List[Dict[str, Any]] = []
+        self._file = None
+        self._pending_flush = 0
+        self._t0: Optional[float] = None
+        self._latencies_ms: List[float] = []
+        self._slo_total = 0
+        self._slo_hit = 0
+        self._completed_total = 0
+        self._rejects = 0
+        self._truncated = 0
+        self._failed = 0
+        self._steps = 0
+        self._max_queued = 0
+        if self.config.path:
+            self._file = open(self.config.path, "w", encoding="utf-8")
+
+    # ---- inputs ------------------------------------------------------------
+    def start(self, now: Optional[float] = None) -> None:
+        """Mark the replay start (t_s origin for every record)."""
+        self._t0 = self.clock() if now is None else now
+
+    def on_request_done(self, req, now: Optional[float] = None) -> None:
+        """Record one finished request's latency / SLO / flags.
+
+        Args:
+            req: a terminal ``serving.batcher.Request``.
+            now: completion stamp override (defaults to the request's
+                own ``finish_s`` when set).
+        """
+        fin = req.finish_s if req.finish_s is not None else (
+            self.clock() if now is None else now)
+        if req.arrival_s is not None:
+            self._latencies_ms.append((fin - req.arrival_s) * 1e3)
+        if req.deadline_s is not None:
+            self._slo_total += 1
+            if fin <= req.deadline_s and not req.failed:
+                self._slo_hit += 1
+        if req.truncated:
+            self._truncated += 1
+        if req.failed:
+            self._failed += 1
+
+    def record_reject(self, n: int = 1, slo: bool = False) -> None:
+        """Count ``n`` load-shed (admission-rejected) arrivals.
+
+        Args:
+            n: number of rejected arrivals.
+            slo: True when the rejected arrivals carried deadlines —
+                they then count as SLO misses, so shedding can never
+                flatter the hit-rate.
+        """
+        self._rejects += n
+        if slo:
+            self._slo_total += n
+
+    # ---- per-step records --------------------------------------------------
+    def _percentile(self, q: float) -> Optional[float]:
+        """Latency percentile over everything finished so far (ms)."""
+        if not self._latencies_ms:
+            return None
+        return float(np.percentile(np.asarray(self._latencies_ms), q))
+
+    def observe_step(self, step: int, telemetry: Dict[str, Any],
+                     completed: int,
+                     now: Optional[float] = None) -> Optional[Dict]:
+        """Ingest one serve step's telemetry snapshot.
+
+        Args:
+            step: 1-based step index.
+            telemetry: ``RouterService.telemetry()`` output.
+            completed: requests completed by this step.
+            now: clock override.
+
+        Returns:
+            The emitted record dict (also appended to ``records`` and
+            the JSONL file), or ``None`` when sampled out by
+            ``interval_steps``.
+        """
+        now = self.clock() if now is None else now
+        if self._t0 is None:
+            self._t0 = now
+        self._steps = max(self._steps, step)
+        self._completed_total += completed
+        qd = dict(telemetry.get("queue_depth", {}))
+        for b, k in telemetry.get("requeue", {}).items():
+            qd[b] = qd.get(b, 0) + k
+        queued = int(sum(qd.values()))
+        self._max_queued = max(self._max_queued, queued)
+        if step % max(1, self.config.interval_steps):
+            return None
+        rec: Dict[str, Any] = {
+            "step": int(step),
+            "t_s": round(now - self._t0, 6),
+            "queued": queued,
+            "queue_depth": qd,
+            "completed": int(completed),
+            "completed_total": self._completed_total,
+            "admission_rejects": self._rejects,
+            "p50_ms": self._percentile(50.0),
+            "p99_ms": self._percentile(99.0),
+            "counters": dict(telemetry.get("scheduler",
+                                           telemetry.get("batcher", {}))),
+        }
+        if "slots" in telemetry:
+            rec["slots"] = telemetry["slots"]
+        if telemetry.get("breakers"):
+            rec["breakers"] = telemetry["breakers"]
+        if "audit" in telemetry:
+            rec["audit_alerts"] = int(
+                telemetry["audit"].get("conflict_alert", 0))
+        self.records.append(rec)
+        if self._file is not None:
+            self._file.write(json.dumps(rec, sort_keys=True) + "\n")
+            self._pending_flush += 1
+            if self._pending_flush >= self.config.flush_every:
+                self._file.flush()
+                self._pending_flush = 0
+        return rec
+
+    # ---- outputs -----------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        """End-of-run aggregate (merged into the bench JSON).
+
+        Returns:
+            Dict with total steps/completions, admission rejects,
+            truncations, failures, max queue depth, latency p50/p99,
+            and the SLO hit-rate (rejected deadline-carrying arrivals
+            count as misses).
+        """
+        return {
+            "steps": self._steps,
+            "completed": self._completed_total,
+            "admission_rejects": self._rejects,
+            "truncated": self._truncated,
+            "failed": self._failed,
+            "max_queued": self._max_queued,
+            "p50_ms": self._percentile(50.0),
+            "p99_ms": self._percentile(99.0),
+            "slo_requests": self._slo_total,
+            "slo_hit_rate": (self._slo_hit / self._slo_total
+                             if self._slo_total else None),
+        }
+
+    def close(self) -> None:
+        """Flush and close the JSONL file (idempotent)."""
+        if self._file is not None:
+            self._file.flush()
+            self._file.close()
+            self._file = None
+
+    def __enter__(self) -> "DiagnosticsManager":
+        """Context-manager entry (stamps the start time)."""
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        """Context-manager exit: close the JSONL file."""
+        self.close()

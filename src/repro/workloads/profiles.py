@@ -1,0 +1,445 @@
+"""Scenario profiles: dacite-style dataclass configs for the load harness.
+
+A ``ScenarioProfile`` is pure data — everything the trace generator
+needs to produce a deterministic arrival/length/tenant stream, and
+nothing about how it is served.  Profiles nest plain frozen dataclasses
+(``ArrivalModel``, ``LengthDist``, ``TenantSpec``) and round-trip
+through ``from_dict``/``to_dict`` with strict unknown-key rejection,
+mirroring the fv3fit ``Config``/``dacite.from_dict(strict=True)`` idiom
+without the dacite dependency (not in the image).
+
+The named registry (``PROFILES`` / ``get_profile``) ships the paper's
+workload-shape axes:
+
+  steady        constant Poisson arrivals, uniform lengths — the
+                hysteresis / determinism baseline
+  diurnal       sinusoidal rate cycle (compressed day/night)
+  flash_crowd   low base rate with a sudden burst window (the
+                autoscaling A/B scenario)
+  heavy_tail    lognormal prompt lengths + Pareto output lengths
+  multi_tenant  weighted tenant mix with per-tenant SLOs (premium
+                tight-deadline vs free best-effort)
+  unique_flood  cache-hostile: every text globally unique (defeats the
+                embedder LRU and in-flight coalescing)
+
+Every profile is seeded: same profile + same seed => bit-identical
+trace across processes (tests/test_workloads.py enforces this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["LengthDist", "ArrivalModel", "TenantSpec", "ScenarioProfile",
+           "PROFILES", "get_profile", "profile_names", "from_dict"]
+
+
+def from_dict(cls, data: Dict[str, Any]):
+    """Recursively construct dataclass ``cls`` from a plain dict.
+
+    dacite-style strict mode: unknown keys raise ``ValueError``, nested
+    dataclass fields (including tuples of dataclasses) are built
+    recursively, and everything else passes through untouched.
+
+    Args:
+        cls: target dataclass type.
+        data: plain mapping, e.g. parsed from JSON.
+
+    Returns:
+        An instance of ``cls``.
+
+    Raises:
+        ValueError: on keys that are not fields of ``cls``.
+        TypeError: if ``cls`` is not a dataclass.
+    """
+    if not dataclasses.is_dataclass(cls):
+        raise TypeError(f"{cls!r} is not a dataclass")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = set(data) - set(fields)
+    if unknown:
+        raise ValueError(
+            f"{cls.__name__}: unknown keys {sorted(unknown)!r} "
+            f"(known: {sorted(fields)!r})")
+    kwargs = {}
+    hints = typing.get_type_hints(cls)
+    for key, value in data.items():
+        tp = hints.get(key, fields[key].type)
+        kwargs[key] = _build_value(tp, value)
+    return cls(**kwargs)
+
+
+def _build_value(tp, value):
+    """Build one field value, recursing into dataclasses and tuples."""
+    origin = typing.get_origin(tp)
+    if origin is typing.Union:           # Optional[...]
+        args = [a for a in typing.get_args(tp) if a is not type(None)]
+        if value is None:
+            return None
+        return _build_value(args[0], value) if len(args) == 1 else value
+    if origin in (tuple, list) and isinstance(value, (list, tuple)):
+        args = typing.get_args(tp)
+        elem = args[0] if args else None
+        if elem is not None and dataclasses.is_dataclass(elem):
+            built = [from_dict(elem, v) if isinstance(v, dict) else v
+                     for v in value]
+        else:
+            built = list(value)
+        return tuple(built) if origin is tuple else built
+    if dataclasses.is_dataclass(tp) and isinstance(value, dict):
+        return from_dict(tp, value)
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDist:
+    """A sampled length distribution (prompt bytes / output tokens).
+
+    Args:
+        kind: ``"fixed"`` (always ``value``), ``"lognormal"`` (median
+            ``value``, shape ``sigma``), or ``"pareto"`` (scale
+            ``value``, tail index ``alpha`` — the heavy-tail knob).
+        value: central value (fixed value / lognormal median / Pareto
+            scale minimum).
+        sigma: lognormal shape parameter (ignored otherwise).
+        alpha: Pareto tail index; smaller = heavier tail (ignored
+            otherwise).
+        minimum: inclusive lower clamp on every sample.
+        maximum: inclusive upper clamp on every sample.
+    """
+    kind: str = "fixed"
+    value: float = 8.0
+    sigma: float = 0.5
+    alpha: float = 2.0
+    minimum: int = 1
+    maximum: int = 64
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Draw ``n`` integer lengths from this distribution.
+
+        Args:
+            rng: the generator owning this trace's random stream.
+            n: number of samples.
+
+        Returns:
+            int64 array of ``n`` lengths in [minimum, maximum].
+
+        Raises:
+            ValueError: on an unknown ``kind``.
+        """
+        if self.kind == "fixed":
+            x = np.full(n, float(self.value))
+        elif self.kind == "lognormal":
+            x = rng.lognormal(mean=np.log(max(self.value, 1e-9)),
+                              sigma=self.sigma, size=n)
+        elif self.kind == "pareto":
+            x = self.value * (1.0 + rng.pareto(self.alpha, size=n))
+        else:
+            raise ValueError(f"unknown LengthDist kind {self.kind!r}")
+        return np.clip(np.rint(x), self.minimum, self.maximum
+                       ).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalModel:
+    """Time-varying arrival process, sampled by Lewis thinning.
+
+    Args:
+        kind: ``"poisson"`` (constant ``rate_qps``), ``"diurnal"``
+            (sinusoidal: ``rate_qps * (1 + amplitude*sin(2*pi*t /
+            period_s))``), or ``"burst"`` (``rate_qps`` baseline plus
+            ``burst_rate_qps`` inside the burst window — flash crowd).
+        rate_qps: baseline arrival rate, queries/second.
+        period_s: diurnal cycle period.
+        amplitude: diurnal modulation depth in [0, 1).
+        burst_rate_qps: extra rate added during the burst window.
+        burst_start_s: burst window start offset.
+        burst_dur_s: burst window duration.
+    """
+    kind: str = "poisson"
+    rate_qps: float = 10.0
+    period_s: float = 8.0
+    amplitude: float = 0.7
+    burst_rate_qps: float = 0.0
+    burst_start_s: float = 0.0
+    burst_dur_s: float = 0.0
+
+    def rate(self, t: float) -> float:
+        """Instantaneous arrival rate (qps) at trace offset ``t``.
+
+        Raises:
+            ValueError: on an unknown ``kind``.
+        """
+        if self.kind == "poisson":
+            return self.rate_qps
+        if self.kind == "diurnal":
+            return max(0.0, self.rate_qps * (
+                1.0 + self.amplitude
+                * float(np.sin(2.0 * np.pi * t / self.period_s))))
+        if self.kind == "burst":
+            r = self.rate_qps
+            if self.burst_start_s <= t < self.burst_start_s \
+                    + self.burst_dur_s:
+                r += self.burst_rate_qps
+            return r
+        raise ValueError(f"unknown ArrivalModel kind {self.kind!r}")
+
+    def peak_rate(self) -> float:
+        """Upper bound on ``rate(t)`` — the thinning envelope."""
+        if self.kind == "diurnal":
+            return self.rate_qps * (1.0 + self.amplitude)
+        if self.kind == "burst":
+            return self.rate_qps + self.burst_rate_qps
+        return self.rate_qps
+
+    def sample_times(self, rng: np.random.Generator,
+                     duration_s: float) -> List[float]:
+        """Arrival offsets in [0, duration) via Lewis thinning.
+
+        Thinning draws a homogeneous Poisson stream at ``peak_rate()``
+        and keeps each point with probability ``rate(t)/peak`` — exact
+        for any bounded rate function, and fully determined by ``rng``.
+
+        Args:
+            rng: the trace's random stream.
+            duration_s: trace length in seconds.
+
+        Returns:
+            Sorted list of arrival offsets.
+        """
+        peak = max(self.peak_rate(), 1e-9)
+        times: List[float] = []
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / peak))
+            if t >= duration_s:
+                return times
+            if float(rng.random()) * peak <= self.rate(t):
+                times.append(t)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant in the traffic mix.
+
+    Args:
+        name: tenant id, stamped on every event it generates.
+        weight: relative share of arrivals (normalized over tenants).
+        slo_ms: per-request deadline; ``None`` = best-effort.
+        phrases: text templates the tenant draws prompts from — these
+            decide which route/backend its traffic lands on.
+        text_pool: number of distinct variants per phrase for non-unique
+            traffic (small pool => embedder-LRU hits + coalescing).
+        burst_weight: relative share *inside* a burst window (flash
+            crowds usually skew toward one tenant); ``None`` = reuse
+            ``weight``.
+    """
+    name: str
+    weight: float = 1.0
+    slo_ms: Optional[float] = None
+    phrases: Tuple[str, ...] = ()
+    text_pool: int = 16
+    burst_weight: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioProfile:
+    """One named, seeded, fully-deterministic workload scenario.
+
+    Args:
+        name: registry key (also the diagnostics/bench label).
+        description: one-line human summary.
+        duration_s: trace length in (replay wall-clock) seconds.
+        seed: RNG seed — same profile + seed => identical trace.
+        arrival: the arrival process.
+        prompt_bytes: prompt length distribution (bytes of text).
+        output_tokens: per-request ``max_new_tokens`` distribution.
+        tenants: traffic mix; weights are normalized.
+        unique_fraction: fraction of texts made globally unique
+            (1.0 = cache-hostile flood: every embed misses the LRU and
+            nothing coalesces).
+    """
+    name: str
+    description: str = ""
+    duration_s: float = 10.0
+    seed: int = 0
+    arrival: ArrivalModel = ArrivalModel()
+    prompt_bytes: LengthDist = LengthDist(kind="fixed", value=28,
+                                          minimum=8, maximum=60)
+    output_tokens: LengthDist = LengthDist(kind="fixed", value=4,
+                                           minimum=1, maximum=64)
+    tenants: Tuple[TenantSpec, ...] = ()
+    unique_fraction: float = 0.0
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "ScenarioProfile":
+        """Build a profile from a plain dict (strict keys, recursive).
+
+        Raises:
+            ValueError: on unknown keys anywhere in the tree.
+        """
+        return from_dict(cls, data)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form (JSON-safe) that ``from_dict`` round-trips."""
+        return dataclasses.asdict(self)
+
+    def scaled(self, *, duration_s: Optional[float] = None,
+               rate_scale: float = 1.0) -> "ScenarioProfile":
+        """A copy with the duration clamped and/or rates scaled —
+        how the CI smoke builds its miniatures.
+
+        Compressing the duration compresses the arrival model's time
+        shape by the same factor (burst window, diurnal period), so a
+        3-second flash_crowd miniature still contains its burst.
+
+        Args:
+            duration_s: new duration (``None`` keeps the original).
+            rate_scale: multiplier on baseline and burst rates.
+
+        Returns:
+            A new ``ScenarioProfile`` (the original is frozen).
+        """
+        new_dur = self.duration_s if duration_s is None \
+            else min(self.duration_s, duration_s)
+        tf = new_dur / self.duration_s if self.duration_s > 0 else 1.0
+        arr = dataclasses.replace(
+            self.arrival,
+            rate_qps=self.arrival.rate_qps * rate_scale,
+            burst_rate_qps=self.arrival.burst_rate_qps * rate_scale,
+            period_s=self.arrival.period_s * tf,
+            burst_start_s=self.arrival.burst_start_s * tf,
+            burst_dur_s=self.arrival.burst_dur_s * tf)
+        return dataclasses.replace(self, arrival=arr, duration_s=new_dur)
+
+    def miniature(self) -> "ScenarioProfile":
+        """The CI-sized version of this profile: same shape, a few
+        seconds long, rates halved — cheap enough that the
+        workload-smoke job replays every named profile per push."""
+        return self.scaled(duration_s=3.0, rate_scale=0.5)
+
+
+# ---------------------------------------------------------------------------
+# the named registry
+# ---------------------------------------------------------------------------
+
+# tenant phrase pools are phrased to land on the math/science routes of
+# the benchmark policy (benchmarks/bench_router.py WORKLOAD_DSL); a
+# custom policy just needs tenants whose phrases hit its own signals
+_MATH = ("solve the integral of x squared",
+         "derivative of the algebra equation",
+         "prove the matrix theorem with algebra")
+_SCI = ("quantum physics particle experiment",
+        "chemistry of the DNA molecule energy",
+        "biology experiment with particle energy")
+
+
+def _mk_profiles() -> Dict[str, ScenarioProfile]:
+    """Construct the built-in registry (one place to read every knob)."""
+    p: Dict[str, ScenarioProfile] = {}
+    p["steady"] = ScenarioProfile(
+        name="steady",
+        description="constant Poisson arrivals, uniform lengths — the "
+                    "baseline for determinism and hysteresis checks",
+        duration_s=8.0, seed=11,
+        arrival=ArrivalModel(kind="poisson", rate_qps=8.0),
+        output_tokens=LengthDist(kind="fixed", value=4, maximum=16),
+        tenants=(TenantSpec("math", weight=1.0, slo_ms=2000.0,
+                            phrases=_MATH),
+                 TenantSpec("science", weight=1.0, slo_ms=2000.0,
+                            phrases=_SCI)))
+    p["diurnal"] = ScenarioProfile(
+        name="diurnal",
+        description="sinusoidal day/night rate cycle (compressed)",
+        duration_s=12.0, seed=12,
+        arrival=ArrivalModel(kind="diurnal", rate_qps=8.0,
+                             period_s=6.0, amplitude=0.8),
+        output_tokens=LengthDist(kind="lognormal", value=4, sigma=0.6,
+                                 maximum=24),
+        tenants=(TenantSpec("math", weight=1.0, slo_ms=2500.0,
+                            phrases=_MATH),
+                 TenantSpec("science", weight=1.0, slo_ms=2500.0,
+                            phrases=_SCI)))
+    p["flash_crowd"] = ScenarioProfile(
+        name="flash_crowd",
+        description="low base rate, then a sudden burst window skewed "
+                    "to one tenant — the autoscaling A/B scenario",
+        duration_s=10.0, seed=13,
+        arrival=ArrivalModel(kind="burst", rate_qps=2.0,
+                             burst_rate_qps=40.0, burst_start_s=2.5,
+                             burst_dur_s=3.0),
+        output_tokens=LengthDist(kind="fixed", value=6, maximum=16),
+        tenants=(TenantSpec("math", weight=1.0, burst_weight=4.0,
+                            slo_ms=600.0, phrases=_MATH),
+                 TenantSpec("science", weight=1.0, burst_weight=1.0,
+                            slo_ms=600.0, phrases=_SCI)))
+    p["heavy_tail"] = ScenarioProfile(
+        name="heavy_tail",
+        description="lognormal prompt bytes + Pareto output tokens: a "
+                    "few requests dominate service time",
+        duration_s=10.0, seed=14,
+        arrival=ArrivalModel(kind="poisson", rate_qps=5.0),
+        prompt_bytes=LengthDist(kind="lognormal", value=24, sigma=0.8,
+                                minimum=8, maximum=60),
+        output_tokens=LengthDist(kind="pareto", value=2, alpha=1.4,
+                                 minimum=2, maximum=48),
+        tenants=(TenantSpec("math", weight=1.0, slo_ms=4000.0,
+                            phrases=_MATH),
+                 TenantSpec("science", weight=1.0, slo_ms=4000.0,
+                            phrases=_SCI)))
+    p["multi_tenant"] = ScenarioProfile(
+        name="multi_tenant",
+        description="premium tight-SLO tenant vs free best-effort bulk "
+                    "vs a mixed mid tier",
+        duration_s=10.0, seed=15,
+        arrival=ArrivalModel(kind="poisson", rate_qps=9.0),
+        output_tokens=LengthDist(kind="lognormal", value=4, sigma=0.5,
+                                 maximum=16),
+        tenants=(TenantSpec("premium", weight=1.0, slo_ms=800.0,
+                            phrases=_MATH, text_pool=8),
+                 TenantSpec("free", weight=3.0, slo_ms=None,
+                            phrases=_SCI, text_pool=4),
+                 TenantSpec("mid", weight=2.0, slo_ms=2500.0,
+                            phrases=_MATH + _SCI)))
+    p["unique_flood"] = ScenarioProfile(
+        name="unique_flood",
+        description="cache-hostile: every text globally unique — "
+                    "defeats the embed LRU and in-flight coalescing",
+        duration_s=8.0, seed=16,
+        arrival=ArrivalModel(kind="poisson", rate_qps=12.0),
+        output_tokens=LengthDist(kind="fixed", value=2, maximum=8),
+        unique_fraction=1.0,
+        tenants=(TenantSpec("math", weight=1.0, slo_ms=2000.0,
+                            phrases=_MATH),
+                 TenantSpec("science", weight=1.0, slo_ms=2000.0,
+                            phrases=_SCI)))
+    return p
+
+
+PROFILES: Dict[str, ScenarioProfile] = _mk_profiles()
+
+
+def profile_names() -> List[str]:
+    """The named registry's keys, sorted (stable CLI/CI order)."""
+    return sorted(PROFILES)
+
+
+def get_profile(name: str) -> ScenarioProfile:
+    """Look up a named profile.
+
+    Args:
+        name: a key from ``profile_names()``.
+
+    Returns:
+        The registered (frozen) ``ScenarioProfile``.
+
+    Raises:
+        KeyError: listing the valid names, when ``name`` is unknown.
+    """
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown profile {name!r}; choose from "
+                       f"{profile_names()}") from None

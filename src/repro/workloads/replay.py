@@ -1,0 +1,176 @@
+"""Replay driver: run a scenario trace through a live ``RouterService``.
+
+``replay_trace`` is the harness's only entry point into the serving
+tier, and it goes through the public production path — batched
+``RouterService.enqueue`` for due arrivals, ``serve_step`` for decode —
+so whatever serving mode the service was built with (whole-batch or
+slot scheduler, preempt on/off, faults on/off) is what gets measured.
+The loop runs in real time on the service's own clock: arrivals fire at
+their trace offsets, SLO deadlines are real deadlines, and the
+optional ``DiagnosticsManager`` / ``SloAutoscaler`` / admission gate
+observe once per serve step, exactly like a production sidecar would.
+
+Serve-step exceptions are contained and counted (``crashed_steps``) so
+a chaos replay reports breakage instead of dying — the workload-smoke
+CI job gates on that count being zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.workloads.generator import TraceEvent, generate_trace
+from repro.workloads.profiles import ScenarioProfile
+
+__all__ = ["ReplayReport", "replay_trace"]
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    """What one replay run did, end to end.
+
+    Args:
+        profile: scenario name.
+        events: trace length.
+        enqueued: arrivals admitted into the service.
+        rejected: arrivals shed by the admission controller.
+        completed: requests that reached a terminal state.
+        crashed_steps: serve steps that raised (must be 0 in CI).
+        steps: serve steps taken.
+        wall_s: wall-clock duration of the replay.
+        summary: ``DiagnosticsManager.summary()`` (empty dict when no
+            manager was attached).
+        autoscale: ``SloAutoscaler.summary()`` (empty dict when off).
+    """
+    profile: str
+    events: int
+    enqueued: int
+    rejected: int
+    completed: int
+    crashed_steps: int
+    steps: int
+    wall_s: float
+    summary: Dict[str, Any]
+    autoscale: Dict[str, Any]
+
+    def to_json(self) -> Dict[str, Any]:
+        """Plain-dict view for the bench JSON."""
+        return dataclasses.asdict(self)
+
+
+def _due_groups(due: List[TraceEvent]):
+    """Group due arrivals by (max_new_tokens, slo_ms) so each group is
+    one batched ``enqueue`` call (one fused routing evaluation)."""
+    groups: Dict[tuple, List[TraceEvent]] = {}
+    for ev in due:
+        groups.setdefault((ev.max_new_tokens, ev.slo_ms), []).append(ev)
+    return groups.items()
+
+
+def replay_trace(svc, profile: ScenarioProfile, *,
+                 events: Optional[List[TraceEvent]] = None,
+                 diagnostics=None, autoscaler=None, admission=None,
+                 max_steps: Optional[int] = None,
+                 settle_steps: int = 2000,
+                 poll_s: float = 0.001) -> ReplayReport:
+    """Drive ``profile``'s trace through ``svc`` in real time.
+
+    Args:
+        svc: a ``RouterService`` (any serving mode).
+        profile: the scenario (used for its name/duration and, when
+            ``events`` is None, to generate the trace).
+        events: pre-generated trace override (lets A/B arms share one
+            trace object).
+        diagnostics: optional ``DiagnosticsManager``; receives one
+            ``observe_step`` per serve step and one ``on_request_done``
+            per finished request.
+        autoscaler: optional ``SloAutoscaler``; ``observe``d once per
+            serve step.
+        admission: optional ``AdmissionController`` gating arrivals;
+            shed arrivals are reported (and counted as SLO misses in
+            the diagnostics when they carried deadlines).
+        max_steps: hard cap on serve steps (None = until drained).
+        settle_steps: post-trace drain budget — serve steps allowed
+            after the last arrival before the run is cut off.
+        poll_s: idle sleep while waiting for the next arrival.
+
+    Returns:
+        A ``ReplayReport``; the service is left constructed (callers
+        can inspect queues/stats afterwards).
+    """
+    events = generate_trace(profile) if events is None else events
+    clock = svc.cbatcher.clock
+    t0 = clock()
+    if diagnostics is not None:
+        diagnostics.start(now=t0)
+    tracked: List[Any] = []        # admitted, not-yet-terminal requests
+    i = 0                          # next trace event to admit
+    enqueued = rejected = completed = crashed = steps = 0
+    drain_budget = settle_steps
+
+    while True:
+        now = clock()
+        rel = now - t0
+        # ---- admit everything due -------------------------------------------
+        due = []
+        while i < len(events) and events[i].t_s <= rel:
+            due.append(events[i])
+            i += 1
+        for (mnt, slo_ms), group in _due_groups(due):
+            if autoscaler is not None:
+                autoscaler.note_slo(slo_ms)
+            if admission is not None and not admission.try_admit(
+                    len(group), now):
+                rejected += len(group)
+                if diagnostics is not None:
+                    diagnostics.record_reject(len(group),
+                                              slo=slo_ms is not None)
+                continue
+            reqs = svc.enqueue([ev.text for ev in group],
+                               max_new_tokens=mnt, slo_ms=slo_ms, now=now)
+            enqueued += len(reqs)
+            tracked.extend(r for r in reqs if not r.done)
+            completed += sum(r.done for r in reqs)   # plugin/reject paths
+        # ---- one serve step ---------------------------------------------------
+        stepped = False
+        if svc._has_pending_work():
+            steps += 1
+            stepped = True
+            try:
+                completed += svc.serve_step(now=now)
+            except Exception:  # noqa: BLE001 — report, don't die
+                crashed += 1
+        if stepped:
+            done_now = [r for r in tracked if r.done]
+            if done_now:
+                tracked = [r for r in tracked if not r.done]
+                if diagnostics is not None:
+                    for r in done_now:
+                        diagnostics.on_request_done(r)
+            if autoscaler is not None:
+                autoscaler.observe(clock())
+            if diagnostics is not None:
+                diagnostics.observe_step(steps, svc.telemetry(),
+                                         completed=len(done_now),
+                                         now=clock())
+        # ---- termination / pacing --------------------------------------------
+        if max_steps is not None and steps >= max_steps:
+            break
+        if i >= len(events):
+            if not svc._has_pending_work():
+                break
+            drain_budget -= 1
+            if drain_budget <= 0:
+                break
+            continue
+        if not stepped:
+            # idle before the next arrival: sleep toward it
+            time.sleep(min(poll_s, max(0.0, events[i].t_s - (clock() - t0))))
+
+    return ReplayReport(
+        profile=profile.name, events=len(events), enqueued=enqueued,
+        rejected=rejected, completed=completed, crashed_steps=crashed,
+        steps=steps, wall_s=clock() - t0,
+        summary=diagnostics.summary() if diagnostics is not None else {},
+        autoscale=autoscaler.summary() if autoscaler is not None else {})
