@@ -261,7 +261,90 @@ def check_parity(shapes, atol: float = 1e-5) -> list:
     return failures
 
 
+def check_ivf_parity(shapes, atol: float = 1e-5) -> list:
+    """Two-stage IVF routing vs the flat ``fused_route`` with
+    ``nprobe = n_slabs`` — the hard parity oracle: probing every coarse
+    cluster makes the candidate set the whole table, so decisions must
+    be *bitwise* identical (fired/win) across store precisions
+    (f32 / int8 / packed int4) and both lowerings (jnp scan + Pallas
+    coarse_topk/gather).  -> list of mismatch descriptions."""
+    from repro.signals.engine import quantize_centroids
+    from repro.signals.ivf import build_ivf_tables
+    failures = []
+    names = ("raw", "scores", "fired", "win", "wscore")
+    for b, n in shapes:
+        args, gid = _fused_route_inputs(b, n, seed=b + n)
+        x, c, cls, scale, thr, grouped, member, default = args
+        meta = (cls, scale, thr, grouped, member, default)
+        for precision in ("f32", "int8", "int4"):
+            store, qscale = quantize_centroids(c, precision)
+            ivf = build_ivf_tables(c, cls, scale, thr, grouped, member,
+                                   default, precision=precision)
+            ns = ivf["heads"].shape[0]
+            want = ref.fused_route_ref(x, store, *meta, qscale=qscale)
+            for use_kernel in (False, True):
+                got = ops.ivf_route(x, *meta, ivf, nprobe=ns,
+                                    use_kernel=use_kernel)
+                for name, a, w in zip(names, got, want):
+                    a, w = np.asarray(a), np.asarray(w)
+                    ok = ((a == w).all()
+                          if a.dtype in (np.bool_, np.int32)
+                          else np.allclose(a, w, atol=atol))
+                    if not ok:
+                        failures.append(
+                            f"ivf_route b={b} n={n} {precision} "
+                            f"kernel={use_kernel} output={name}")
+    return failures
+
+
+def smoke_ivf_scale(results: dict, *, n: int = 100_000) -> list:
+    """100k-route cache-miss smoke: bind a synthetic n-route table
+    (reduced k-means iterations — CI smokes gate correctness and
+    plumbing, not clustering quality), run the two-stage jnp path on
+    fresh queries, and record bind/query timing plus recall@1 vs the
+    flat table on one batch.  The scale *matrix* (flat-vs-IVF ratio
+    sweep) lives in bench_router --scale."""
+    from benchmarks.bench_router import (SCALE_B, SCALE_D, _scale_queries,
+                                         _scale_table)
+    from repro.kernels import ivf as kivf
+    from repro.signals.engine import quantize_centroids
+    from repro.signals.ivf import build_ivf_tables, default_nprobe
+    d, b = SCALE_D, SCALE_B
+    centers, table = _scale_table(n, d, n)
+    c, cls, scale, thr, grp, member, default = table
+    store, qscale = quantize_centroids(c, "int8")
+    t0 = time.perf_counter()
+    ivf = build_ivf_tables(c, cls, scale, thr, grp, member, default,
+                           precision="int8", iters=2)
+    bind_s = time.perf_counter() - t0
+    ns = ivf["heads"].shape[0]
+    nprobe = default_nprobe(ns)
+    meta = [jnp.asarray(v) for v in (cls, scale, thr, grp, member,
+                                     default)]
+    jivf = {k: jnp.asarray(v) for k, v in ivf.items()}
+    rng = np.random.default_rng(0)
+
+    def fresh(nb: int = b):
+        return jnp.asarray(_scale_queries(centers, nb, rng))
+
+    ivf_fn = lambda x: kivf.ivf_route(x, *meta, jivf, nprobe=nprobe)
+    us = _time(lambda: jax.block_until_ready(ivf_fn(fresh())[2]),
+               reps=4, budget_s=20.0)
+    x_eval = fresh(256)
+    wf = np.asarray(kivf.flat_route(
+        x_eval, jnp.asarray(store), *meta, qscale=jnp.asarray(qscale))[3])
+    wi = np.asarray(ivf_fn(x_eval)[3])
+    recall = float((wf == wi).mean())
+    results[f"ivf_scale_n{n}/bind_s"] = bind_s
+    results[f"ivf_scale_n{n}/us_per_batch"] = us
+    results[f"ivf_scale_n{n}/recall_at_1"] = recall
+    return [f"signal_pipeline/ivf_scale_n{n},{us:.0f},"
+            f"bind_s={bind_s:.1f},nprobe={nprobe}/{ns},"
+            f"recall@1={recall:.3f}"]
+
+
 SMOKE_SHAPES = [(1, 8), (16, 33), (64, 128), (7, 130)]
+IVF_SMOKE_SHAPES = [(16, 33), (64, 128), (7, 130)]
 FULL_NORM_SHAPES = [(b, n) for b in (1, 16, 256, 4096)
                     for n in (4, 32, 256)]
 FULL_FUSED_SHAPES = [(b, n) for b in (16, 256, 1024)
@@ -275,19 +358,23 @@ def main(argv=None):
     lines = []
     if smoke:
         failures = check_parity(SMOKE_SHAPES)
+        failures += check_ivf_parity(IVF_SMOKE_SHAPES)
         for f in failures:
             print(f"signal_pipeline/PARITY_MISMATCH,0,{f}",
                   file=sys.stderr)
         lines += bench_normalization(results, shapes=[(16, 33)])
         lines += bench_fused_kernel(results, shapes=[(16, 33), (7, 130)])
+        lines += smoke_ivf_scale(results)
         results["parity_failures"] = len(failures)
         atomic_write_json(SMOKE_JSON_PATH, {
             "unit": "us_per_call", "mode": "smoke",
-            "parity_shapes": SMOKE_SHAPES, "results": results})
+            "parity_shapes": SMOKE_SHAPES,
+            "ivf_parity_shapes": IVF_SMOKE_SHAPES, "results": results})
         lines.append(f"signal_pipeline/json,0,{SMOKE_JSON_PATH.name}")
         lines.append(f"signal_pipeline/parity,0,"
                      f"{'FAIL' if failures else 'ok'}"
-                     f"({len(SMOKE_SHAPES)} shapes)")
+                     f"({len(SMOKE_SHAPES) + len(IVF_SMOKE_SHAPES)} "
+                     f"shapes)")
         for ln in lines:
             print(ln)
         if failures:

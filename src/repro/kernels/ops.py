@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import decode_gqa as _dg
+from repro.kernels import ivf as _ivf
 from repro.kernels import ref as _ref
 from repro.kernels import voronoi as _vor
 from repro.kernels import wkv6 as _wkv
@@ -65,62 +66,110 @@ def grouped_voronoi(sims, inv_tau, member, *, interpret=None,
 # own buffers, the metadata rows, and double-buffered pipelining
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
+# route tables at or past this size auto-upgrade to the two-stage IVF
+# path (coarse heads + gathered slabs): by sqrt scaling the two-stage
+# working set is ~2·sqrt(N)·slab_k columns, so the crossover sits well
+# below the flat kernels' VMEM ceiling
+IVF_AUTO_MIN_ROUTES = 4096
+
+
+def precision_centroid_bytes(precision: str) -> float:
+    """Bytes per centroid *element* as stored: f32 4, bf16 2, int8 1,
+    packed int4 0.5 (two columns per byte).  Float so the int4 store is
+    accounted at its true footprint — feed this to the VMEM estimators
+    instead of assuming an f32 store."""
+    return {"f32": 4.0, "bf16": 2.0, "int8": 1.0, "int4": 0.5}[precision]
+
 
 def fused_route_vmem_bytes(n: int, d: int, g: int = 1, *,
                            block_b: int = 128, block_n: int = 128,
-                           centroid_bytes: int = 4) -> int:
+                           centroid_bytes: float = 4) -> int:
     """Resident-VMEM estimate for one grid step of the fully-resident
-    ``fused_route`` kernel: the whole (Npad, D) centroid store, one
-    (bb, D) query block, the (bb, Npad) similarity/score buffers, and
-    the column metadata."""
-    npad = n + ((-n) % max(1, min(block_n, max(n, 1))))
+    ``fused_route`` kernel: the whole (Npad, D) centroid store *at its
+    quantized width*, the f32 dequantization tile (the kernel casts one
+    (block_n, D) slice per fori_loop step), one (bb, D) query block,
+    the (bb, Npad) similarity/score buffers, and the column metadata."""
+    bn = max(1, min(block_n, max(n, 1)))
+    npad = n + ((-n) % bn)
     gp = max(g, 1)
-    return (npad * d * centroid_bytes            # resident centroids
-            + block_b * d * 4                    # query block
-            + 4 * block_b * npad * 4             # sims acc + raw/scores/fired
-            + 2 * block_b * gp * 4               # winners
-            + (5 + 2 * gp) * npad * 4)           # metadata rows + partition
+    return int(npad * d * centroid_bytes         # resident quantized store
+               + min(bn, npad) * d * 4           # per-tile f32 dequant
+               + block_b * d * 4                 # query block
+               + 4 * block_b * npad * 4          # sims acc + raw/scores/fired
+               + 2 * block_b * gp * 4            # winners
+               + (5 + 2 * gp) * npad * 4)        # metadata rows + partition
 
 
 def fused_route_dtiled_vmem_bytes(n: int, d: int, g: int = 1, *,
                                   block_b: int = 128, block_d: int = 256,
-                                  centroid_bytes: int = 4) -> int:
+                                  centroid_bytes: float = 4) -> int:
     """Resident-VMEM estimate for one grid step of the D-tiled variant:
-    only an (N, block_d) centroid slab + the (bb, N) accumulator."""
+    an (N, block_d) centroid slab (plus its f32 cast when the store is
+    quantized) + the (bb, N) accumulator."""
     bd = max(1, min(block_d, max(d, 1)))
     gp = max(g, 1)
-    return (n * bd * centroid_bytes              # streamed centroid slab
-            + block_b * bd * 4                   # query slab
-            + 4 * block_b * n * 4                # scratch acc + outputs
-            + 2 * block_b * gp * 4
-            + (5 + 2 * gp) * n * 4)
+    cast = n * bd * 4 if centroid_bytes < 4 else 0
+    return int(n * bd * centroid_bytes           # streamed centroid slab
+               + cast                            # f32 cast of the slab
+               + block_b * bd * 4                # query slab
+               + 4 * block_b * n * 4             # scratch acc + outputs
+               + 2 * block_b * gp * 4
+               + (5 + 2 * gp) * n * 4)
 
 
 def select_fused_variant(n: int, d: int, g: int = 1, *,
                          block_b: int = 128, block_n: int = 128,
-                         block_d: int = 256, centroid_bytes: int = 4,
+                         block_d: int = 256, centroid_bytes: float = 4,
                          budget_bytes: int | None = None) -> str:
     """VMEM-budget auto-selection between the fully-resident kernel,
     the D-tiled streaming variant, and the jnp fallback:
     -> ``"fused"`` | ``"fused_dtiled"`` | ``"jnp"``.
 
-    The resident kernel wins whenever the whole centroid store fits the
-    budget (one HBM read per batch, no accumulator re-walks); past the
-    budget the D-tiled variant streams D-slabs so only its (bb, N)
-    accumulator and output buffers must stay resident — and when even
-    those exceed the budget (very wide route tables), the jnp lowering
-    is the only one that runs, so the selection degrades to it instead
-    of picking a kernel that cannot compile."""
+    ``centroid_bytes`` is the *stored* width (see
+    ``precision_centroid_bytes``) — a 3 MB int8 store of an N×D table
+    whose f32 image would be 12 MB still runs fully resident.  The
+    resident kernel wins whenever the quantized store fits the budget
+    (one HBM read per batch, no accumulator re-walks); past the budget
+    the D-tiled variant streams D-slabs so only its (bb, N) accumulator
+    and output buffers must stay resident — except for packed-int4
+    stores (centroid_bytes < 1), whose nibble pairs straddle D-chunk
+    boundaries and cannot be D-tiled, so those degrade straight to the
+    jnp lowering.  When even the D-tiled buffers exceed the budget
+    (very wide route tables), the jnp lowering is the only one that
+    runs, so the selection degrades to it instead of picking a kernel
+    that cannot compile."""
     budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
     resident = fused_route_vmem_bytes(
         n, d, g, block_b=block_b, block_n=block_n,
         centroid_bytes=centroid_bytes)
     if resident <= budget:
         return "fused"
+    if centroid_bytes < 1:
+        return "jnp"
     dtiled = fused_route_dtiled_vmem_bytes(
         n, d, g, block_b=block_b, block_d=block_d,
         centroid_bytes=centroid_bytes)
     return "fused_dtiled" if dtiled <= budget else "jnp"
+
+
+def select_route_variant(n: int, d: int, g: int = 1, *,
+                         precision: str = "f32",
+                         block_b: int = 128, block_n: int = 128,
+                         block_d: int = 256,
+                         budget_bytes: int | None = None) -> str:
+    """Top-level routing-variant selection by table size + VMEM budget:
+    -> ``"ivf"`` | ``"fused"`` | ``"fused_dtiled"`` | ``"jnp"``.
+
+    Tables at or past ``IVF_AUTO_MIN_ROUTES`` go two-stage (the flat
+    kernels' per-batch cost is linear in N; the IVF path's is
+    ~sqrt(N)); smaller tables fall through to the flat VMEM-budget
+    selection, which is cheaper than clustering for tables that fit."""
+    if n >= IVF_AUTO_MIN_ROUTES:
+        return "ivf"
+    return select_fused_variant(
+        n, d, g, block_b=block_b, block_n=block_n, block_d=block_d,
+        centroid_bytes=precision_centroid_bytes(precision),
+        budget_bytes=budget_bytes)
 
 
 def fused_route(x, centroids, classifier_mask, col_scale, col_thr,
@@ -158,6 +207,38 @@ def fused_route_dtiled(x, centroids, classifier_mask, col_scale, col_thr,
         x, centroids, classifier_mask, col_scale, col_thr, grouped_mask,
         member, default_onehot, qscale=qscale, block_b=block_b,
         block_d=block_d, interpret=interp)
+
+
+def coarse_topk(x, heads, nprobe, *, interpret=None, use_ref=False,
+                block_b: int = 128):
+    """Stage-1 coarse Voronoi selection: x (B, D) × heads (S, D) ->
+    (values, indices) of the top-``nprobe`` slab heads per query."""
+    if use_ref:
+        return _ref.coarse_topk_ref(x, heads, nprobe)
+    interp = _default_interpret() if interpret is None else interpret
+    return _vor.coarse_topk(x, heads, nprobe, block_b=block_b,
+                            interpret=interp)
+
+
+def ivf_route(x, classifier_mask, col_scale, col_thr, grouped_mask,
+              member, default_onehot, ivf, *, nprobe, interpret=None,
+              use_ref=False, use_kernel=False):
+    """Two-stage IVF routing over a ``signals/ivf.build_ivf_tables``
+    bundle: coarse top-``nprobe`` slab heads, then grouped
+    softmax/thresholds/winners over only the probed slabs' columns.
+    Same output contract as ``fused_route``; with ``nprobe = n_slabs``
+    it is decision-identical to it.  ``use_kernel`` picks the Pallas
+    coarse+gather lowering instead of the jnp one (both exist at every
+    precision; the jnp path is the CPU/large-N default)."""
+    if use_ref:
+        return _ref.ivf_route_ref(x, classifier_mask, col_scale,
+                                  col_thr, grouped_mask, member,
+                                  default_onehot, ivf, nprobe=nprobe)
+    interp = _default_interpret() if interpret is None else interpret
+    return _ivf.ivf_route(x, classifier_mask, col_scale, col_thr,
+                          grouped_mask, member, default_onehot, ivf,
+                          nprobe=nprobe, use_kernel=use_kernel,
+                          interpret=interp)
 
 
 def decode_gqa(q, k, v, n_valid, *, interpret=None, use_ref=False,

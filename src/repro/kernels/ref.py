@@ -34,12 +34,70 @@ def grouped_voronoi_ref(sims, inv_tau, group_id):
     return out
 
 
+def _dequant_store_ref(centroids, d):
+    """Quantized store -> (N, d) f32 rows (numpy).  uint8 stores are
+    the packed-int4 nibble-pair format from signals/ivf."""
+    import numpy as np
+    c = np.asarray(centroids)
+    if c.dtype == np.uint8:
+        from repro.signals.ivf import unpack_int4
+        return unpack_int4(c, d)
+    return c.astype(np.float32)
+
+
+def _route_tail_ref(sims, cls, scale, thr, grouped, m, d):
+    """Numpy mirror of ``voronoi._route_tail`` (post-GEMM routing
+    semantics), one group at a time.  Tolerates the two-stage path's
+    ``_NEG`` pruning sentinel: overflow/NaN from fully-pruned groups is
+    suppressed and resolves to fired=False, as in the jnp lowering.
+    """
+    import numpy as np
+    cls = np.asarray(cls).astype(bool)
+    scale = np.asarray(scale, np.float32)
+    thr = np.asarray(thr, np.float32)
+    grouped = np.asarray(grouped).astype(bool)
+    m = np.asarray(m, np.float32)
+    d = np.asarray(d, np.float32)
+    g = m.shape[0]
+    b = sims.shape[0]
+    with np.errstate(over="ignore", invalid="ignore", under="ignore"):
+        raw = np.where(cls[None, :], (sims + 1.0) * 0.5, sims)
+        z = sims * scale[None, :]
+        scores = raw.copy()
+        for gi in range(g):
+            cols = m[gi] > 0
+            if not cols.any():
+                continue
+            zg = z[:, cols]
+            zg = zg - zg.max(axis=-1, keepdims=True)
+            e = np.exp(zg)
+            scores[:, cols] = e / e.sum(axis=-1, keepdims=True)
+        fired = np.where(grouped[None, :], scores > thr[None, :],
+                         raw >= thr[None, :])
+        win = np.zeros((b, g), np.int32)
+        wscore = np.full((b, g), -1.0, np.float32)
+        for gi in range(g):
+            cols = np.where(m[gi] > 0)[0]
+            if cols.size:
+                none = ~fired[:, cols].any(axis=1)
+                dcols = np.where(d[gi] > 0)[0]
+                if dcols.size:
+                    fired[none[:, None]
+                          & (np.arange(fired.shape[1])[None, :]
+                             == dcols[0])] = True
+                sg = scores[:, cols]
+                win[:, gi] = cols[np.argmax(sg, axis=-1)]
+                wscore[:, gi] = sg.max(axis=-1)
+    return raw, scores, fired, win, wscore
+
+
 def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
                     grouped_mask, member, default_onehot, *,
                     qscale=None, block_d=None):
     """Oracle for the fully-fused routing kernels, one group at a time.
 
-    x: (B, D); centroids: (N, D) (f32 or a bf16/int8 quantized store);
+    x: (B, D); centroids: (N, D) (f32, a bf16/int8 quantized store, or
+    the packed-int4 uint8 format with ceil(D/2) columns);
     classifier_mask/col_scale/col_thr/grouped_mask: (N,);
     member/default_onehot: (G, N) one-hot; qscale: optional (N,)
     per-column dequantization scale on the similarities; block_d:
@@ -51,14 +109,7 @@ def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
     """
     import numpy as np
     x = np.asarray(x, np.float32)
-    c = np.asarray(centroids).astype(np.float32)
-    cls = np.asarray(classifier_mask).astype(bool)
-    scale = np.asarray(col_scale, np.float32)
-    thr = np.asarray(col_thr, np.float32)
-    grouped = np.asarray(grouped_mask).astype(bool)
-    m = np.asarray(member, np.float32)
-    d = np.asarray(default_onehot, np.float32)
-    g = m.shape[0]
+    c = _dequant_store_ref(centroids, x.shape[1])
     b = x.shape[0]
 
     if block_d is None:
@@ -69,32 +120,71 @@ def fused_route_ref(x, centroids, classifier_mask, col_scale, col_thr,
             sims += x[:, lo: lo + block_d] @ c[:, lo: lo + block_d].T
     if qscale is not None:
         sims = sims * np.asarray(qscale, np.float32)[None, :]
-    raw = np.where(cls[None, :], (sims + 1.0) * 0.5, sims)
-    z = sims * scale[None, :]
-    scores = raw.copy()
-    for gi in range(g):
-        cols = m[gi] > 0
-        if not cols.any():
-            continue
-        zg = z[:, cols]
-        zg = zg - zg.max(axis=-1, keepdims=True)
-        e = np.exp(zg)
-        scores[:, cols] = e / e.sum(axis=-1, keepdims=True)
-    fired = np.where(grouped[None, :], scores > thr[None, :],
-                     raw >= thr[None, :])
-    win = np.zeros((b, g), np.int32)
-    wscore = np.full((b, g), -1.0, np.float32)
-    for gi in range(g):
-        cols = np.where(m[gi] > 0)[0]
-        if cols.size:
-            none = ~fired[:, cols].any(axis=1)
-            dcols = np.where(d[gi] > 0)[0]
-            if dcols.size:
-                fired[none[:, None] & (np.arange(fired.shape[1])[None, :]
-                                       == dcols[0])] = True
-            sg = scores[:, cols]
-            win[:, gi] = cols[np.argmax(sg, axis=-1)]
-            wscore[:, gi] = sg.max(axis=-1)
+    return _route_tail_ref(sims, classifier_mask, col_scale, col_thr,
+                           grouped_mask, member, default_onehot)
+
+
+def coarse_topk_ref(x, heads, nprobe):
+    """Oracle for ``voronoi.coarse_topk``: stable descending sort of
+    x @ headsᵀ (ties broken lower-index-first, as in jax.lax.top_k).
+    -> (values (B, nprobe) f32, indices (B, nprobe) int32)."""
+    import numpy as np
+    hs = np.asarray(x, np.float32) @ np.asarray(heads, np.float32).T
+    idx = np.argsort(-hs, axis=1, kind="stable")[:, :nprobe]
+    vals = np.take_along_axis(hs, idx, axis=1)
+    return vals.astype(np.float32), idx.astype(np.int32)
+
+
+def ivf_route_ref(x, classifier_mask, col_scale, col_thr, grouped_mask,
+                  member, default_onehot, ivf, *, nprobe):
+    """Oracle for ``kernels/ivf.ivf_route``: coarse top-nprobe slab
+    selection, restricted softmax over the probed slabs' columns (the
+    ``_NEG`` pruning sentinel), candidate-masked outputs and full-width
+    default fallback — same contract as the jnp/Pallas lowerings.
+    """
+    import numpy as np
+    neg = np.float32(-3e38)
+    x = np.asarray(x, np.float32)
+    b, d = x.shape
+    n = np.asarray(classifier_mask).shape[-1]
+    heads = np.asarray(ivf["heads"], np.float32)
+    s = heads.shape[0]
+    slab_cols = np.asarray(ivf["slab_cols"])
+    slab_k = slab_cols.shape[0] // s
+    nprobe = int(max(1, min(int(nprobe), s)))
+    _, pidx = coarse_topk_ref(x, heads, nprobe)               # (B, np)
+
+    deq = _dequant_store_ref(ivf["store"], d)                 # (Ns, D)
+    sims_s = (x @ deq.T) * np.asarray(
+        ivf["qscale_s"], np.float32).reshape(1, -1)           # (B, Ns)
+
+    cols3 = slab_cols.reshape(s, slab_k)
+    cols = cols3[pidx].reshape(b, nprobe * slab_k)            # (B, Kc)
+    sims_c = sims_s.reshape(b, s, slab_k)[
+        np.arange(b)[:, None], pidx].reshape(b, nprobe * slab_k)
+    colsafe = np.where(cols < 0, n, cols)
+    brow = np.arange(b)[:, None]
+    sims_full = np.full((b, n + 1), neg, np.float32)
+    sims_full[brow, colsafe] = sims_c
+    sims_full = sims_full[:, :n]
+    cand = np.zeros((b, n + 1), bool)
+    cand[brow, colsafe] = cols >= 0
+    cand = cand[:, :n]
+
+    m = np.asarray(member, np.float32)
+    dflt = np.asarray(default_onehot, np.float32)
+    raw, scores, fired, win, wscore = _route_tail_ref(
+        sims_full, classifier_mask, col_scale, col_thr, grouped_mask,
+        m, dflt)
+    raw = np.where(cand, raw, 0.0)
+    scores = np.where(cand, scores, 0.0)
+    fired = fired & cand
+    if m.shape[0]:
+        group_any = (fired.astype(np.float32) @ m.T) > 0.0
+        fired = fired | (((~group_any).astype(np.float32) @ dflt) > 0.0)
+    has_cand = (cand.astype(np.float32) @ m.T) > 0.0
+    win = np.where(has_cand, win, 0).astype(np.int32)
+    wscore = np.where(has_cand, wscore, np.float32(-1.0))
     return raw, scores, fired, win, wscore
 
 

@@ -109,6 +109,34 @@ def voronoi_scores(x: jnp.ndarray, centroids: jnp.ndarray,
 _NEG = -3e38                   # finite -inf stand-in: 0 * _NEG == 0, not nan
 
 
+def unpack_int4(packed: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(N, P) uint8 packed int4 pairs -> (N, d) f32 in [-8, 7].
+
+    Column 2j lives in the low nibble of byte j, column 2j+1 in the
+    high nibble, two's-complement (signals/ivf.pack_int4 is the
+    inverse).  Nibble ops are VPU-elementwise, so in-kernel unpack adds
+    no MXU work — the store stays half an int8 in VMEM/HBM.
+    """
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    lo = lo - jnp.where(lo > 7, 16, 0)
+    hi = (p >> 4) & 0xF
+    hi = hi - jnp.where(hi > 7, 16, 0)
+    out = jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)
+    return out[:, :d].astype(jnp.float32)
+
+
+def _dequant_tile(cj: jnp.ndarray, unpack_d: int) -> jnp.ndarray:
+    """Per-tile dequantization of a centroid-store slice: int4 unpack
+    when ``unpack_d`` is set (the packed column count halves), plain
+    f32 cast otherwise.  Casting per tile — not the whole resident
+    store — is what keeps a quantized store's VMEM cost at its own
+    dtype plus ONE (block, D) f32 tile (kernels/ops accounting)."""
+    if unpack_d:
+        return unpack_int4(cj, unpack_d)
+    return cj.astype(jnp.float32)
+
+
 def _softmax_by_group(z: jnp.ndarray, m: jnp.ndarray, *,
                       reduce_max=None, reduce_sum=None) -> jnp.ndarray:
     """Segment-masked, numerically stable softmax over every group at
@@ -274,7 +302,7 @@ def _route_tail(sims, cls, scale, thr, grouped_row, member, default, *,
 def _fused_route_kernel(x_ref, c_ref, qscale_ref, cls_ref, scale_ref,
                         thr_ref, grouped_ref, member_ref, default_ref,
                         raw_ref, scores_ref, fired_ref, win_ref,
-                        wscore_ref, *, block_n: int):
+                        wscore_ref, *, block_n: int, unpack_d: int = 0):
     """The whole signal layer for one query block, single launch.
 
     x_ref:       (bb, D)   unit query embeddings
@@ -300,12 +328,14 @@ def _fused_route_kernel(x_ref, c_ref, qscale_ref, cls_ref, scale_ref,
     """
     f32 = jnp.float32
     x = x_ref[...].astype(f32)                                # (bb, D)
-    c = c_ref[...].astype(f32)                                # (Np, D)
-    npad = c.shape[0]
+    npad = c_ref.shape[0]
     n_tiles = npad // block_n
 
     def _tile(j, acc):
-        cj = jax.lax.dynamic_slice_in_dim(c, j * block_n, block_n, axis=0)
+        # slice the store in its OWN dtype, dequantize one tile at a
+        # time — a bf16/int8/int4 store must not materialize as f32
+        cj = _dequant_tile(c_ref[pl.ds(j * block_n, block_n), :],
+                           unpack_d)
         sims_j = jax.lax.dot_general(
             x, cj, (((1,), (1,)), ((), ())),
             preferred_element_type=f32)                       # (bb, bn)
@@ -370,9 +400,10 @@ def _fused_route_dtiled_kernel(x_ref, c_ref, qscale_ref, cls_ref,
 
 def _centroid_store_dtype(centroids) -> jnp.dtype:
     """Quantized centroid stores keep their dtype in VMEM (that's the
-    memory-traffic win); anything else is promoted to f32."""
+    memory-traffic win); anything else is promoted to f32.  uint8 is
+    the packed-int4 container (two nibbles per byte)."""
     dt = jnp.asarray(centroids).dtype
-    return dt if dt in (jnp.bfloat16, jnp.int8) else jnp.float32
+    return dt if dt in (jnp.bfloat16, jnp.int8, jnp.uint8) else jnp.float32
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n",
@@ -407,7 +438,9 @@ def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
     gp = max(g, 1)
 
     cdt = _centroid_store_dtype(centroids)
-    cmat = jnp.zeros((npad, d), cdt).at[:n].set(
+    packed = jnp.asarray(centroids).dtype == jnp.uint8
+    dstore = centroids.shape[1]          # ceil(d/2) for packed int4
+    cmat = jnp.zeros((npad, dstore), cdt).at[:n].set(
         jnp.asarray(centroids, cdt))
     row = lambda v, fill: jnp.full((1, npad), fill, f32).at[0, :n].set(
         jnp.asarray(v, f32))
@@ -422,11 +455,12 @@ def fused_route(x: jnp.ndarray, centroids: jnp.ndarray,
         jnp.asarray(default_onehot, f32))
 
     raw, scores, fired, win, wscore = pl.pallas_call(
-        functools.partial(_fused_route_kernel, block_n=bn),
+        functools.partial(_fused_route_kernel, block_n=bn,
+                          unpack_d=d if packed else 0),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((bb, d), lambda i: (i, 0)),
-            pl.BlockSpec((npad, d), lambda i: (0, 0)),   # resident centroids
+            pl.BlockSpec((npad, dstore), lambda i: (0, 0)),  # resident store
             pl.BlockSpec((1, npad), lambda i: (0, 0)),
             pl.BlockSpec((1, npad), lambda i: (0, 0)),
             pl.BlockSpec((1, npad), lambda i: (0, 0)),
@@ -472,6 +506,12 @@ def fused_route_dtiled(x: jnp.ndarray, centroids: jnp.ndarray,
     ``block_d`` multiple (zero chunks contribute nothing, so results
     are exact); see ``_fused_route_dtiled_kernel``.
     """
+    if jnp.asarray(centroids).dtype == jnp.uint8:
+        raise ValueError(
+            "fused_route_dtiled does not stream packed int4 stores "
+            "(nibble pairs straddle D-chunk boundaries); use fused_route "
+            "or the jnp lowering — kernels/ops.select_fused_variant "
+            "never picks the D-tiled variant for packed stores")
     b, d = x.shape
     n = centroids.shape[0]
     g = member.shape[0]
@@ -529,6 +569,289 @@ def fused_route_dtiled(x: jnp.ndarray, centroids: jnp.ndarray,
       row(grouped_mask), memberf, defaultf)
     return (raw[:b], scores[:b], fired[:b] > 0.5,
             win[:b, :g], wscore[:b, :g])
+
+
+# ---------------------------------------------------------------------------
+# mesh-native shard_map body kernel: the similarity GEMM half of
+# fused_route as its own launch, so the per-device work inside the
+# shard_map lowering runs on the MXU while the collective softmax /
+# winner reductions stay in XLA (signals/engine._sharded_route_body)
+# ---------------------------------------------------------------------------
+
+
+def _fused_sims_kernel(x_ref, c_ref, qs_ref, o_ref, *, block_n: int,
+                       unpack_d: int = 0):
+    """x (bb, D) · store (Npad, Ds)ᵀ -> dequantized sims (bb, Npad).
+    Same N-tiled accumulation and per-tile dequantization as
+    ``_fused_route_kernel``, without the routing tail."""
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)
+    npad = c_ref.shape[0]
+    n_tiles = npad // block_n
+
+    def _tile(j, acc):
+        cj = _dequant_tile(c_ref[pl.ds(j * block_n, block_n), :],
+                           unpack_d)
+        sims_j = jax.lax.dot_general(
+            x, cj, (((1,), (1,)), ((), ())),
+            preferred_element_type=f32)
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, sims_j, j * block_n, axis=1)
+
+    sims = jax.lax.fori_loop(
+        0, n_tiles, _tile, jnp.zeros((x.shape[0], npad), f32))
+    o_ref[...] = sims * qs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n",
+                                             "interpret"))
+def fused_sims(x: jnp.ndarray, centroids: jnp.ndarray,
+               qscale: jnp.ndarray | None = None, *,
+               block_b: int = 128, block_n: int = 128,
+               interpret: bool = False) -> jnp.ndarray:
+    """Dequantized similarity GEMM as one launch: x (B, D), centroids
+    (N, D) store (f32/bf16/int8, or packed-int4 uint8 with ceil(D/2)
+    columns) -> (B, N) f32 ``(x @ dequant(c)ᵀ) * qscale``."""
+    b, d = x.shape
+    n = centroids.shape[0]
+    f32 = jnp.float32
+    x, bb, nb = _pad_rows(x, block_b)
+    bn = max(1, min(block_n, n))
+    pad_n = (-n) % bn
+    npad = n + pad_n
+    cdt = _centroid_store_dtype(centroids)
+    packed = jnp.asarray(centroids).dtype == jnp.uint8
+    dstore = centroids.shape[1]
+    cmat = jnp.zeros((npad, dstore), cdt).at[:n].set(
+        jnp.asarray(centroids, cdt))
+    qs = jnp.ones((1, npad), f32).at[0, :n].set(
+        jnp.ones(n, f32) if qscale is None
+        else jnp.asarray(qscale, f32).reshape(n))
+    out = pl.pallas_call(
+        functools.partial(_fused_sims_kernel, block_n=bn,
+                          unpack_d=d if packed else 0),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((npad, dstore), lambda i: (0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], npad), f32),
+        interpret=interpret,
+    )(x, cmat, qs)
+    return out[:b, :n]
+
+
+# ---------------------------------------------------------------------------
+# two-stage IVF kernels: coarse head scoring + top-nprobe selection, and
+# the gather-then-score fine stage driven by scalar-prefetched slab ids
+# ---------------------------------------------------------------------------
+
+
+def _coarse_topk_kernel(x_ref, h_ref, val_ref, idx_ref, *, nprobe: int):
+    """Query×heads GEMM fused with iterative top-``nprobe`` selection
+    (argmax + mask-out per step; first-occurrence tie-breaking matches
+    ``jax.lax.top_k``'s lower-index-first ordering)."""
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)                                # (bb, D)
+    h = h_ref[...].astype(f32)                                # (S, D)
+    sims = jax.lax.dot_general(
+        x, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=f32)                           # (bb, S)
+    cols = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1)
+
+    def _probe(p, carry):
+        cur, vals, idxs = carry
+        best = jnp.max(cur, axis=-1)                          # (bb,)
+        bi = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        vals = jax.lax.dynamic_update_slice_in_dim(
+            vals, best[:, None], p, axis=1)
+        idxs = jax.lax.dynamic_update_slice_in_dim(
+            idxs, bi[:, None], p, axis=1)
+        cur = jnp.where(cols == bi[:, None], _NEG, cur)
+        return cur, vals, idxs
+
+    bb = sims.shape[0]
+    _, vals, idxs = jax.lax.fori_loop(
+        0, nprobe, _probe,
+        (sims, jnp.full((bb, nprobe), _NEG, f32),
+         jnp.zeros((bb, nprobe), jnp.int32)))
+    val_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "block_b",
+                                             "interpret"))
+def coarse_topk(x: jnp.ndarray, heads: jnp.ndarray, nprobe: int, *,
+                block_b: int = 128, interpret: bool = False):
+    """Stage-1 cluster selection: x (B, D), heads (S, D) unit slab
+    heads -> (values (B, nprobe) f32, indices (B, nprobe) int32), the
+    top-``nprobe`` coarse Voronoi regions per query.  Oracle:
+    ``jax.lax.top_k(x @ heads.T, nprobe)``."""
+    b, d = x.shape
+    s = heads.shape[0]
+    if not 1 <= nprobe <= s:
+        raise ValueError(f"nprobe must be in [1, {s}], got {nprobe}")
+    x, bb, nb = _pad_rows(x, block_b)
+    vals, idxs = pl.pallas_call(
+        functools.partial(_coarse_topk_kernel, nprobe=nprobe),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),   # resident heads
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, nprobe), lambda i: (i, 0)),
+            pl.BlockSpec((bb, nprobe), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], nprobe), jnp.float32),
+            jax.ShapeDtypeStruct((x.shape[0], nprobe), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, heads)
+    return vals[:b], idxs[:b]
+
+
+def _ivf_route_kernel(pidx_ref, x_ref, c_ref, qs_ref, cls_ref, scale_ref,
+                      thr_ref, grp_ref, member_ref, default_ref,
+                      colid_ref, raw_ref, scores_ref, fired_ref, win_ref,
+                      wscore_ref, acc, cls_s, scale_s, thr_s, grp_s,
+                      mem_s, dflt_s, colid_s, *, nprobe: int,
+                      slab_k: int, unpack_d: int = 0):
+    """Gather-then-score fine stage for one (query row, probe) step.
+
+    The grid is (B, nprobe); ``pidx_ref`` is the scalar-prefetched
+    (B, nprobe) slab-id matrix, so every BlockSpec index_map below the
+    store/metadata operands selects the *probed slab's* block before
+    the body runs — the gather is pure DMA scheduling, no in-kernel
+    indexing.  Each step dots the query row against one dequantized
+    (slab_k, D) slab and stages the slab's sims + metadata into
+    candidate-space VMEM scratch at probe offset ``p·slab_k``; the
+    last probe runs the shared ``_route_tail`` over the (1, Kc)
+    candidate space and maps each group winner to the smallest
+    *original* column id attaining its best score (the flat kernel's
+    first-occurrence argmax, in global column order).  Only
+    ``nprobe·slab_k`` candidate columns ever occupy VMEM, which is
+    what keeps 100k+ route tables VMEM-resident per stage.
+    """
+    f32 = jnp.float32
+    p = pl.program_id(1)
+    x = x_ref[...].astype(f32)                                # (1, D)
+    slab = _dequant_tile(c_ref[0], unpack_d)                  # (slab_k, D)
+    sims_p = jax.lax.dot_general(
+        x, slab, (((1,), (1,)), ((), ())),
+        preferred_element_type=f32) * qs_ref[...]             # (1, slab_k)
+    off = p * slab_k
+    acc[:, pl.ds(off, slab_k)] = sims_p
+    cls_s[:, pl.ds(off, slab_k)] = cls_ref[...]
+    scale_s[:, pl.ds(off, slab_k)] = scale_ref[...]
+    thr_s[:, pl.ds(off, slab_k)] = thr_ref[...]
+    grp_s[:, pl.ds(off, slab_k)] = grp_ref[...]
+    mem_s[:, pl.ds(off, slab_k)] = member_ref[...]
+    dflt_s[:, pl.ds(off, slab_k)] = default_ref[...]
+    colid_s[:, pl.ds(off, slab_k)] = colid_ref[...]
+
+    @pl.when(p == nprobe - 1)
+    def _finish():
+        sims = acc[...]                                       # (1, Kc)
+        raw, scores, fired, _, wscore = _route_tail(
+            sims, cls_s[...], scale_s[...], thr_s[...], grp_s[...],
+            mem_s[...], dflt_s[...])
+        raw_ref[...] = raw
+        scores_ref[...] = scores
+        fired_ref[...] = fired.astype(f32)
+        colid = colid_s[...]                                  # (1, Kc)
+        m = mem_s[...]
+        n_groups = m.shape[0]
+
+        def _wmap(g, wacc):
+            row = jax.lax.dynamic_slice_in_dim(m, g, 1, axis=0)
+            sg = jnp.where(row > 0.0, scores, -1.0)
+            best = jnp.max(sg, axis=-1, keepdims=True)        # (1, 1)
+            cand = (row > 0.0) & (sg >= best)
+            wmin = jnp.min(jnp.where(cand, colid, 3e38), axis=-1)
+            wg = jnp.where(best[:, 0] < 0.0, 0.0, wmin)       # (1,)
+            return jax.lax.dynamic_update_slice_in_dim(
+                wacc, wg[:, None], g, axis=1)
+
+        wmap = jax.lax.fori_loop(
+            0, n_groups, _wmap, jnp.zeros((1, n_groups), f32))
+        win_ref[...] = wmap.astype(jnp.int32)
+        wscore_ref[...] = wscore
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ivf_route_candidates(x: jnp.ndarray, pidx: jnp.ndarray,
+                         store3: jnp.ndarray, qscale_s: jnp.ndarray,
+                         cls_s: jnp.ndarray, scale_s: jnp.ndarray,
+                         thr_s: jnp.ndarray, grp_s: jnp.ndarray,
+                         member_s: jnp.ndarray, default_s: jnp.ndarray,
+                         colid_s: jnp.ndarray, *,
+                         interpret: bool = False):
+    """Fine-stage launch over the probed slabs (see
+    ``_ivf_route_kernel``).  x: (B, D); pidx: (B, nprobe) int32 slab
+    ids from the coarse stage; store3: (S, slab_k, Ds) quantized slab
+    store; the ``*_s`` operands are the slab-space metadata rows from
+    signals/ivf.build_ivf_tables.  -> (raw_c, scores_c, fired_c) in
+    candidate space (B, nprobe·slab_k) plus (win, wscore) (B, G) with
+    ``win`` already in *original* column ids."""
+    b, d = x.shape
+    s, slab_k, dstore = store3.shape
+    nprobe = pidx.shape[1]
+    kc = nprobe * slab_k
+    gp = member_s.shape[0]
+    f32 = jnp.float32
+    packed = store3.dtype == jnp.uint8
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, p, pr: (i, 0)),
+            pl.BlockSpec((1, slab_k, dstore),
+                         lambda i, p, pr: (pr[i, p], 0, 0)),
+            pl.BlockSpec((1, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((1, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((1, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((1, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((1, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((gp, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((gp, slab_k), lambda i, p, pr: (0, pr[i, p])),
+            pl.BlockSpec((1, slab_k), lambda i, p, pr: (0, pr[i, p])),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kc), lambda i, p, pr: (i, 0)),
+            pl.BlockSpec((1, kc), lambda i, p, pr: (i, 0)),
+            pl.BlockSpec((1, kc), lambda i, p, pr: (i, 0)),
+            pl.BlockSpec((1, gp), lambda i, p, pr: (i, 0)),
+            pl.BlockSpec((1, gp), lambda i, p, pr: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, kc), f32),                 # sims accumulator
+            pltpu.VMEM((1, kc), f32),                 # cls
+            pltpu.VMEM((1, kc), f32),                 # scale
+            pltpu.VMEM((1, kc), f32),                 # thr
+            pltpu.VMEM((1, kc), f32),                 # grp
+            pltpu.VMEM((gp, kc), f32),                # member
+            pltpu.VMEM((gp, kc), f32),                # default
+            pltpu.VMEM((1, kc), f32),                 # colid
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_route_kernel, nprobe=nprobe,
+                          slab_k=slab_k, unpack_d=d if packed else 0),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kc), f32),
+            jax.ShapeDtypeStruct((b, kc), f32),
+            jax.ShapeDtypeStruct((b, kc), f32),
+            jax.ShapeDtypeStruct((b, gp), jnp.int32),
+            jax.ShapeDtypeStruct((b, gp), f32),
+        ],
+        interpret=interpret,
+    )(pidx.astype(jnp.int32), x.astype(f32), store3, qscale_s,
+      cls_s, scale_s, thr_s, grp_s, member_s, default_s, colid_s)
 
 
 def _softmax_kernel(s_ref, inv_tau_ref, o_ref):

@@ -94,30 +94,39 @@ from repro.signals.embedder import HashEmbedder
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_rules", "kernel_mode", "interpret"))
+                   static_argnames=("n_rules", "kernel_mode", "interpret",
+                                    "nprobe"))
 def _route_core(emb, crisp_raw, tensors, jt, n_rules, kernel_mode,
-                interpret):
+                interpret, nprobe=1):
     """embeddings + crisp scores -> (route index, score, normalized
     activations, fired mask): the whole signal pipeline and the policy
     argmax as one XLA program.  ``kernel_mode`` picks the signal
     lowering (jnp / grouped Pallas / the fully-fused centroid-resident
-    fused_route kernel).  The activation outputs feed the online
-    conflict monitor and the audit trail; callers that ignore them pay
-    nothing (they are intermediates of the fused program either way,
-    and stay on device unless materialized)."""
+    fused_route kernel / the two-stage ``ivf``/``ivf_fused`` path,
+    probing ``nprobe`` coarse clusters).  The activation outputs feed
+    the online conflict monitor and the audit trail; callers that
+    ignore them pay nothing (they are intermediates of the fused
+    program either way, and stay on device unless materialized)."""
     _, normalized, fired, conf = engine_mod._signal_eval_core(
         emb, crisp_raw, tensors, kernel_mode=kernel_mode,
-        interpret=interpret)
+        interpret=interpret, nprobe=nprobe)
     idx, score = policy_mod.evaluate_policy(jt, n_rules, fired, conf)
     return idx, score, normalized, fired
 
 
 @functools.lru_cache(maxsize=16)
-def _sharded_route_core(mesh, n_rules: int):
+def _sharded_route_core(mesh, n_rules: int, body_kernel: str = "jnp",
+                        interpret: bool = False):
     """Mesh twin of ``_route_core``: the shard_map'd signal layer and
     the policy argmax compose into one jitted program per (mesh,
-    n_rules) — no host-visible (B, N) intermediates between them."""
-    eval_fn = engine_mod._sharded_signal_eval(mesh)
+    n_rules) — no host-visible (B, N) intermediates between them.
+    This is the *observing* path: it materializes the full normalized /
+    fired matrices for the conflict monitor and audit trail.  When
+    nothing observes, the router takes
+    ``distributed/policy_shard.sharded_route_policy`` instead, which
+    psum_scatters the policy argmax and never replicates fired/conf."""
+    eval_fn = engine_mod._sharded_signal_eval(mesh, body_kernel,
+                                              interpret)
 
     @jax.jit
     def fn(emb, crisp_raw, st, jt):
@@ -163,6 +172,10 @@ class PolicyGeneration:
     inflight: int = 0
     retired: bool = False
     blocking_keys: Optional[frozenset] = None
+    # rule-aligned sharded term tables (distributed/policy_shard) —
+    # built only when the engine's shard_map path is active, so the
+    # non-observing mesh route can psum_scatter the policy argmax
+    pshard: Optional[Dict[str, jnp.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -194,6 +207,9 @@ class RouterService:
                  kernel: Optional[str] = None,
                  precision: Optional[str] = None,
                  mesh=None,
+                 two_stage: Optional[bool] = None,
+                 nprobe: Optional[int] = None,
+                 body_kernel: Optional[str] = None,
                  slots: Optional[int] = None,
                  max_slots: Optional[int] = None, preempt: bool = True,
                  validate: bool = True, run_taxonomy: bool = False,
@@ -209,8 +225,17 @@ class RouterService:
             use_pallas_voronoi: legacy alias for ``kernel="grouped"``.
             kernel: signal lowering — ``"jnp"``, ``"grouped"``, or the
                 fully fused ``"fused"`` Pallas launch.
-            precision: centroid store precision (``"bf16"``/``"int8"``).
+            precision: centroid store precision (``"bf16"``/``"int8"``/
+                packed ``"int4"``).
             mesh: JAX mesh for the sharded routing lowering.
+            two_stage: force the two-stage IVF routing path on/off
+                (default: auto by route-table size — see
+                ``SignalEngine``).
+            nprobe: coarse clusters probed per query on the two-stage
+                path (default: recall-tuned ~sqrt(n_slabs)).
+            body_kernel: per-device lowering inside the shard_map body
+                (``"pallas"`` runs the fused similarity kernel inside
+                the mesh program; default auto by backend).
             slots: ``N`` switches continuous serving to the preemptible
                 slot scheduler with N slots per backend; ``None`` keeps
                 whole-batch decode.
@@ -233,7 +258,8 @@ class RouterService:
         self.embedder = embedder or HashEmbedder()
         self._engine_opts = dict(use_pallas=use_pallas_voronoi,
                                  kernel=kernel, precision=precision,
-                                 mesh=mesh)
+                                 mesh=mesh, two_stage=two_stage,
+                                 nprobe=nprobe, body_kernel=body_kernel)
         self._validate = validate
         self._run_taxonomy = run_taxonomy
         self._load_backends_flag = load_backends
@@ -332,10 +358,22 @@ class RouterService:
         if self._monitor_enabled:
             mon = OnlineConflictMonitor(
                 engine.names, priority_of=self._atom_priorities(config))
+        pshard = None
+        if engine.sharded_active:
+            from repro.distributed import policy_shard as pshard_mod
+            pshard = {
+                k: jnp.asarray(v)
+                for k, v in pshard_mod.build_policy_shard_tables(
+                    tables,
+                    prob_cols=np.asarray(engine.tensors["prob_cols"]),
+                    crisp_cols=np.asarray(engine.tensors["crisp_cols"]),
+                    n_model=engine_mod.mesh_model_size(
+                        engine.mesh)).items()}
         return PolicyGeneration(
             gen_id=gen_id, config=config, engine=engine, tables=tables,
             jt=tables.as_jax(), diagnostics=diagnostics,
-            fingerprint=config.fingerprint(), monitor=mon)
+            fingerprint=config.fingerprint(), monitor=mon,
+            pshard=pshard)
 
     @staticmethod
     def _atom_priorities(config: RouterConfig) -> Dict[str, int]:
@@ -548,9 +586,22 @@ class RouterService:
                 pad = ((0, bucket - b), (0, 0))
                 emb = np.pad(emb, pad)
                 crisp = np.pad(crisp, pad)
+            if engine.sharded_active and not observe \
+                    and gen.pshard is not None:
+                # nothing observes: psum_scatter the policy argmax —
+                # fired/conf stay sharded, only (B,) vectors cross the
+                # mesh (distributed/policy_shard)
+                from repro.distributed import policy_shard as pshard_mod
+                idx, score = pshard_mod.sharded_route_policy(
+                    engine.mesh, gen.tables.n_rules,
+                    engine.body_kernel, engine.interpret)(
+                    jnp.asarray(emb), jnp.asarray(crisp),
+                    engine.sharded_tensors, gen.pshard)
+                return np.asarray(idx)[:b], np.asarray(score)[:b]
             if engine.sharded_active:
                 idx, score, norm, fired = _sharded_route_core(
-                    engine.mesh, gen.tables.n_rules)(
+                    engine.mesh, gen.tables.n_rules,
+                    engine.body_kernel, engine.interpret)(
                     jnp.asarray(emb), jnp.asarray(crisp),
                     engine.sharded_tensors, gen.jt)
             else:
@@ -558,7 +609,7 @@ class RouterService:
                     jnp.asarray(emb), jnp.asarray(crisp), engine.tensors,
                     gen.jt, gen.tables.n_rules,
                     kernel_mode=engine.kernel_mode,
-                    interpret=engine.interpret)
+                    interpret=engine.interpret, nprobe=engine.nprobe)
             idx = np.asarray(idx)[:b]
             score = np.asarray(score)[:b]
             if observe:

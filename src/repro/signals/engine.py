@@ -89,7 +89,7 @@ class SignalBatchResult:
 # mixed-precision centroid store
 # ---------------------------------------------------------------------------
 
-PRECISIONS = ("f32", "bf16", "int8")
+PRECISIONS = ("f32", "bf16", "int8", "int4")
 
 
 def quantize_centroids(c: np.ndarray, precision: str
@@ -112,6 +112,11 @@ def quantize_centroids(c: np.ndarray, precision: str
     * ``int8`` — symmetric per-signal scaling to int8 (quarter the
       traffic); the per-row quantization step s = max|c| / 127 composes
       with the renormalization into one scale: qscale = s / ||q·s||.
+    * ``int4`` — symmetric per-signal scaling to 4-bit (s = max|c| / 7)
+      *packed*: the store is a (N, ceil(D/2)) uint8 matrix holding two
+      two's-complement nibbles per byte (signals/ivf.pack_int4) — an
+      eighth of the f32 traffic.  Same composed qscale recalibration,
+      so thresholds are again preserved untouched.
     """
     c = np.asarray(c, np.float32)
     n = c.shape[0]
@@ -124,12 +129,18 @@ def quantize_centroids(c: np.ndarray, precision: str
         store = np.asarray(jnp.asarray(c, jnp.bfloat16))
         norm = np.linalg.norm(store.astype(np.float32), axis=1)
         return store, (1.0 / np.maximum(norm, 1e-8)).astype(np.float32)
-    step = np.abs(c).max(axis=1) / 127.0                      # (N,)
+    levels = 7.0 if precision == "int4" else 127.0
+    step = np.abs(c).max(axis=1) / levels                     # (N,)
     step = np.maximum(step, 1e-12)
-    q = np.clip(np.rint(c / step[:, None]), -127, 127).astype(np.int8)
+    q = np.clip(np.rint(c / step[:, None]), -levels,
+                levels).astype(np.int8)
     deq = q.astype(np.float32) * step[:, None]
     norm = np.linalg.norm(deq, axis=1)
-    return q, (step / np.maximum(norm, 1e-8)).astype(np.float32)
+    qscale = (step / np.maximum(norm, 1e-8)).astype(np.float32)
+    if precision == "int4":
+        from repro.signals.ivf import pack_int4
+        return pack_int4(q), qscale
+    return q, qscale
 
 
 # ---------------------------------------------------------------------------
@@ -169,7 +180,7 @@ def _device_tables(np_tensors: Dict[str, np.ndarray], *,
 
 def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
                       t: Dict[str, jnp.ndarray], *,
-                      kernel_mode: str, interpret: bool
+                      kernel_mode: str, interpret: bool, nprobe: int = 1
                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                  jnp.ndarray, jnp.ndarray]:
     """embeddings + crisp scores -> (raw, normalized, fired, confidence).
@@ -184,17 +195,31 @@ def _signal_eval_core(emb: jnp.ndarray, crisp_raw: jnp.ndarray,
     * ``"fused_dtiled"`` — kernels/voronoi.fused_route_dtiled: the same
       single launch with the centroid store streamed through VMEM in
       D-chunks (embedder dims past the VMEM budget);
+    * ``"ivf"`` / ``"ivf_fused"`` — the two-stage IVF path over the
+      bind-time slab bundle (``ivf_*`` keys in ``t``): coarse
+      top-``nprobe`` slab heads, then the routing tail over only the
+      probed slabs' columns — jnp lowering vs the Pallas coarse+gather
+      kernels (kernels/ivf.ivf_route);
     * ``"grouped"`` — XLA GEMM + the grouped-Voronoi Pallas kernel
       (PR 1's path);
     * ``"jnp"``     — XLA GEMM + segment-reduction normalization.
 
-    All lowerings dequantize the (possibly bf16/int8) centroid store
-    through the per-column ``qscale`` vector and scatter into the full
-    (B, n_signals) layout here.
+    All lowerings dequantize the (possibly bf16/int8/packed-int4)
+    centroid store through the per-column ``qscale`` vector and scatter
+    into the full (B, n_signals) layout here.
     """
     f32 = jnp.float32
     emb = emb.astype(f32)
-    if kernel_mode in ("fused", "fused_dtiled"):
+    if kernel_mode in ("ivf", "ivf_fused"):
+        from repro.kernels import ivf as _kivf
+        ivf_t = {k[4:]: v for k, v in t.items() if k.startswith("ivf_")}
+        raw_p, normalized_p, fired_p, _, _ = _kivf.ivf_route(
+            emb, t["classifier_mask"].astype(f32), t["col_scale"],
+            t["col_thr"], t["grouped_mask"], t["member_full"],
+            t["default_full"], ivf_t, nprobe=nprobe,
+            use_kernel=(kernel_mode == "ivf_fused"),
+            interpret=interpret)
+    elif kernel_mode in ("fused", "fused_dtiled"):
         from repro.kernels import voronoi as _vor
         fn = (_vor.fused_route if kernel_mode == "fused"
               else _vor.fused_route_dtiled)
@@ -228,8 +253,12 @@ def _signal_eval_unfused(emb: jnp.ndarray, t: Dict[str, jnp.ndarray], *,
     """PR 1 lowering: one XLA GEMM, then grouped normalization via the
     segment-reduction jnp path or the grouped-Voronoi Pallas kernel."""
     f32 = jnp.float32
+    c = t["centroids"]
+    if c.dtype == jnp.uint8:                         # packed int4 store
+        from repro.kernels.voronoi import unpack_int4
+        c = unpack_int4(c, emb.shape[1])
     sims = jax.lax.dot_general(                      # the single GEMM (B, N)
-        emb, t["centroids"].astype(f32), (((1,), (1,)), ((), ())),
+        emb, c.astype(f32), (((1,), (1,)), ((), ())),
         preferred_element_type=f32) * t["qscale"][None, :]
     raw_p = jnp.where(t["classifier_mask"][None, :],
                       (sims + 1.0) * 0.5, sims)
@@ -267,9 +296,11 @@ def _signal_eval_unfused(emb: jnp.ndarray, t: Dict[str, jnp.ndarray], *,
 
 # jit-cached once per (shape-signature, flags) across every engine instance
 _SIGNAL_EVAL = jax.jit(_signal_eval_core,
-                       static_argnames=("kernel_mode", "interpret"))
+                       static_argnames=("kernel_mode", "interpret",
+                                        "nprobe"))
 
-KERNEL_MODES = ("auto", "jnp", "grouped", "fused", "fused_dtiled")
+KERNEL_MODES = ("auto", "jnp", "grouped", "fused", "fused_dtiled",
+                "ivf", "ivf_fused")
 
 
 def resolve_kernel_mode(kernel: Optional[str], use_pallas: bool) -> str:
@@ -299,7 +330,27 @@ def resolve_kernel_mode(kernel: Optional[str], use_pallas: bool) -> str:
 # ---------------------------------------------------------------------------
 
 
-def _sharded_route_body(model_axis: Optional[str]):
+BODY_KERNELS = ("auto", "jnp", "pallas")
+
+
+def resolve_body_kernel(body_kernel: Optional[str] = None) -> str:
+    """Per-device lowering inside the shard_map body: ``"pallas"`` runs
+    the similarity GEMM as the ``fused_sims`` Pallas launch on each
+    device's (Nl, D) store shard (mesh-native — the kernel itself lives
+    inside the shard_map body); ``"jnp"`` is the PR 3 per-device XLA
+    GEMM.  ``auto`` picks pallas on TPU, jnp elsewhere (interpret-mode
+    Pallas inside shard_map is emulation-slow on CPU)."""
+    if body_kernel is not None and body_kernel != "auto":
+        if body_kernel not in BODY_KERNELS:
+            raise ValueError(f"body_kernel must be one of {BODY_KERNELS},"
+                             f" got {body_kernel!r}")
+        return body_kernel
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _sharded_route_body(model_axis: Optional[str],
+                        body_kernel: str = "jnp",
+                        interpret: bool = False):
     """Per-device body for the shard_map'd signal layer: the local
     similarity GEMM (f32 accumulation, qscale dequantization) plus the
     ONE shared copy of the routing semantics — kernels/voronoi.
@@ -308,14 +359,24 @@ def _sharded_route_body(model_axis: Optional[str]):
     contract: x (Bl, D), c (Nl, D) store, and the (1, Nl)/(G, Nl)
     column metadata.  Returns the local (Bl, Nl) raw/scores/fired plus
     the model-replicated (Bl, G) winner index (global column space)
-    and winning score."""
-    from repro.kernels.voronoi import _route_tail
+    and winning score.
+
+    ``body_kernel="pallas"`` lowers the local GEMM as the
+    ``fused_sims`` Pallas launch — the fused kernel running *inside*
+    the shard_map body on each device's column shard, with the exact
+    collective softmax unchanged on top (both lowerings feed the same
+    ``_route_tail``, so they are decision-identical)."""
+    from repro.kernels.voronoi import _route_tail, fused_sims
 
     def body(x, c, qs, cls, scale, thr, grp, mem, dflt):
         f32 = jnp.float32
-        sims = jax.lax.dot_general(
-            x.astype(f32), c.astype(f32), (((1,), (1,)), ((), ())),
-            preferred_element_type=f32) * qs                  # (Bl, Nl)
+        if body_kernel == "pallas":
+            sims = fused_sims(x.astype(f32), c, qs,
+                              interpret=interpret)             # (Bl, Nl)
+        else:
+            sims = jax.lax.dot_general(
+                x.astype(f32), c.astype(f32), (((1,), (1,)), ((), ())),
+                preferred_element_type=f32) * qs              # (Bl, Nl)
         hooks = {}
         col_offset = 0
         if model_axis:
@@ -346,10 +407,11 @@ def mesh_model_size(mesh: Mesh) -> int:
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_route_raw(mesh: Mesh):
+def _sharded_route_raw(mesh: Mesh, body_kernel: str = "jnp",
+                       interpret: bool = False):
     """Jitted shard_map of the fused_route contract over ``mesh``:
     inputs must already be padded to (data-multiple B, model-multiple
-    N).  Cached per mesh."""
+    N).  Cached per (mesh, body lowering)."""
     from jax.experimental.shard_map import shard_map
     daxes = _mesh_batch_axes(mesh)
     maxis = "model" if "model" in mesh.shape else None
@@ -359,7 +421,7 @@ def _sharded_route_raw(mesh: Mesh):
     ospec = P(daxes if daxes else None, maxis)
     wspec = P(daxes if daxes else None, None)
     sh = shard_map(
-        _sharded_route_body(maxis), mesh=mesh,
+        _sharded_route_body(maxis, body_kernel, interpret), mesh=mesh,
         in_specs=(bspec, cspec, rspec, rspec, rspec, rspec, rspec,
                   rspec, rspec),
         out_specs=(ospec, ospec, ospec, wspec, wspec),
@@ -369,7 +431,9 @@ def _sharded_route_raw(mesh: Mesh):
 
 def sharded_fused_route(mesh: Mesh, x, centroids, classifier_mask,
                         col_scale, col_thr, grouped_mask, member,
-                        default_onehot, *, qscale=None):
+                        default_onehot, *, qscale=None,
+                        body_kernel: Optional[str] = None,
+                        interpret: bool = False):
     """Distributed twin of kernels/ops.fused_route: shards B over the
     mesh's (pod, data) axes and N over ``model``, with exact
     cross-device grouped softmax and winner reductions.  Same contract:
@@ -403,7 +467,8 @@ def sharded_fused_route(mesh: Mesh, x, centroids, classifier_mask,
         jnp.asarray(member, f32))
     defaultp = jnp.zeros((gp, npad), f32).at[:g, :n].set(
         jnp.asarray(default_onehot, f32))
-    raw, scores, fired, win, wscore = _sharded_route_raw(mesh)(
+    raw, scores, fired, win, wscore = _sharded_route_raw(
+        mesh, resolve_body_kernel(body_kernel), interpret)(
         x, cmat, qs, row(classifier_mask, 0.0), row(col_scale, 0.0),
         row(col_thr, 2.0), row(grouped_mask, 0.0), memberp, defaultp)
     return (raw[:b, :n], scores[:b, :n], fired[:b, :n],
@@ -411,13 +476,14 @@ def sharded_fused_route(mesh: Mesh, x, centroids, classifier_mask,
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_signal_eval(mesh: Mesh):
+def _sharded_signal_eval(mesh: Mesh, body_kernel: str = "jnp",
+                         interpret: bool = False):
     """Jitted engine-level sharded evaluation: the shard_map'd signal
     layer plus the scatter into the full (B, n_signals) layout and the
     crisp-column merge.  Expects the bind-time padded bundle from
     ``SignalEngine._build_sharded_bundle`` and a B already padded to
     the mesh's data-axes multiple."""
-    sh = _sharded_route_raw(mesh)
+    sh = _sharded_route_raw(mesh, body_kernel, interpret)
 
     @jax.jit
     def fn(emb, crisp_raw, st):
@@ -453,7 +519,10 @@ class SignalEngine:
                  use_pallas: bool = False,
                  kernel: Optional[str] = None,
                  precision: Optional[str] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 two_stage: Optional[bool] = None,
+                 nprobe: Optional[int] = None,
+                 body_kernel: Optional[str] = None):
         from repro.kernels import ops
         self.cfg = config
         self.embedder = embedder
@@ -464,7 +533,16 @@ class SignalEngine:
             raise ValueError(f"precision must be one of {PRECISIONS}, "
                              f"got {precision!r}")
         self.mesh = mesh
+        if mesh is not None and self.precision == "int4":
+            # the shard_map path would have to unpack nibble pairs per
+            # column shard; keep the packed store single-device
+            raise ValueError("precision='int4' is not supported with a "
+                             "mesh; use int8 for sharded stores")
         self.interpret = ops.default_interpret()
+        self.body_kernel = resolve_body_kernel(body_kernel)
+        self._two_stage_req = two_stage
+        self._nprobe_req = nprobe
+        self.nprobe = 1
         self.names = sorted(config.signals)
         self.index = {n: i for i, n in enumerate(self.names)}
         self.centroids: Dict[str, np.ndarray] = {}
@@ -477,11 +555,15 @@ class SignalEngine:
             # variant; past even that, fall back to jnp.  With a mesh
             # bound the shard_map path evaluates per-device jnp (no
             # VMEM constraint), so the gate must not downgrade it away.
+            # centroid_bytes is the *stored* width (0.5 for packed
+            # int4), not the f32 image — the satellite fix that keeps
+            # quantized stores resident up to their true footprint.
             store = self.tensors["centroids"]
             self.kernel_mode = ops.select_fused_variant(
-                store.shape[0], store.shape[1],
+                store.shape[0], self._embed_dim,
                 self.tensors["member_full"].shape[0],
-                centroid_bytes=store.dtype.itemsize)
+                centroid_bytes=ops.precision_centroid_bytes(
+                    self.precision))
 
     # ---- binding -------------------------------------------------------------
     def _prototype_texts(self, name: str) -> List[str]:
@@ -565,6 +647,7 @@ class SignalEngine:
                 default_onehot[g, default_rows[g]] = 1.0
         dim = (self.centroids[self._prob_names[0]].shape[0]
                if self._prob_names else 1)
+        self._embed_dim = dim
         centroids_f32 = (
             np.stack([self.centroids[n] for n in self._prob_names])
             if self._prob_names else np.zeros((0, dim), np.float32))
@@ -619,6 +702,7 @@ class SignalEngine:
             "member_full": member_full,
             "default_full": default_full,
         }
+        self._resolve_two_stage(np_tensors, centroids_f32)
         # effective firing threshold per signal column (self.names
         # order): group θ for grouped probabilistic signals, the atom's
         # own threshold otherwise — what `fired` actually compares
@@ -642,6 +726,58 @@ class SignalEngine:
             self.sharded_tensors = _device_tables(
                 self._build_sharded_bundle(np_tensors),
                 mesh=self.mesh, precision=self.precision)
+
+    def _resolve_two_stage(self, np_tensors: Dict[str, np.ndarray],
+                           centroids_f32: np.ndarray) -> None:
+        """Decide and build the two-stage IVF path at bind time.
+
+        Activation: an explicit ``two_stage=True`` or
+        ``kernel="ivf"/"ivf_fused"`` request, or — when unset — any
+        fused-lowerable single-device table with
+        n_prob ≥ kernels/ops.IVF_AUTO_MIN_ROUTES (the scale regime
+        where the flat kernels' linear-in-N cost loses to ~sqrt(N)).
+        The bundle (cluster heads, quantized slab store, slab-space
+        metadata) joins ``np_tensors`` under ``ivf_*`` keys so the
+        memoized device upload covers it, and ``self.nprobe`` resolves
+        to the clamped user request or the recall-tuned default."""
+        from repro.kernels import ops
+        n_prob = len(self._prob_names)
+        explicit_mode = self.kernel_mode in ("ivf", "ivf_fused")
+        want = self._two_stage_req
+        if want is False and explicit_mode:
+            raise ValueError("two_stage=False contradicts "
+                             f"kernel={self.kernel_mode!r}")
+        if want is None:
+            want = explicit_mode or (
+                self._fused_ok and self.mesh is None
+                and n_prob >= ops.IVF_AUTO_MIN_ROUTES)
+        supportable = (self._fused_ok and self.mesh is None
+                       and n_prob >= 8)
+        if want and not supportable:
+            raise ValueError(
+                "two_stage routing needs a fused-lowerable config with "
+                ">= 8 probabilistic signals and no mesh (the sharded "
+                "path evaluates the flat table)")
+        self.two_stage = bool(want)
+        if not self.two_stage:
+            return
+        from repro.signals.ivf import build_ivf_tables, default_nprobe
+        if not explicit_mode:
+            self.kernel_mode = ("ivf_fused"
+                                if jax.default_backend() == "tpu"
+                                else "ivf")
+        ivf_np = build_ivf_tables(
+            centroids_f32,
+            np_tensors["classifier_mask"].astype(np.float32),
+            np_tensors["col_scale"], np_tensors["col_thr"],
+            np_tensors["grouped_mask"], np_tensors["member_full"],
+            np_tensors["default_full"], precision=self.precision)
+        n_slabs = ivf_np["heads"].shape[0]
+        req = (default_nprobe(n_slabs) if self._nprobe_req is None
+               else int(self._nprobe_req))
+        self.nprobe = max(1, min(req, n_slabs))
+        for k, v in ivf_np.items():
+            np_tensors[f"ivf_{k}"] = v
 
     def _build_sharded_bundle(self, t: Dict[str, np.ndarray]
                               ) -> Dict[str, np.ndarray]:
@@ -728,7 +864,8 @@ class SignalEngine:
         else:
             raw, normalized, fired, conf = _SIGNAL_EVAL(
                 jnp.asarray(emb), jnp.asarray(crisp), self.tensors,
-                kernel_mode=self.kernel_mode, interpret=self.interpret)
+                kernel_mode=self.kernel_mode, interpret=self.interpret,
+                nprobe=self.nprobe)
         return SignalBatchResult(
             list(self.names), np.asarray(raw), np.asarray(normalized),
             np.asarray(fired), np.asarray(conf))
@@ -745,7 +882,8 @@ class SignalEngine:
         if pad:
             emb = np.pad(emb, ((0, pad), (0, 0)))
             crisp = np.pad(crisp, ((0, pad), (0, 0)))
-        raw, normalized, fired, conf = _sharded_signal_eval(self.mesh)(
+        raw, normalized, fired, conf = _sharded_signal_eval(
+            self.mesh, self.body_kernel, self.interpret)(
             jnp.asarray(emb), jnp.asarray(crisp), self.sharded_tensors)
         return raw[:b], normalized[:b], fired[:b], conf[:b]
 

@@ -1,0 +1,391 @@
+"""Two-stage IVF Voronoi router: bind-time layout + routing parity.
+
+The load-bearing oracle: with ``nprobe = n_slabs`` the candidate set is
+the whole table, so the two-stage path must reproduce the flat
+``fused_route`` decisions *exactly* — bitwise fired/win across every
+store precision (f32 / bf16 / int8 / packed int4) and both lowerings
+(jnp scan and the Pallas coarse_topk + gather kernels).  On top of
+that: slab-layout invariants, the int4 nibble roundtrip, the
+default-nprobe recall@1 ≥ 0.99 statistical gate on topic-clustered
+tables, variant auto-selection accounting, and the engine-level wiring
+(activation rules, nprobe clamp, decision equivalence vs the flat
+engine).
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ivf as kivf
+from repro.kernels import ops, ref
+from repro.kernels import voronoi as vor
+from repro.signals import ivf as sivf
+from repro.signals.engine import quantize_centroids
+
+from test_kernels import _fused_route_inputs
+
+PRECISIONS = ("f32", "bf16", "int8", "int4")
+# tile-edge shapes on purpose: below one block, block-multiple, ragged
+PARITY_SHAPES = ((1, 8), (16, 33), (64, 128), (7, 130))
+
+
+def _table(b, n, seed=0, sizes=None, d=32):
+    if sizes is None:
+        sizes = (max(2, n // 3), max(2, n // 4))
+    return _fused_route_inputs(n, sizes, b, seed=seed, d=d)
+
+
+def _decisions_equal(got, want, atol=1e-5):
+    names = ("raw", "scores", "fired", "win", "wscore")
+    for name, a, w in zip(names, got, want):
+        a, w = np.asarray(a), np.asarray(w)
+        if a.dtype in (np.bool_, np.int32):
+            np.testing.assert_array_equal(a, w, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, w, atol=atol, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [1, 2, 7, 32, 33])
+def test_int4_pack_unpack_roundtrip(d):
+    rng = np.random.default_rng(d)
+    q = rng.integers(-8, 8, size=(13, d)).astype(np.int8)
+    packed = sivf.pack_int4(q)
+    assert packed.dtype == np.uint8
+    assert packed.shape == (13, (d + 1) // 2)
+    np.testing.assert_array_equal(sivf.unpack_int4(packed, d),
+                                  q.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# clustering + slab layout invariants
+# ---------------------------------------------------------------------------
+
+
+def test_spherical_kmeans_invariants():
+    rng = np.random.default_rng(0)
+    c = rng.normal(size=(200, 16)).astype(np.float32)
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    heads, assign = sivf.spherical_kmeans(c, 14)
+    assert heads.shape == (14, 16)
+    np.testing.assert_allclose(np.linalg.norm(heads, axis=1), 1.0,
+                               atol=1e-5)
+    assert assign.shape == (200,)
+    assert assign.min() >= 0 and assign.max() < 14
+    # deterministic: same table binds to bit-identical heads
+    heads2, assign2 = sivf.spherical_kmeans(c, 14)
+    np.testing.assert_array_equal(heads, heads2)
+    np.testing.assert_array_equal(assign, assign2)
+
+
+def test_build_slab_layout_partition_and_cap():
+    rng = np.random.default_rng(1)
+    n, k = 500, 10
+    assign = rng.integers(0, k, size=n)
+    assign[:300] = 3                      # one runaway cluster
+    chunks, slab_k = sivf.build_slab_layout(assign, k)
+    cap = max(sivf.SLAB_ALIGN, math.ceil(2.0 * n / k))
+    all_cols = np.concatenate(chunks)
+    # every column in exactly one chunk; chunks respect the width cap
+    np.testing.assert_array_equal(np.sort(all_cols), np.arange(n))
+    assert all(ch.size <= cap for ch in chunks)
+    assert slab_k % sivf.SLAB_ALIGN == 0
+    assert slab_k >= max(ch.size for ch in chunks)
+
+
+def test_build_ivf_tables_slab_views():
+    args = _table(4, 50, seed=7)
+    _, c, cls, scale, thr, grouped, member, default = args
+    ivf = sivf.build_ivf_tables(c, cls, scale, thr, grouped, member,
+                                default, precision="int8")
+    ns = ivf["heads"].shape[0]
+    slab_k = ivf["store"].shape[0] // ns
+    cols = ivf["slab_cols"]
+    live = cols >= 0
+    # live slots are a permutation of the original columns
+    np.testing.assert_array_equal(np.sort(cols[live]), np.arange(50))
+    # slab-space metadata rows are gathers of the originals; dead slots
+    # carry the can't-fire threshold
+    np.testing.assert_array_equal(ivf["thr_s"][0, live], thr[cols[live]])
+    assert (ivf["thr_s"][0, ~live] == 2.0).all()
+    np.testing.assert_array_equal(ivf["scale_s"][0, live],
+                                  scale[cols[live]])
+    np.testing.assert_array_equal(ivf["member_s"][:, live],
+                                  member[:, cols[live]])
+    assert (ivf["member_s"][:, ~live] == 0).all()
+    np.testing.assert_array_equal(ivf["colid_s"][0].astype(np.int32),
+                                  cols)
+    # the same centroid row quantizes to the same values in both
+    # layouts: slab store rows == flat store rows at the mapped columns
+    store, qscale = quantize_centroids(c, "int8")
+    np.testing.assert_array_equal(ivf["store"][live], store[cols[live]])
+    np.testing.assert_allclose(ivf["qscale_s"][0, live],
+                               np.asarray(qscale).reshape(-1)[cols[live]])
+
+
+def test_default_nprobe_bounds():
+    for ns in (1, 2, 5, 33, 316, 1000):
+        p = sivf.default_nprobe(ns)
+        assert 1 <= p <= ns
+    assert sivf.default_nprobe(316) == 20
+
+
+# ---------------------------------------------------------------------------
+# the hard parity oracle: nprobe = n_slabs reproduces the flat kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,n", PARITY_SHAPES)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_full_probe_matches_flat(b, n, precision):
+    args = _table(b, n, seed=b + n)
+    x, c, cls, scale, thr, grouped, member, default = args
+    meta = (cls, scale, thr, grouped, member, default)
+    store, qscale = quantize_centroids(c, precision)
+    ivf = sivf.build_ivf_tables(c, *meta, precision=precision)
+    ns = ivf["heads"].shape[0]
+    want = ref.fused_route_ref(x, store, *meta, qscale=qscale)
+    for use_kernel in (False, True):
+        got = ops.ivf_route(x, *meta, ivf, nprobe=ns,
+                            use_kernel=use_kernel)
+        _decisions_equal(got, want)
+
+
+@pytest.mark.parametrize("precision", ["f32", "int8", "int4"])
+def test_partial_probe_lowerings_agree(precision):
+    """At nprobe < n_slabs both lowerings see the same candidate set
+    (same coarse top-k tie-break), so they must agree with each other
+    even where they disagree with the flat table."""
+    args = _table(9, 120, seed=3)
+    x, c, cls, scale, thr, grouped, member, default = args
+    meta = (cls, scale, thr, grouped, member, default)
+    ivf = sivf.build_ivf_tables(c, *meta, precision=precision)
+    ns = ivf["heads"].shape[0]
+    for nprobe in (1, max(2, ns // 2)):
+        a = ops.ivf_route(x, *meta, ivf, nprobe=nprobe, use_kernel=False)
+        k = ops.ivf_route(x, *meta, ivf, nprobe=nprobe, use_kernel=True)
+        _decisions_equal(k, a)
+
+
+def test_nprobe_clamps_to_slab_count():
+    args = _table(3, 24, seed=5)
+    x, c, cls, scale, thr, grouped, member, default = args
+    meta = (cls, scale, thr, grouped, member, default)
+    ivf = sivf.build_ivf_tables(c, *meta, precision="f32")
+    ns = ivf["heads"].shape[0]
+    a = ops.ivf_route(x, *meta, ivf, nprobe=ns)
+    b_ = ops.ivf_route(x, *meta, ivf, nprobe=10**9)
+    _decisions_equal(b_, a, atol=0.0)
+
+
+def test_groupless_table_two_stage():
+    args = _table(4, 32, seed=11)
+    x, c, cls, scale, thr, grouped, _, _ = args
+    member = np.zeros((0, 32), np.float32)
+    default = np.zeros((0, 32), np.float32)
+    meta = (cls, scale, thr, np.zeros_like(grouped), member, default)
+    store, qscale = quantize_centroids(c, "f32")
+    ivf = sivf.build_ivf_tables(c, *meta, precision="f32")
+    want = ref.fused_route_ref(x, store, *meta, qscale=qscale)
+    got = ops.ivf_route(x, *meta, ivf, nprobe=ivf["heads"].shape[0])
+    assert got[3].shape == (4, 0) and got[4].shape == (4, 0)
+    _decisions_equal(got, want)
+
+
+def test_coarse_topk_matches_lax():
+    import jax
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(9, 16)).astype(np.float32)
+    heads = rng.normal(size=(21, 16)).astype(np.float32)
+    heads /= np.linalg.norm(heads, axis=1, keepdims=True)
+    for nprobe in (1, 5, 21):
+        vals, idx = vor.coarse_topk(jnp.asarray(x), jnp.asarray(heads),
+                                    nprobe, interpret=True)
+        wv, wi = jax.lax.top_k(jnp.asarray(x @ heads.T), nprobe)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(wi))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(wv),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: decision parity across random shapes/precisions
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 9), st.integers(8, 140),
+           st.sampled_from(PRECISIONS), st.integers(0, 10_000))
+    def test_property_full_probe_decision_parity(b, n, precision, seed):
+        args = _table(b, n, seed=seed)
+        x, c, cls, scale, thr, grouped, member, default = args
+        meta = (cls, scale, thr, grouped, member, default)
+        store, qscale = quantize_centroids(c, precision)
+        ivf = sivf.build_ivf_tables(c, *meta, precision=precision)
+        ns = ivf["heads"].shape[0]
+        want = ref.fused_route_ref(x, store, *meta, qscale=qscale)
+        got = ops.ivf_route(x, *meta, ivf, nprobe=ns)
+        np.testing.assert_array_equal(np.asarray(got[2]),
+                                      np.asarray(want[2]))
+        np.testing.assert_array_equal(np.asarray(got[3]),
+                                      np.asarray(want[3]))
+except ModuleNotFoundError:              # hypothesis not installed
+    pass
+
+
+# ---------------------------------------------------------------------------
+# recall@1 statistical gate on topic-clustered tables
+# ---------------------------------------------------------------------------
+
+
+def _clustered_table(n, d, seed, *, tau=0.25, routes_per_topic=50):
+    rng = np.random.default_rng(seed)
+    n_topics = max(8, n // routes_per_topic)
+    centers = rng.normal(size=(n_topics, d)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    topic = rng.integers(0, n_topics, size=n)
+    c = centers[topic] + (tau / math.sqrt(d)) * rng.normal(
+        size=(n, d)).astype(np.float32)
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+    return centers, c.astype(np.float32)
+
+
+def test_default_nprobe_recall_gate():
+    """recall@1 ≥ 0.99 at the default nprobe on a seeded topic-clustered
+    table — the statistical gate behind ``default_nprobe``'s tuning.
+    Uniform-random tables are *not* the oracle: with no cluster
+    structure coarse pruning is a coin flip, and no real route taxonomy
+    looks like that (the scale benchmark uses the same mixture)."""
+    n, d = 4096, 64
+    centers, c = _clustered_table(n, d, seed=n)
+    cls = np.ones(n, np.float32)
+    scale = np.full(n, 10.0, np.float32)
+    thr = np.full(n, 0.51, np.float32)
+    grp = np.ones(n, np.float32)
+    member = np.ones((1, n), np.float32)
+    default = np.zeros((1, n), np.float32)
+    default[0, 0] = 1.0
+    meta = (cls, scale, thr, grp, member, default)
+    store, qscale = quantize_centroids(c, "int8")
+    ivf = sivf.build_ivf_tables(c, *meta, precision="int8")
+    ns = ivf["heads"].shape[0]
+    nprobe = sivf.default_nprobe(ns)
+    assert nprobe < ns                    # a real pruning ratio
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, centers.shape[0], size=512)
+    q = centers[t] + (0.35 / math.sqrt(d)) * rng.normal(
+        size=(512, d)).astype(np.float32)
+    q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+    wf = np.asarray(kivf.flat_route(
+        jnp.asarray(q), jnp.asarray(store), *[jnp.asarray(v) for v in
+                                              meta],
+        qscale=jnp.asarray(qscale))[3])
+    wi = np.asarray(ops.ivf_route(q, *meta, ivf, nprobe=nprobe)[3])
+    assert (wf == wi).mean() >= 0.99
+
+
+# ---------------------------------------------------------------------------
+# variant selection accounting
+# ---------------------------------------------------------------------------
+
+
+def test_select_route_variant_scale_threshold():
+    assert ops.select_route_variant(ops.IVF_AUTO_MIN_ROUTES, 256) == "ivf"
+    assert ops.select_route_variant(10 * ops.IVF_AUTO_MIN_ROUTES,
+                                    256) == "ivf"
+    small = ops.select_route_variant(256, 64)
+    assert small in ("fused", "fused_dtiled", "jnp")
+
+
+def test_select_fused_variant_quantized_accounting():
+    # a store that busts the budget at f32 but fits at int8 must stay
+    # fully resident at int8 — the bytes-per-centroid fix under test
+    n, d = 2048, 512
+    budget = int(ops.fused_route_vmem_bytes(n, d, centroid_bytes=1.0)
+                 + n * d)      # int8 store + slack < the f32 store's
+                               # extra 3·n·d bytes
+    assert ops.select_fused_variant(n, d, centroid_bytes=4.0,
+                                    budget_bytes=budget) != "fused"
+    assert ops.select_fused_variant(n, d, centroid_bytes=1.0,
+                                    budget_bytes=budget) == "fused"
+    # packed int4 cannot D-tile: past-budget stores degrade to jnp
+    assert ops.select_fused_variant(n, d, centroid_bytes=0.5,
+                                    budget_bytes=1000) == "jnp"
+
+
+def test_precision_centroid_bytes():
+    assert ops.precision_centroid_bytes("f32") == 4.0
+    assert ops.precision_centroid_bytes("bf16") == 2.0
+    assert ops.precision_centroid_bytes("int8") == 1.0
+    assert ops.precision_centroid_bytes("int4") == 0.5
+
+
+# ---------------------------------------------------------------------------
+# engine-level wiring
+# ---------------------------------------------------------------------------
+
+
+def _service(n_routes=16, **kw):
+    import pathlib
+    import sys
+    try:
+        from benchmarks.bench_router import make_dsl
+    except ModuleNotFoundError:
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve()
+                               .parent.parent))
+        from benchmarks.bench_router import make_dsl
+    from repro.serving.router import RouterService
+    return RouterService(make_dsl(n_routes), load_backends=False,
+                         validate=False, **kw)
+
+
+def test_engine_two_stage_matches_flat_decisions():
+    queries = [f"query about topic {i} alpha" for i in range(24)]
+    flat = _service(16)
+    for kw in (dict(two_stage=True),
+               dict(two_stage=True, precision="int8"),
+               dict(kernel="ivf")):
+        two = _service(16, **kw)
+        assert two.engine.two_stage
+        assert two.engine.kernel_mode in ("ivf", "ivf_fused")
+        # full probe: decisions must match the flat engine exactly
+        full = _service(16, two_stage=True, nprobe=10**9,
+                        **{k: v for k, v in kw.items()
+                           if k not in ("two_stage",)})
+        np.testing.assert_array_equal(full.route_indices(queries),
+                                      flat.route_indices(queries))
+        # default nprobe on a 16-route table covers every slab anyway
+        np.testing.assert_array_equal(two.route_indices(queries),
+                                      flat.route_indices(queries))
+
+
+def test_engine_nprobe_clamp_and_attrs():
+    svc = _service(16, two_stage=True, nprobe=10**9)
+    eng = svc.engine
+    ns = eng.tensors["ivf_heads"].shape[0]
+    assert eng.nprobe == ns
+    svc1 = _service(16, two_stage=True, nprobe=1)
+    assert svc1.engine.nprobe == 1
+
+
+def test_engine_two_stage_guards():
+    with pytest.raises(ValueError, match="two_stage=False"):
+        _service(16, two_stage=False, kernel="ivf")
+    # too few probabilistic signals to cluster
+    with pytest.raises(ValueError, match="two_stage"):
+        _service(4, two_stage=True)
+
+
+def test_engine_auto_activation_threshold():
+    # small tables must NOT auto-activate (clustering costs a bind)
+    svc = _service(16)
+    assert not svc.engine.two_stage
+    assert svc.engine.nprobe == 1

@@ -145,6 +145,100 @@ print("SHARDED_E2E ok")
     assert "SHARDED_E2E ok" in stdout
 
 
+def test_sharded_policy_argmax_psum_scatter_parity():
+    """The non-observing sharded route path (term-sharded policy tables,
+    psum_scatter'd staged argmax — no full fired/conf replication) must
+    be *bitwise* identical to the observing sharded path (same sharded
+    signal eval, replicated evaluate_policy): both see the same
+    collective-reduced scores, and got/blocked are integer-valued sums
+    so the term-space staged argmax is order-independent.  Vs the
+    single-device engine, decisions are equal and scores agree to an
+    ulp (collective softmax reduction order differs)."""
+    stdout = _run("""
+import numpy as np, jax, pathlib, sys
+sys.path.insert(0, str(pathlib.Path(%r)))
+from repro.serving.router import RouterService
+from tests.test_signal_pipeline import MIXED_DSL, QUERIES
+from benchmarks.bench_router import make_dsl
+assert jax.device_count() == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+base = RouterService(MIXED_DSL, load_backends=False)
+sh = RouterService(MIXED_DSL, load_backends=False, kernel="fused",
+                   mesh=mesh)
+assert sh.engine.sharded_active and sh._gen.pshard is not None
+i0, s0 = base._route_eval(QUERIES)
+i1, s1 = sh._route_eval(QUERIES)
+assert (i0 == np.asarray(i1)).all()
+assert np.allclose(s0, s1, atol=1e-5)
+obs = RouterService(MIXED_DSL, load_backends=False, kernel="fused",
+                    mesh=mesh, audit=True)
+i2, s2 = obs._route_eval(QUERIES)
+assert (np.asarray(i1) == np.asarray(i2)).all()
+assert np.array_equal(np.asarray(s1), np.asarray(s2))
+queries = [f"query about topic {i} alpha" for i in range(31)]
+for prec in (None, "bf16", "int8"):
+    s1s = RouterService(make_dsl(16), load_backends=False,
+                        validate=False, precision=prec)
+    s8s = RouterService(make_dsl(16), load_backends=False,
+                        validate=False, kernel="fused", mesh=mesh,
+                        precision=prec)
+    s8o = RouterService(make_dsl(16), load_backends=False,
+                        validate=False, kernel="fused", mesh=mesh,
+                        precision=prec, audit=True)
+    assert s8s._gen.pshard is not None
+    a, sa = s1s._route_eval(queries)
+    b, sb = s8s._route_eval(queries)
+    c, sc = s8o._route_eval(queries)
+    assert (a == np.asarray(b)).all(), prec
+    assert (np.asarray(b) == np.asarray(c)).all(), prec
+    assert np.array_equal(np.asarray(sb), np.asarray(sc)), prec
+    assert np.allclose(sa, sb, atol=1e-5), prec
+# Pallas shard_map body: the fused kernel runs *inside* the shard body
+# (interpret-mode on CPU) and must route identically
+sp = RouterService(make_dsl(16), load_backends=False, validate=False,
+                   kernel="fused", mesh=mesh, body_kernel="pallas")
+assert sp._gen.pshard is not None
+ip, _ = sp._route_eval(queries)
+ij, _ = RouterService(make_dsl(16), load_backends=False,
+                      validate=False)._route_eval(queries)
+assert (np.asarray(ip) == np.asarray(ij)).all()
+print("PSHARD_OK")
+""" % str(pathlib.Path(__file__).resolve().parents[1]))
+    assert "PSHARD_OK" in stdout
+
+
+def test_ivf_pallas_body_sharded_parity():
+    """Two-stage engines stay single-device by contract, but the IVF
+    kernels must still agree across lowerings when the rest of the
+    service runs on a mesh host: nprobe=n_slabs reproduces the flat
+    reference bitwise on fired/win under the 8-device runtime."""
+    stdout = _run("""
+import numpy as np, jax, pathlib, sys
+sys.path.insert(0, str(pathlib.Path(%r)))
+from repro.kernels import ops, ref
+from repro.signals.engine import quantize_centroids
+from repro.signals.ivf import build_ivf_tables
+from tests.test_kernels import _fused_route_inputs
+assert jax.device_count() == 8
+for (n, sizes, b, d) in [(33, [5, 4, 3], 18, 64), (130, [9, 8], 7, 32)]:
+    args = _fused_route_inputs(n, sizes, b, seed=n, d=d)
+    x, c = args[0], args[1]
+    meta = args[2:]
+    for precision in ("f32", "int8", "int4"):
+        store, qscale = quantize_centroids(c, precision)
+        ivf = build_ivf_tables(c, *meta, precision=precision)
+        ns = ivf["heads"].shape[0]
+        want = ref.fused_route_ref(x, store, *meta, qscale=qscale)
+        for use_kernel in (False, True):
+            got = ops.ivf_route(x, *meta, ivf, nprobe=ns,
+                                use_kernel=use_kernel)
+            assert (np.asarray(got[2]) == np.asarray(want[2])).all()
+            assert (np.asarray(got[3]) == np.asarray(want[3])).all()
+print("IVF_8DEV ok")
+""" % str(pathlib.Path(__file__).resolve().parents[1]))
+    assert "IVF_8DEV ok" in stdout
+
+
 def test_roofline_consistent_with_artifacts():
     """bench_roofline rows must be derivable from the dryrun artifacts."""
     art = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
