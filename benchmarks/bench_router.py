@@ -738,15 +738,23 @@ WORKLOAD_SLOTS = 1
 WORKLOAD_MAX_SLOTS = 7
 
 
-def _workload_service():
+def _workload_service(queue_cap=None, brownout=False, prefill_chunk=None,
+                      retry=None, breaker=None):
     """A slot-scheduler service on the two-backend chaos policy, warmed
     across the prefill/decode buckets the workload traces hit (batch
     1/2/4/8 at both prompt-length buckets, on both backends) so replay
     measures serving, not XLA compiles — and both A/B arms, built by
-    this same function, start identically warm."""
+    this same function, start identically warm.
+
+    The overload knobs (``queue_cap``, ``brownout``) are applied AFTER
+    the warm-up so warm batches are never shed and every arm warms
+    identically; ``prefill_chunk`` is a constructor knob so the warm-up
+    compiles the chunk step too."""
     from repro.serving.router import RouterService
     svc = RouterService(CHAOS_DSL, max_batch=8, slots=WORKLOAD_SLOTS,
-                        max_slots=WORKLOAD_MAX_SLOTS, audit=True)
+                        max_slots=WORKLOAD_MAX_SLOTS, audit=True,
+                        retry=retry, breaker=breaker,
+                        prefill_chunk=prefill_chunk)
     pad = " padding words here repeated again and again for length"
     for backend_phrase in ("solve the integral algebra",
                            "quantum physics experiment"):
@@ -764,6 +772,13 @@ def _workload_service():
             assert all(r.done for r in w)
     for b in svc.backends:
         svc.scheduler.set_slots(b, WORKLOAD_SLOTS)
+    svc.queue_cap = queue_cap
+    if brownout:
+        from repro.serving.brownout import (BrownoutConfig,
+                                            BrownoutController)
+        cfg = brownout if isinstance(brownout, BrownoutConfig) \
+            else BrownoutConfig()
+        svc.brownout = BrownoutController(svc, cfg)
     return svc
 
 
@@ -914,6 +929,240 @@ def run_workload_smoke() -> list:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# overload-resilient ingress (serving/ingress.py, docs/operations.md)
+# ---------------------------------------------------------------------------
+
+INGRESS_QUEUE_CAP = 6
+
+
+def bench_ingress_chaos() -> tuple:
+    """Ingress chaos smoke: a flash-crowd burst of unique texts, slow
+    clients on tight timeouts, cancelling clients, and one backend
+    killed mid-burst — ALL through the AsyncIngress front door while
+    its serving thread decodes.  Gates: zero crashed steps, every
+    ticket terminal, every shed ticket carries a reason, and the door
+    rejects after drain.  -> (section, lines, failed check names)."""
+    from collections import Counter
+
+    from repro.serving.faults import BreakerConfig, RetryPolicy
+    from repro.serving.ingress import AsyncIngress, IngressConfig
+    lines, failed_checks = [], []
+    svc = _workload_service(
+        queue_cap=INGRESS_QUEUE_CAP,
+        retry=RetryPolicy(max_retries=1, backoff_base_s=0.001),
+        breaker=BreakerConfig(window=8, min_calls=2, cooldown_s=0.1))
+    ing = AsyncIngress(svc, IngressConfig(default_timeout_s=30.0)).start()
+    # slow/cancelling clients go first so they are admitted (not shed)
+    # and their terminal paths — timeout expiry, mid-decode cancel —
+    # actually run under load
+    slow = [ing.submit(f"solve the integral algebra slow {i}",
+                       max_new_tokens=48, timeout_s=0.05)
+            for i in range(3)]
+    cancelling = [ing.submit(f"quantum physics experiment cancel {i}",
+                             max_new_tokens=48) for i in range(3)]
+    flood = []
+    for i in range(24):   # unique-text burst: nothing coalesces
+        phrase = ("solve the integral algebra" if i % 2
+                  else "quantum physics experiment")
+        flood.append(ing.submit(f"{phrase} flood {i}", max_new_tokens=6))
+    time.sleep(0.05)
+    for t in cancelling:
+        t.cancel()
+    svc.faults.inject("backend-math", dead=True)   # chaos: mid-burst kill
+    tickets = flood + slow + cancelling
+    deadline = time.monotonic() + 180.0
+    for t in tickets:
+        t.wait(timeout=max(0.0, deadline - time.monotonic()))
+    summary = ing.drain(timeout_s=30.0)
+    late = ing.submit("solve after drain", max_new_tokens=1)
+    statuses = Counter(t.status for t in tickets)
+    shed = [t for t in tickets if t.status == "shed"]
+    checks = {
+        "zero_crashed_steps": summary["crashed_steps"] == 0,
+        "all_terminal": all(t.done for t in tickets),
+        "shed_reasons_populated": all(t.reason for t in shed),
+        "rejects_after_drain": (late.status == "rejected"
+                                and late.reason == "shutting_down"),
+    }
+    failed_checks += [k for k, ok in checks.items() if not ok]
+    section = {
+        "tickets": len(tickets), "statuses": dict(statuses),
+        "shed_reasons": sorted({t.reason for t in shed})[:4],
+        "ingress": summary, "checks": checks,
+        "scheduler_stats": dict(svc.scheduler.stats),
+        "audit": svc.audit.counts(),
+    }
+    lines.append(
+        f"router/ingress_chaos,0,crashed={summary['crashed_steps']},"
+        f"statuses={dict(statuses)},checks_ok={not failed_checks}")
+    return section, lines, failed_checks
+
+
+def _overload_arm(events, profile, *, ladder: bool) -> dict:
+    """One overload A/B arm: the shared flash-crowd trace through a
+    fresh front door, ladder on or off, per-step diagnostics kept in
+    memory for the boundedness analysis."""
+    from repro.serving.ingress import AsyncIngress, IngressConfig
+    from repro.workloads import (DiagnosticsConfig, DiagnosticsManager,
+                                 replay_trace)
+    svc = _workload_service(queue_cap=INGRESS_QUEUE_CAP, brownout=ladder)
+    ing = AsyncIngress(svc, IngressConfig(default_timeout_s=30.0))
+    diag = DiagnosticsManager(DiagnosticsConfig(),
+                              clock=svc.cbatcher.clock)
+    rep = replay_trace(svc, profile, events=events, diagnostics=diag,
+                       front_door=ing, client_mode="open")
+    summary = ing.drain()
+    # boundedness: admission never queues past the cap; the only other
+    # occupants are evicted-but-admitted requests in the requeue, which
+    # the pooled-row count bounds — so depth past cap+rows = unbounded
+    # growth (the thing the ladder + cap exist to prevent)
+    bound = INGRESS_QUEUE_CAP + WORKLOAD_MAX_SLOTS + 1
+    max_depth = unbounded_steps = 0
+    for rec in diag.records:
+        worst = max(rec["queue_depth"].values(), default=0)
+        max_depth = max(max_depth, worst)
+        if worst > bound:
+            unbounded_steps += 1
+    transitions = (list(svc.brownout.transitions)
+                   if svc.brownout else [])
+    return {
+        "ladder": ladder, "report": rep.to_json(),
+        "ingress": summary, "max_backend_depth": max_depth,
+        "depth_bound": bound, "unbounded_growth_steps": unbounded_steps,
+        "p99_admitted_ms": rep.summary.get("p99_ms"),
+        "brownout_transitions": transitions,
+        "brownout_audited": svc.audit.counts().get("brownout", 0),
+        "final_level": svc.brownout.level if svc.brownout else 0,
+    }
+
+
+def bench_overload_ab() -> tuple:
+    """Overload A/B: the same flash-crowd trace through the front door
+    with the degradation ladder off vs on.  Gates: ladder-on stays
+    inside the queue-depth bound with zero unbounded-growth steps, at
+    least one brownout transition fires and every one is audited, and
+    admitted-request p99 is no worse than ladder-off (1.5x slack for
+    CPU timer noise).  -> (section, lines, failed check names)."""
+    from repro.workloads import generate_trace, get_profile
+    profile = get_profile("flash_crowd").scaled(duration_s=4.0)
+    events = generate_trace(profile)
+    off = _overload_arm(events, profile, ladder=False)
+    on = _overload_arm(events, profile, ladder=True)
+    p99_off, p99_on = off["p99_admitted_ms"], on["p99_admitted_ms"]
+    checks = {
+        "zero_crashed_steps": (off["ingress"]["crashed_steps"] == 0
+                               and on["ingress"]["crashed_steps"] == 0),
+        "ladder_on_bounded": on["unbounded_growth_steps"] == 0,
+        "ladder_engaged": len(on["brownout_transitions"]) >= 1,
+        "transitions_audited": (len(on["brownout_transitions"])
+                                == on["brownout_audited"]),
+        "p99_admitted_no_worse": (p99_off is None or p99_on is None
+                                  or p99_on <= p99_off * 1.5),
+    }
+    failed_checks = [k for k, ok in checks.items() if not ok]
+    section = {"events": len(events), "off": off, "on": on,
+               "checks": checks}
+    lines = [
+        f"router/overload_ab,0,"
+        f"p99_off={'n/a' if p99_off is None else f'{p99_off:.0f}ms'},"
+        f"p99_on={'n/a' if p99_on is None else f'{p99_on:.0f}ms'},"
+        f"shed_off={off['ingress']['shed']},"
+        f"shed_on={on['ingress']['shed']},"
+        f"transitions={len(on['brownout_transitions'])},"
+        f"max_depth_on={on['max_backend_depth']}"
+        f"<=bound={on['depth_bound']}"]
+    return section, lines, failed_checks
+
+
+def _chunk_stall_arm(chunk) -> dict:
+    """Measure per-step wall times while a near-max_seq prompt
+    prefills alongside a steady decode stream (fresh small service,
+    chunked or single-shot)."""
+    from repro.serving.router import RouterService
+    svc = RouterService(CHAOS_DSL, max_batch=4, slots=2, audit=True,
+                        prefill_chunk=chunk)
+    pad = " pad" * 40                  # > max_seq//2 tokens after cap
+    warm = svc.enqueue(["solve the integral algebra warm",
+                        f"solve the integral algebra warm{pad}"],
+                       max_new_tokens=2)
+    svc.serve_forever(max_steps=2000)
+    assert all(r.done for r in warm)
+    # steady decode-only baseline
+    svc.enqueue(["solve the integral algebra steady"], max_new_tokens=24)
+    decode_ms = []
+    for _ in range(16):
+        t0 = time.perf_counter()
+        svc.serve_step()
+        decode_ms.append((time.perf_counter() - t0) * 1e3)
+    # inject the long prompt mid-stream; time every step to drain
+    svc.enqueue([f"solve the integral algebra longest{pad}"],
+                max_new_tokens=4)
+    stall_ms = []
+    while svc._has_pending_work() and len(stall_ms) < 400:
+        t0 = time.perf_counter()
+        svc.serve_step()
+        stall_ms.append((time.perf_counter() - t0) * 1e3)
+    return {
+        "chunk": chunk,
+        "decode_p50_ms": float(np.percentile(decode_ms, 50)),
+        "decode_p99_ms": float(np.percentile(decode_ms, 99)),
+        "max_step_ms": float(max(stall_ms)),
+        "steps_with_long_prompt": len(stall_ms),
+        "prefill_chunks": svc.scheduler.stats.get("prefill_chunks", 0),
+    }
+
+
+def bench_chunk_stall() -> tuple:
+    """Chunked-prefill stall A/B: a near-max_seq prompt arriving into a
+    live decode stream, single-shot vs chunked.  Gate: with chunking
+    on, no whole step stalls past the pooled-step budget (3x the
+    decode-step p99 — a chunk step attends over chunk-width positions,
+    so it costs a small constant over one decode step, never a full
+    prompt's worth).  -> (section, lines, failed check names)."""
+    single = _chunk_stall_arm(None)
+    chunked = _chunk_stall_arm(8)
+    budget_ms = 3.0 * chunked["decode_p99_ms"]
+    checks = {
+        "chunks_ran": chunked["prefill_chunks"] > 0,
+        "no_stall_past_budget": chunked["max_step_ms"] <= budget_ms,
+    }
+    failed_checks = [k for k, ok in checks.items() if not ok]
+    section = {"single_shot": single, "chunked": chunked,
+               "step_budget_ms": budget_ms, "checks": checks}
+    lines = [
+        f"router/chunked_prefill_stall,0,"
+        f"single_max={single['max_step_ms']:.1f}ms,"
+        f"chunked_max={chunked['max_step_ms']:.1f}ms,"
+        f"budget={budget_ms:.1f}ms,"
+        f"chunks={chunked['prefill_chunks']}"]
+    return section, lines, failed_checks
+
+
+def run_ingress_smoke() -> list:
+    """CI entry (``--ingress-smoke``): the ingress chaos smoke, the
+    overload (degradation-ladder) A/B, and the chunked-prefill stall
+    gate, merged into BENCH_router.json.  Exits 1 on any failed
+    check."""
+    chaos_sec, lines, failed = bench_ingress_chaos()
+    ab_sec, ab_lines, ab_failed = bench_overload_ab()
+    chunk_sec, ck_lines, ck_failed = bench_chunk_stall()
+    lines += ab_lines + ck_lines
+    failed += [f"overload_ab:{c}" for c in ab_failed]
+    failed += [f"chunk_stall:{c}" for c in ck_failed]
+    merge_bench_json(JSON_PATH, "ingress", {
+        "chaos": chaos_sec, "overload_ab": ab_sec,
+        "chunked_prefill": chunk_sec})
+    lines.append(f"router/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    if failed:
+        print(f"router/INGRESS_SMOKE_FAILED,0,{','.join(failed)}",
+              file=sys.stderr)
+        sys.exit(1)
+    return lines
+
+
 def main(argv=None) -> list:
     argv = sys.argv[1:] if argv is None else list(argv)
     if _WORKER_FLAG in argv:
@@ -923,6 +1172,8 @@ def main(argv=None) -> list:
         return run_chaos_smoke()
     if "--workload-smoke" in argv:
         return run_workload_smoke()
+    if "--ingress-smoke" in argv:
+        return run_ingress_smoke()
     if "--scale" in argv:
         return run_scale(argv)
     if "--scenario" in argv:

@@ -23,6 +23,19 @@ Operating the fault-tolerant tier:
 and calls ``RouterService.rebind`` on change: the new policy passes the
 conflict admission gate (or is rejected, old generation untouched) and
 new arrivals flip atomically to the new generation.
+
+Overload-resilient front door (docs/operations.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --continuous --slots 2 \
+      --ingress --queue-cap 16 --brownout --timeout-s 30 \
+      --requests "solve x^2=4" "what is DNA"
+
+``--ingress`` serves through ``AsyncIngress``: requests are submitted
+concurrently with decoding, bounded queues shed with a reason instead
+of growing, ``--timeout-s`` expires stragglers, ``--brownout`` enables
+the graceful-degradation ladder, and ``--prefill-chunk N`` prefills
+long prompts across pooled steps (slot scheduler only).  Works with
+``--scenario`` too (``--client-mode open|closed``).
 """
 from __future__ import annotations
 
@@ -156,6 +169,32 @@ def main(argv=None):
                     help="poll --config for edits and hot-swap the "
                          "policy through the conflict admission gate")
     ap.add_argument("--rebind-poll-s", type=float, default=0.5)
+    # ---- overload-resilient ingress (docs/operations.md) --------------------
+    ap.add_argument("--ingress", action="store_true",
+                    help="serve through the AsyncIngress front door "
+                         "(bounded intake, cancellation, graceful "
+                         "drain); implies --continuous")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="per-backend admission-queue bound; arrivals "
+                         "past it are shed with a reason instead of "
+                         "queued")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="hard per-request expiry (swept mid-decode, "
+                         "slot/KV freed)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="enable the graceful-degradation ladder "
+                         "(shed wider -> nprobe down -> precision "
+                         "down, with hysteresis; every transition "
+                         "audited)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: long prompts prefill N "
+                         "tokens per pooled step instead of stalling "
+                         "a whole step (slot scheduler only)")
+    ap.add_argument("--client-mode", default="open",
+                    choices=["open", "closed"],
+                    help="front-door client shape for --scenario "
+                         "replay (open-loop trace offsets vs a fixed "
+                         "concurrency window)")
     # ---- workload harness (docs/workloads.md) -------------------------------
     ap.add_argument("--scenario", default=None,
                     help="replay a named workload profile (e.g. "
@@ -171,8 +210,11 @@ def main(argv=None):
                     help="per-step diagnostics JSONL path for "
                          "--scenario replay")
     args = ap.parse_args(argv)
-    if args.scenario:
+    if args.scenario or args.ingress:
         args.continuous = True
+    if args.prefill_chunk is not None and args.slots is None:
+        ap.error("--prefill-chunk requires --slots (chunks run through "
+                 "the pooled slot scheduler)")
     if args.slots is not None and not args.continuous:
         ap.error("--slots requires --continuous (the slot scheduler "
                  "drives the continuous-batching loop)")
@@ -212,7 +254,10 @@ def main(argv=None):
                         mesh=mesh, slots=args.slots,
                         max_slots=args.max_slots, preempt=args.preempt,
                         audit=audit, monitor=args.monitor or None,
-                        retry=retry, breaker=breaker)
+                        retry=retry, breaker=breaker,
+                        queue_cap=args.queue_cap,
+                        brownout=args.brownout or None,
+                        prefill_chunk=args.prefill_chunk)
     for d in svc.diagnostics:
         print(f"[validate] {d}")
     for spec in args.fault_rate:
@@ -234,6 +279,11 @@ def main(argv=None):
     # batcher's injectable monotonic clock (time.time() here would skew
     # against scheduler slack computations under NTP adjustment)
     t0 = svc.cbatcher.clock()
+    front = None
+    if args.ingress:
+        from repro.serving.ingress import AsyncIngress, IngressConfig
+        front = AsyncIngress(svc, IngressConfig(
+            default_timeout_s=args.timeout_s))
     try:
         if args.scenario:
             from repro.workloads import (AutoscaleConfig,
@@ -250,7 +300,11 @@ def main(argv=None):
                     min_slots=args.slots,
                     max_slots=args.max_slots or max(args.slots, 4)))
             rep = replay_trace(svc, profile, diagnostics=diag,
-                               autoscaler=scaler)
+                               autoscaler=scaler, front_door=front,
+                               client_mode=args.client_mode,
+                               client_timeout_s=args.timeout_s)
+            if front is not None:
+                print(f"[serve] ingress drain: {front.drain()}")
             diag.close()
             print(f"[serve] scenario {profile.name}: "
                   f"{rep.completed}/{rep.enqueued} completed, "
@@ -263,7 +317,24 @@ def main(argv=None):
             if svc.scheduler is not None:
                 print(f"[serve] scheduler stats: {svc.scheduler.stats}")
             return []
-        if args.continuous:
+        if front is not None:
+            front.start()
+            tickets = [front.submit(t, max_new_tokens=args.new_tokens,
+                                    slo_ms=args.slo_ms)
+                       for t in args.requests]
+            for t in tickets:
+                t.wait(timeout=600.0)
+            print(f"[serve] ingress drain: {front.drain()}")
+            reqs = [t.request for t in tickets if t.request is not None]
+            done = sum(t.status == "done" for t in tickets)
+            for t in tickets:
+                if t.status != "done":
+                    print(f"[serve] {t.text[:48]!r} -> {t.status}"
+                          + (f" ({t.reason})" if t.reason else ""))
+            print(f"[serve] continuous stats: {svc.cbatcher.stats}")
+            if svc.scheduler is not None:
+                print(f"[serve] scheduler stats: {svc.scheduler.stats}")
+        elif args.continuous:
             reqs = svc.enqueue(args.requests,
                                max_new_tokens=args.new_tokens,
                                slo_ms=args.slo_ms)

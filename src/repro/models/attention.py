@@ -204,8 +204,11 @@ def self_attention(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
         new_cache = None
         if collect is not None:
             new_cache = _collect_cache(k, v, positions, spec, collect)
-    else:
+    elif x.shape[1] == 1:
         out, new_cache = _decode_attend(q, k, v, cache, pos, spec, cfg, scale)
+    else:
+        out, new_cache = _chunk_attend(q, k, v, cache, positions, spec,
+                                       cfg, scale)
 
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, new_cache
@@ -263,6 +266,39 @@ def _decode_attend(q, k_new, v_new, cache, pos, spec: LayerSpec,
     s = _scores(qg, ck, scale)
     s = cm.softcap(s, cfg.logit_softcap)
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _combine(p, cv, q.dtype)
+    return out, {"k": ck, "v": cv}
+
+
+def _chunk_attend(q, k_new, v_new, cache, positions, spec: LayerSpec,
+                  cfg: ModelConfig, scale):
+    """Multi-token cache extension: chunked prefill's attention step.
+
+    Writes a (B, C) chunk of K/V into the cache at per-row absolute
+    ``positions`` (position i = row's chunk start + i) and attends each
+    query against the full cache width with a per-query causal validity
+    mask ``cache_slot <= position``.  Later writes from this same chunk
+    sit at strictly greater positions, so causality falls out of the
+    mask with no intra-chunk special case; cache slots past the row's
+    true prompt length hold garbage that the mask excludes until decode
+    overwrites them.  Windowed (ring-buffer) caches are not supported —
+    a chunk could wrap the ring — which ``supports_chunked_prefill``
+    gates at the model level."""
+    if spec.window is not None:
+        raise ValueError("chunked prefill does not support windowed "
+                         "attention caches")
+    ck, cv = cache["k"], cache["v"]
+    b, w = ck.shape[0], ck.shape[1]
+    positions = jnp.asarray(positions, jnp.int32)
+    rows = jnp.arange(b)[:, None]
+    ck = ck.at[rows, positions].set(k_new.astype(ck.dtype))
+    cv = cv.at[rows, positions].set(v_new.astype(cv.dtype))
+    valid = jnp.arange(w)[None, None, :] <= positions[:, :, None]  # (B,C,w)
+    qg = _group(q, ck.shape[2])
+    s = _scores(qg, ck, scale)                     # (B,KV,G,C,w)
+    s = cm.softcap(s, cfg.logit_softcap)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = _combine(p, cv, q.dtype)
     return out, {"k": ck, "v": cv}

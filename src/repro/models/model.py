@@ -133,6 +133,52 @@ class Model:
                           cfg.norm_eps, cfg.post_norm)
         return self._logits(params, x)[:, 0], cache
 
+    def supports_chunked_prefill(self) -> bool:
+        """Whether ``prefill_chunk`` is valid for this config: every
+        layer must be pure causal self-attention with a full (non-ring)
+        cache.  Windowed attention (a chunk could wrap the ring
+        buffer), recurrent mixers (single-token state transition),
+        cross-attention/encoder/vision inputs are all out."""
+        cfg = self.cfg
+        if cfg.encoder is not None or cfg.vision is not None:
+            return False
+        return all(spec.mixer == ATTN and spec.window is None
+                   and spec.causal and not spec.cross
+                   for spec in cfg.layer_specs())
+
+    def prefill_chunk(self, params, cache, tokens, pos0):
+        """Extend a decode cache by a multi-token chunk — the chunked-
+        prefill step.  ``tokens``: (B, C); ``pos0``: (B,) int32 chunk
+        start position per row (the row's tokens occupy absolute
+        positions ``pos0 .. pos0+C-1``).  Rows whose prompt is shorter
+        than the chunk carry padding tokens at the tail; their cache
+        writes land at positions >= the true length, which every causal
+        validity mask excludes until decode overwrites them.
+        -> (logits (B, C, V) f32 — one row per chunk position, the
+        caller reads the last *valid* one — and the updated cache).
+        Only valid when ``supports_chunked_prefill()``."""
+        cfg = self.cfg
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        x = cm.take_embedding(params["tok_embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        positions = (pos0[:, None]
+                     + jnp.arange(tokens.shape[1], dtype=jnp.int32)[None])
+        if cfg.partial_rotary == 0:
+            # sinusoidal absolute rows at per-row positions
+            d = cfg.d_model
+            posf = positions[..., None].astype(jnp.float32)  # (B, C, 1)
+            dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, None, :]
+            ang = posf / jnp.power(10_000.0, dim / d)
+            row = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                                  axis=-1)[..., :d]
+            x = x + row.astype(x.dtype)
+        x, new_cache, _ = pattern.apply_stack(
+            params["stack"], cfg, x, positions, cache=cache, pos=pos0)
+        x = cm.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps,
+                          cfg.post_norm)
+        return self._logits(params, x), new_cache
+
     def decode_step(self, params, cache, tokens, pos):
         """tokens: (B, 1); pos: scalar int (next position, whole batch)
         or (B,) int32 per-row positions (slot-based decode: every slot

@@ -19,6 +19,15 @@ file whose length is kept under a retention cap by periodic compaction
   * ``conflict_alert``  — OnlineConflictMonitor findings surfaced from
                           the live score stream (paper §10 made
                           operational)
+  * ``shed``            — admission rejected a request under queue
+                          pressure (``detail`` carries the reason)
+  * ``cancel``          — client cancellation observed by the sweep
+                          (slot/KV freed mid-decode)
+  * ``timeout``         — hard per-request expiry fired
+  * ``brownout``        — graceful-degradation ladder transition
+                          (``detail``: from/to level, pressure, actions)
+  * ``drain``           — ingress graceful shutdown summary (final
+                          counters, whether the drain completed clean)
 
 Query *text* never enters the trail — only its hash — so the audit file
 can outlive the requests' privacy budget.

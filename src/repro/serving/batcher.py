@@ -66,11 +66,66 @@ class Request:
     retries: int = 0                      # backend attempts beyond the first
     fallback_used: bool = False           # re-routed off the routed backend
     generation: int = 0                   # policy generation that routed it
+    # ingress / overload-control bookkeeping:
+    cancelled: bool = False               # client hung up (terminal)
+    timed_out: bool = False               # hard expiry fired (terminal)
+    shed: bool = False                    # rejected at admission (terminal)
+    shed_reason: str = ""                 # why (when shed)
+    expire_s: Optional[float] = None      # absolute hard timeout; None = none
 
     def slack(self, now: float) -> float:
         """Seconds until the deadline; +inf for best-effort requests."""
         return float("inf") if self.deadline_s is None \
             else self.deadline_s - now
+
+    def cancel(self) -> None:
+        """Request cancellation (idempotent, thread-safe: a single bool
+        store).  The serving loop observes the flag at its next sweep
+        and retires the request — freeing its decode slot and KV rows if
+        it is mid-decode — so cancellation takes effect within one
+        pooled step without interrupting compiled work in flight."""
+        self.cancelled = True
+
+
+def terminal_due(req: Request, now: float) -> bool:
+    """True when the sweep should finish ``req``: the client cancelled,
+    or its hard ``expire_s`` timeout has passed (and it is not already
+    terminal)."""
+    return (not req.done) and (
+        req.cancelled
+        or (req.expire_s is not None and now >= req.expire_s))
+
+
+def sweep_followers(req: Request, now: float,
+                    finish: Callable[[Request], None]) -> int:
+    """Detach and finish any cancelled/expired coalesced followers of
+    ``req`` (the leader keeps decoding for the live riders).
+    -> number of followers finished."""
+    dead = [f for f in req.followers if terminal_due(f, now)]
+    if dead:
+        req.followers = [f for f in req.followers
+                         if not terminal_due(f, now)]
+        for f in dead:
+            finish(f)
+    return len(dead)
+
+
+def promote_follower(req: Request) -> Optional[Request]:
+    """Hand a terminal leader's in-flight role to its first live
+    follower: the promoted request inherits the tokens decoded so far
+    plus the remaining followers, so a client cancelling a coalesced
+    leader never kills the riders sharing its decode slot.
+    -> the promoted request, or None when there are no followers."""
+    if not req.followers:
+        return None
+    promoted = req.followers[0]
+    promoted.followers = req.followers[1:]
+    req.followers = []
+    promoted.coalesced = False
+    promoted.output_tokens = list(req.output_tokens)
+    promoted.truncated = req.truncated
+    promoted.preemptions = req.preemptions
+    return promoted
 
 
 class Batcher:
@@ -206,6 +261,50 @@ class ContinuousBatcher:
             del self.queues[backend]
         self.stats["batches"] += 1
         return backend, batch
+
+    # ---- overload sweep ----------------------------------------------------
+    def replace_inflight(self, old: Request,
+                         new: Optional[Request]) -> None:
+        """Re-point the coalescing key from a terminal leader ``old`` to
+        its promoted follower ``new`` (or drop it when ``new`` is None),
+        so later duplicates coalesce onto the promoted rider instead of
+        a dead request."""
+        key = (old.backend, old.text, old.max_new_tokens)
+        if self._inflight.get(key) is old:
+            if new is None:
+                del self._inflight[key]
+            else:
+                self._inflight[key] = new
+
+    def sweep_terminal(self, now: float,
+                       finish: Callable[[Request], None]) -> int:
+        """Remove cancelled/expired requests from the admission queues
+        before batch formation.  Dead coalesced followers are detached
+        and finished individually; a dead queued leader hands its place
+        (and coalescing key) to its first live follower via
+        ``promote_follower``.  ``finish`` finalizes each dead request
+        (flags, audit, ``finish_request``).  -> leaders+followers swept.
+        """
+        swept = 0
+        for backend in list(self.queues):
+            q = self.queues[backend]
+            kept: deque = deque()
+            for req in q:
+                swept += sweep_followers(req, now, finish)
+                if not terminal_due(req, now):
+                    kept.append(req)
+                    continue
+                promoted = promote_follower(req)
+                self.replace_inflight(req, promoted)
+                if promoted is not None:
+                    kept.append(promoted)
+                finish(req)
+                swept += 1
+            if kept:
+                self.queues[backend] = kept
+            else:
+                del self.queues[backend]
+        return swept
 
     # ---- slot-scheduler admission ------------------------------------------
     def finish_inflight(self, req: Request) -> None:

@@ -1,0 +1,182 @@
+"""Graceful-degradation (brownout) ladder for the serving tier.
+
+Under sustained admission-queue pressure the service steps *down*
+through deterministic brownout levels — each level trades a little
+quality or recall for headroom — and steps back *up* with hysteresis
+once pressure stays low, so the ladder never flaps on a single bursty
+step:
+
+* **L0** — healthy: full queue caps, bind-time ``nprobe``, bind-time
+  centroid precision.
+* **L1** — widen admission shedding: the effective per-backend queue
+  cap shrinks by ``shed_factor``, so the front door rejects earlier
+  (with an explicit reason) instead of letting latency pile up in the
+  queue.
+* **L2** — reduce IVF recall: ``SignalEngine.set_nprobe`` narrows the
+  coarse stage toward ``nprobe_floor`` (a no-op on non-two-stage
+  engines, still audited so the transition is visible).
+* **L3** — degrade centroid precision *for new binds*: the router's
+  ``_engine_opts["precision"]`` steps one rung down the
+  f32 → bf16 → int8 ladder, so the next ``rebind`` builds a cheaper
+  store; in-flight generations are untouched.
+
+Pressure is an EWMA of the worst per-backend queue occupancy
+(``depth / queue_cap``).  Transitions require ``down_patience``
+consecutive high-pressure observations to tighten and ``up_patience``
+consecutive low-pressure observations to relax — the hysteresis — and
+every transition is audited via ``AuditSink`` as a ``brownout`` record
+with the from/to levels, the pressure reading, and the actions taken.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+# one-rung precision step-down for new binds at L3 (int4 is already the
+# cheapest store; it has nowhere to go)
+_PRECISION_STEP = {None: "bf16", "f32": "bf16", "bf16": "int8",
+                   "int8": "int8", "int4": "int4"}
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutConfig:
+    """Tuning for the degradation ladder.
+
+    Attributes:
+        high_watermark: pressure at/above which an observation counts
+            toward tightening (stepping the level up).
+        low_watermark: pressure at/below which an observation counts
+            toward relaxing (stepping the level down).
+        down_patience: consecutive high-pressure observations required
+            to tighten one level.
+        up_patience: consecutive low-pressure observations required to
+            relax one level (the hysteresis: larger than
+            ``down_patience`` so recovery is deliberate).
+        shed_factor: effective-queue-cap multiplier at L1+ (in (0, 1)).
+        nprobe_floor: the recall floor — L2 never narrows ``nprobe``
+            below this.
+        max_level: highest level the ladder will reach (3 = precision
+            degradation enabled).
+        ewma: smoothing factor for the pressure signal (1.0 = raw).
+    """
+
+    high_watermark: float = 0.85
+    low_watermark: float = 0.35
+    down_patience: int = 2
+    up_patience: int = 8
+    shed_factor: float = 0.5
+    nprobe_floor: int = 1
+    max_level: int = 3
+    ewma: float = 0.5
+
+
+class BrownoutController:
+    """Observes queue pressure each serve step and actuates the ladder.
+
+    Owned by ``RouterService`` (which calls ``observe`` at the top of
+    every ``serve_step``); reads the admission queues, actuates
+    ``SignalEngine.set_nprobe`` and the router's new-bind precision,
+    and audits every level transition.
+    """
+
+    def __init__(self, svc, cfg: Optional[BrownoutConfig] = None):
+        self.svc = svc
+        self.cfg = cfg or BrownoutConfig()
+        self.level = 0
+        self.pressure = 0.0
+        self.transitions: List[Dict[str, Any]] = []
+        self._hot = 0
+        self._cool = 0
+        # baselines restored when the ladder steps back up
+        self._base_nprobe = int(getattr(svc.engine, "nprobe", 1))
+        self._base_precision = svc._engine_opts.get("precision")
+
+    # ---- pressure ----------------------------------------------------------
+    def _raw_pressure(self) -> float:
+        cap = self.svc.queue_cap
+        if not cap:
+            return 0.0
+        depth: Dict[str, int] = {}
+        for b, q in self.svc.cbatcher.queues.items():
+            depth[b] = depth.get(b, 0) + len(q)
+        if self.svc.scheduler is not None:
+            for b, q in self.svc.scheduler.requeue.items():
+                depth[b] = depth.get(b, 0) + len(q)
+        return max(depth.values()) / cap if depth else 0.0
+
+    # ---- actuation ---------------------------------------------------------
+    def _nprobe_target(self, level: int) -> int:
+        base = max(self._base_nprobe, 1)
+        floor = max(1, self.cfg.nprobe_floor)
+        if level < 2:
+            return base
+        if level == 2:
+            return max(floor, base // 2)
+        return floor
+
+    def _apply(self, old: int, new: int, now: float) -> None:
+        svc = self.svc
+        actions = []
+        if new >= 1 > old or old >= 1 > new:
+            actions.append(f"queue_cap x{self.cfg.shed_factor}"
+                           if new >= 1 else "queue_cap restored")
+        target = self._nprobe_target(new)
+        if getattr(svc.engine, "two_stage", False):
+            got = svc.engine.set_nprobe(target)
+            if got != self._nprobe_target(old):
+                actions.append(f"nprobe -> {got}")
+        elif (new >= 2) != (old >= 2):
+            actions.append("nprobe no-op (flat engine)")
+        if new >= 3:
+            stepped = _PRECISION_STEP[self._base_precision]
+            if svc._engine_opts.get("precision") != stepped:
+                svc._engine_opts["precision"] = stepped
+                actions.append(f"bind precision -> {stepped}")
+        elif svc._engine_opts.get("precision") != self._base_precision:
+            svc._engine_opts["precision"] = self._base_precision
+            actions.append(f"bind precision restored "
+                           f"({self._base_precision or 'default'})")
+        rec = {"from": old, "to": new, "t_s": now,
+               "pressure": round(self.pressure, 4), "actions": actions}
+        self.transitions.append(rec)
+        if svc.audit:
+            svc.audit.log("brownout", detail=rec)
+
+    def observe(self, now: float) -> int:
+        """One pressure observation; steps the ladder when patience is
+        exhausted.  Also re-asserts the L2+ nprobe target so a hot-swap
+        rebind (which builds a fresh engine at bind-time nprobe) falls
+        back into the brownout regime within one step.
+        -> the current level."""
+        raw = self._raw_pressure()
+        a = self.cfg.ewma
+        self.pressure = a * raw + (1.0 - a) * self.pressure
+        if self.pressure >= self.cfg.high_watermark:
+            self._hot += 1
+            self._cool = 0
+        elif self.pressure <= self.cfg.low_watermark:
+            self._cool += 1
+            self._hot = 0
+        else:
+            self._hot = self._cool = 0
+        old = self.level
+        if self._hot >= self.cfg.down_patience \
+                and self.level < self.cfg.max_level:
+            self.level += 1
+            self._hot = 0
+        elif self._cool >= self.cfg.up_patience and self.level > 0:
+            self.level -= 1
+            self._cool = 0
+        if self.level != old:
+            self._apply(old, self.level, now)
+        elif self.level >= 2 and getattr(self.svc.engine,
+                                         "two_stage", False):
+            self.svc.engine.set_nprobe(self._nprobe_target(self.level))
+        return self.level
+
+    def effective_cap(self, cap: Optional[int]) -> Optional[int]:
+        """The admission queue cap at the current level (L1+ widens
+        shedding by shrinking the cap by ``shed_factor``)."""
+        if cap is None or self.level < 1:
+            return cap
+        return max(1, int(cap * self.cfg.shed_factor))

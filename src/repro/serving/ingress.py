@@ -1,0 +1,343 @@
+"""Async ingress: the serving tier's real front door.
+
+``RouterService`` so far consumed pre-built request lists via
+``enqueue(now=...)`` replay.  ``AsyncIngress`` makes arrivals real: any
+thread calls ``submit`` and gets an ``IngressTicket`` back immediately,
+while a dedicated serving thread drains the intake, routes/admits
+through ``RouterService.enqueue``, and drives ``serve_step`` — so
+requests land *mid-step* with no replay tricks, and every overload
+mechanism downstream (queue caps, shedding, timeouts, cancellation,
+the brownout ladder) is exercised by genuinely concurrent traffic.
+
+Design invariants:
+
+* **Single serving thread.**  Only the loop thread ever touches the
+  service (``enqueue`` / ``serve_step`` / ``telemetry``); ``submit``
+  only appends to a lock-guarded bounded intake deque.  No JAX call
+  crosses threads, no callback runs off-loop.
+* **Bounded everywhere.**  The intake is capped (``max_intake``;
+  rejected with reason ``intake_full``), and the service's per-backend
+  admission queues are capped by the router's ``queue_cap`` (shed with
+  reason ``queue_full:<backend>``) — queue growth is never unbounded.
+* **Cancellation is a flag, observation is a sweep.**  A client's
+  ``ticket.cancel()`` sets ``Request.cancelled`` (one bool store —
+  thread-safe under the GIL); the scheduler's sweep retires the request
+  at the next step, freeing its decode slot and pooled KV row
+  mid-decode.  Hard per-request timeouts (``timeout_s``) expire the
+  same way.
+* **Graceful drain.**  ``drain()`` stops accepting (post-drain submits
+  are rejected with reason ``shutting_down``), lets in-flight requests
+  finish within a budget, cancels the stragglers, flushes the audit
+  trail (a terminal ``drain`` record + retention enforcement), and
+  joins the serving thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.serving.batcher import Request
+
+# ticket lifecycle: pending -> admitted -> done|failed|timed_out|cancelled
+#                   pending -> rejected (intake full / shutting down)
+#                   pending/admitted -> shed (router queue cap)
+PENDING, ADMITTED, DONE, FAILED = "pending", "admitted", "done", "failed"
+REJECTED, SHED, TIMED_OUT, CANCELLED = ("rejected", "shed", "timed_out",
+                                        "cancelled")
+_TERMINAL = frozenset({DONE, FAILED, REJECTED, SHED, TIMED_OUT, CANCELLED})
+
+
+@dataclasses.dataclass(frozen=True)
+class IngressConfig:
+    """Front-door tuning.
+
+    Attributes:
+        max_intake: bound on the submit -> serving-thread handoff deque;
+            submits past it are rejected with reason ``intake_full``.
+        default_timeout_s: hard per-request expiry applied when a
+            ``submit`` does not pass its own (``None`` = no timeout).
+        drain_timeout_s: how long ``drain()`` lets in-flight requests
+            finish before cancelling the stragglers.
+        admit_batch: max submissions admitted (routed as one batch) per
+            loop turn — keeps routing batched without starving steps.
+        step_poll_s: idle sleep when there is neither intake nor
+            pending serving work.
+    """
+
+    max_intake: int = 256
+    default_timeout_s: Optional[float] = None
+    drain_timeout_s: float = 30.0
+    admit_batch: int = 16
+    step_poll_s: float = 0.0005
+
+
+class IngressTicket:
+    """A client's handle on one submitted request.
+
+    Thread-safe for the client side: ``wait`` blocks on a
+    ``threading.Event`` the serving thread sets at terminal resolution,
+    ``cancel`` requests cancellation (effective within one serve step),
+    and ``status``/``reason``/``output_tokens`` read the resolved
+    outcome."""
+
+    def __init__(self, text: str, max_new_tokens: int,
+                 slo_ms: Optional[float], timeout_s: Optional[float],
+                 metadata: Optional[Dict[str, Any]] = None):
+        self.text = text
+        self.max_new_tokens = max_new_tokens
+        self.slo_ms = slo_ms
+        self.timeout_s = timeout_s
+        self.metadata = metadata
+        self.status = PENDING
+        self.reason = ""
+        self.request: Optional[Request] = None
+        self._event = threading.Event()
+        self._cancel_requested = False
+
+    def cancel(self) -> None:
+        """Request cancellation (idempotent, any thread).  If the
+        request is already admitted this sets its ``cancelled`` flag —
+        the scheduler sweep frees its slot/KV at the next step; if it is
+        still in the intake the serving thread drops it un-admitted."""
+        self._cancel_requested = True
+        req = self.request
+        if req is not None:
+            req.cancel()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the ticket is terminal.  -> True when resolved
+        within ``timeout`` seconds (``None`` = wait forever)."""
+        return self._event.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        """True once the ticket reached a terminal status."""
+        return self._event.is_set()
+
+    @property
+    def output_tokens(self) -> List[int]:
+        """Decoded tokens (empty until served)."""
+        return list(self.request.output_tokens) if self.request else []
+
+    def _resolve(self, status: str, reason: str = "") -> None:
+        self.status = status
+        self.reason = reason
+        self._event.set()
+
+
+class AsyncIngress:
+    """The thread front door over one ``RouterService``.
+
+    ``start()`` launches the serving loop; any thread then ``submit``s
+    and waits on the returned ticket.  ``counters`` (loop-owned ints,
+    atomic reads) expose submitted/rejected/admitted/resolved totals
+    plus ``steps`` and ``crashed_steps``; ``drain()`` is the graceful
+    shutdown.
+    """
+
+    def __init__(self, svc, config: Optional[IngressConfig] = None,
+                 on_step: Optional[Callable[..., None]] = None,
+                 on_request_done: Optional[Callable[[Request], None]]
+                 = None):
+        """Args:
+            svc: the ``RouterService`` to serve through (the loop
+                thread becomes its sole driver).
+            config: ``IngressConfig`` (defaults applied when None).
+            on_step: optional ``f(step, telemetry, completed, now)``
+                called on the serving thread after every serve step —
+                the hook the replay harness uses for diagnostics and
+                autoscaling (never call it from another thread).
+            on_request_done: optional per-request terminal hook, also
+                on the serving thread (admitted requests only).
+        """
+        self.svc = svc
+        self.cfg = config or IngressConfig()
+        self.on_step = on_step
+        self.on_request_done = on_request_done
+        self._intake: deque = deque()
+        self._lock = threading.Lock()
+        self._accepting = True
+        self._stop = threading.Event()
+        self._force_exit = threading.Event()
+        self._live: List[IngressTicket] = []   # serving-thread-owned
+        self.live_count = 0                    # loop-published (atomic)
+        self.idle = True                       # loop-published (atomic)
+        self.counters = {"submitted": 0, "rejected": 0, "admitted": 0,
+                         "shed": 0, "done": 0, "failed": 0,
+                         "timed_out": 0, "cancelled": 0,
+                         "steps": 0, "crashed_steps": 0}
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="ingress-serve",
+                                        daemon=True)
+
+    # ---- client side -------------------------------------------------------
+    def start(self) -> "AsyncIngress":
+        """Launch the serving thread (idempotent).  -> self."""
+        if not self._thread.is_alive() and not self._stop.is_set():
+            try:
+                self._thread.start()
+            except RuntimeError:       # already started once
+                pass
+        return self
+
+    def submit(self, text: str, *, max_new_tokens: int = 8,
+               slo_ms: Optional[float] = None,
+               timeout_s: Optional[float] = None,
+               metadata: Optional[Dict[str, Any]] = None) -> IngressTicket:
+        """Submit one request from any thread.  Never blocks: the
+        ticket comes back immediately, resolved as ``rejected`` (with
+        ``reason``) when the front door is shutting down or the intake
+        is full — explicit backpressure instead of unbounded queueing.
+        """
+        if timeout_s is None:
+            timeout_s = self.cfg.default_timeout_s
+        t = IngressTicket(text, max_new_tokens, slo_ms, timeout_s,
+                          metadata)
+        with self._lock:
+            self.counters["submitted"] += 1
+            if not self._accepting:
+                self.counters["rejected"] += 1
+                t._resolve(REJECTED, "shutting_down")
+            elif len(self._intake) >= self.cfg.max_intake:
+                self.counters["rejected"] += 1
+                t._resolve(REJECTED, "intake_full")
+            else:
+                self._intake.append(t)
+        return t
+
+    def drain(self, timeout_s: Optional[float] = None) -> Dict[str, Any]:
+        """Graceful shutdown: stop accepting, let in-flight requests
+        finish within the budget, cancel the stragglers, flush the
+        audit trail, join the serving thread.  -> final counters (plus
+        ``drained_clean``: True when nothing had to be cancelled)."""
+        budget = self.cfg.drain_timeout_s if timeout_s is None \
+            else timeout_s
+        with self._lock:
+            self._accepting = False
+        deadline = time.monotonic() + budget
+        while not self._drained() and time.monotonic() < deadline:
+            time.sleep(0.002)
+        clean = self._drained()
+        if not clean:
+            with self._lock:
+                stragglers = list(self._intake)
+            for t in stragglers + list(self._live):
+                t.cancel()
+        self._stop.set()
+        self._thread.join(timeout=max(5.0, budget))
+        if self._thread.is_alive():            # loop wedged: force out
+            self._force_exit.set()
+            self._thread.join(timeout=5.0)
+        summary = {**self.counters, "drained_clean": clean}
+        if self.svc.audit:
+            self.svc.audit.log("drain", detail=summary)
+            self.svc.audit.enforce_retention()
+        return summary
+
+    shutdown = drain
+
+    # ---- serving thread ----------------------------------------------------
+    def _drained(self) -> bool:
+        with self._lock:
+            intake = len(self._intake)
+        return intake == 0 and self.live_count == 0 and self.idle
+
+    def _take_intake(self) -> List[IngressTicket]:
+        with self._lock:
+            n = min(len(self._intake), self.cfg.admit_batch)
+            return [self._intake.popleft() for _ in range(n)]
+
+    def _admit(self, batch: List[IngressTicket], now: float) -> None:
+        live = [t for t in batch if not t._cancel_requested]
+        for t in batch:
+            if t._cancel_requested:
+                self.counters["cancelled"] += 1
+                t._resolve(CANCELLED, "cancelled before admission")
+        # group by the enqueue-call parameters so each group routes as
+        # one fused batch
+        groups: Dict[tuple, List[IngressTicket]] = {}
+        for t in live:
+            groups.setdefault(
+                (t.max_new_tokens, t.slo_ms, t.timeout_s), []).append(t)
+        for (mnt, slo, tmo), ts in groups.items():
+            reqs = self.svc.enqueue(
+                [t.text for t in ts], metadata=[t.metadata for t in ts],
+                max_new_tokens=mnt, slo_ms=slo, timeout_s=tmo, now=now)
+            for t, req in zip(ts, reqs):
+                t.request = req
+                if t._cancel_requested:
+                    req.cancel()       # raced: cancel landed mid-admit
+                if req.shed:
+                    self.counters["shed"] += 1
+                    t._resolve(SHED, req.shed_reason)
+                elif req.done:         # plugin/reject: terminal now
+                    self._finish(t, req)
+                else:
+                    self.counters["admitted"] += 1
+                    t.status = ADMITTED
+                    self._live.append(t)
+
+    def _finish(self, t: IngressTicket, req: Request) -> None:
+        if req.cancelled:
+            status, reason = CANCELLED, req.error
+        elif req.timed_out:
+            status, reason = TIMED_OUT, req.error
+        elif req.shed:
+            status, reason = SHED, req.shed_reason
+        elif req.failed:
+            status, reason = FAILED, req.error
+        else:
+            status, reason = DONE, ""
+        self.counters[status] += 1
+        if self.on_request_done is not None:
+            self.on_request_done(req)
+        t._resolve(status, reason)
+
+    def _resolve_done(self) -> None:
+        still: List[IngressTicket] = []
+        for t in self._live:
+            if t.request is not None and t.request.done:
+                self._finish(t, t.request)
+            else:
+                still.append(t)
+        self._live = still
+        self.live_count = len(still)
+
+    def _serve_loop(self) -> None:
+        svc = self.svc
+        while not self._force_exit.is_set():
+            now = svc.cbatcher.clock()
+            batch = self._take_intake()
+            if batch:
+                try:
+                    self._admit(batch, now)
+                except Exception:      # noqa: BLE001 — containment
+                    self.counters["crashed_steps"] += 1
+                    for t in batch:
+                        if not t.done:
+                            t._resolve(FAILED, "admission error")
+            worked = bool(batch)
+            if svc._has_pending_work():
+                self.counters["steps"] += 1
+                completed = 0
+                try:
+                    completed = svc.serve_step(now=now)
+                except Exception:      # noqa: BLE001 — containment
+                    self.counters["crashed_steps"] += 1
+                worked = True
+                if self.on_step is not None:
+                    try:
+                        self.on_step(self.counters["steps"],
+                                     svc.telemetry(), completed, now)
+                    except Exception:  # noqa: BLE001 — observer only
+                        pass
+            self._resolve_done()
+            self.idle = not svc._has_pending_work()
+            if self._stop.is_set() and self.live_count == 0 \
+                    and self.idle and not self._intake:
+                break
+            if not worked:
+                time.sleep(self.cfg.step_poll_s)

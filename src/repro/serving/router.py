@@ -88,6 +88,7 @@ from repro.serving import policy as policy_mod
 from repro.serving.audit import AuditSink, qhash
 from repro.serving.batcher import (Batcher, ContinuousBatcher, Request,
                                    finish_request)
+from repro.serving.brownout import BrownoutConfig, BrownoutController
 from repro.serving.faults import (BreakerConfig, FaultManager, RetryPolicy)
 from repro.signals import engine as engine_mod
 from repro.signals.embedder import HashEmbedder
@@ -216,7 +217,10 @@ class RouterService:
                  audit=None, monitor: Optional[bool] = None,
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[BreakerConfig] = None,
-                 fault_seed: int = 0):
+                 fault_seed: int = 0,
+                 queue_cap: Optional[int] = None,
+                 brownout=None,
+                 prefill_chunk: Optional[int] = None):
         """Args:
             dsl_text: Semantic Router DSL source (docs/dsl.md).
             embedder: signal embedder (default ``HashEmbedder``).
@@ -251,6 +255,20 @@ class RouterService:
             retry: backend retry policy (default ``RetryPolicy()``).
             breaker: circuit-breaker config (default ``BreakerConfig()``).
             fault_seed: RNG seed for fault injection/backoff jitter.
+            queue_cap: bound on each backend's admission queue —
+                ``enqueue`` sheds (terminal, with ``shed_reason``)
+                instead of queueing past it; ``None`` = unbounded (the
+                pre-ingress behavior).
+            brownout: ``BrownoutConfig`` | True (defaults) | None/False
+                — the graceful-degradation ladder
+                (serving/brownout.py).  Enabling it without
+                ``queue_cap`` applies a default cap of 64 (the ladder
+                needs a pressure scale).
+            prefill_chunk: slot-mode chunked prefill — long prompts
+                prefill ``prefill_chunk`` tokens per pooled step
+                instead of one whole-prompt shot (``None`` = single-
+                shot; requires the backend model to support chunked
+                prefill, else that backend falls back to single-shot).
 
         Raises:
             ValueError: when validation finds errors in ``dsl_text``.
@@ -302,7 +320,19 @@ class RouterService:
                 self.backends, self.cbatcher, n_slots=slots,
                 max_slots=max_slots, preempt=preempt, faults=self.faults,
                 fallback=self._fallback_for,
-                on_done=self._on_request_done, audit=self.audit)
+                on_done=self._on_request_done, audit=self.audit,
+                prefill_chunk=prefill_chunk)
+        # ---- overload control ------------------------------------------------
+        self.queue_cap = queue_cap
+        self.overload = {"accepted": 0, "shed": 0, "timed_out": 0,
+                         "cancelled": 0}
+        self.brownout: Optional[BrownoutController] = None
+        if brownout:
+            bcfg = brownout if isinstance(brownout, BrownoutConfig) \
+                else BrownoutConfig()
+            if self.queue_cap is None:
+                self.queue_cap = 64
+            self.brownout = BrownoutController(self, bcfg)
 
     # ---- generation plumbing (back-compat views) ------------------------------
     @property
@@ -492,6 +522,10 @@ class RouterService:
             gen.inflight -= 1
             if gen.retired:
                 self._free_if_drained(gen)
+        if req.cancelled:
+            self.overload["cancelled"] += 1
+        elif req.timed_out:
+            self.overload["timed_out"] += 1
         if self.audit:
             lat = (req.finish_s - req.arrival_s
                    if req.finish_s is not None and req.arrival_s is not None
@@ -504,7 +538,9 @@ class RouterService:
                 detail={"error": req.error, "latency_s": lat,
                         "tokens": len(req.output_tokens),
                         "truncated": req.truncated,
-                        "coalesced": req.coalesced})
+                        "coalesced": req.coalesced,
+                        "cancelled": req.cancelled,
+                        "timed_out": req.timed_out})
 
     def _audit_breaker(self, backend: str, state: str) -> None:
         if self.audit:
@@ -864,20 +900,56 @@ class RouterService:
         return n
 
     # ---- continuous batching ----------------------------------------------
+    def _effective_cap(self) -> Optional[int]:
+        """The admission queue cap in effect (brownout L1+ shrinks it)."""
+        if self.brownout is not None:
+            return self.brownout.effective_cap(self.queue_cap)
+        return self.queue_cap
+
+    def _queue_depth(self, backend: str) -> int:
+        """Requests waiting on ``backend``: admission queue + the slot
+        scheduler's evicted-re-prefill queue."""
+        depth = len(self.cbatcher.queues.get(backend, ()))
+        if self.scheduler is not None:
+            depth += len(self.scheduler.requeue.get(backend, ()))
+        return depth
+
+    def _shed(self, req: Request, reason: str, now: float) -> None:
+        """Reject ``req`` at admission: terminal immediately, with an
+        explicit reason, an audit ``shed`` record, and no generation
+        refcount (it was never admitted)."""
+        req.shed = True
+        req.shed_reason = reason
+        req.done = True
+        req.finish_s = now
+        self.overload["shed"] += 1
+        if self.audit:
+            self.audit.log("shed", generation=req.generation,
+                           query_hash=qhash(req.text), route=req.route,
+                           backend=req.backend,
+                           detail={"reason": reason})
+
     def enqueue(self, texts: Sequence[str], metadata=None,
                 max_new_tokens: int = 8,
                 slo_ms: Optional[float] = None,
+                timeout_s: Optional[float] = None,
                 now: Optional[float] = None) -> List[Request]:
         """Admit a batch into the continuous-batching service loop.
 
         Routes the whole batch through the fused signal+policy program
         once (duplicate texts are free: the embedder LRU and the
         batcher's in-flight coalescing both key on the exact text),
-        stamps each request's deadline from ``slo_ms`` and its policy
-        generation (the hot-swap refcount), and admits model-bound
-        requests into the per-backend admission queues — re-routed at
-        admission when the target's breaker is open.  Plugin/reject
-        actions complete immediately, exactly like ``submit``.  Call
+        stamps each request's deadline from ``slo_ms``, its hard expiry
+        from ``timeout_s`` (past which the sweep finishes it as
+        ``timed_out``), and its policy generation (the hot-swap
+        refcount), and admits model-bound requests into the per-backend
+        admission queues — re-routed at admission when the target's
+        breaker is open, and **shed** (terminal, ``shed_reason`` set)
+        instead of queued when the backend's queue is at the effective
+        cap (``queue_cap``, tightened under brownout).  A duplicate of
+        an in-flight text always coalesces — riding a leader costs no
+        slot, so it is never shed.  Plugin/reject actions complete
+        immediately, exactly like ``submit``.  Call
         ``serve_step``/``serve_forever`` to decode.
         """
         metadata = metadata or [None] * len(texts)
@@ -892,20 +964,32 @@ class RouterService:
                           max_new_tokens=max_new_tokens,
                           arrival_s=now,
                           deadline_s=(now + slo_ms / 1e3
-                                      if slo_ms is not None else None))
+                                      if slo_ms is not None else None),
+                          expire_s=(now + timeout_s
+                                    if timeout_s is not None else None))
             req.route = gen.tables.rule_name(i)
             req.action = action
             req.generation = gen.gen_id
             if kind == "model" and target in self.backends:
                 req.backend = self._admit_target(req, target, gen)
-                gen.inflight += 1
-                self.cbatcher.admit(req, now=now)
+                cap = self._effective_cap()
+                key = (req.backend, req.text, req.max_new_tokens)
+                if cap is not None \
+                        and key not in self.cbatcher._inflight \
+                        and self._queue_depth(req.backend) >= cap:
+                    self._shed(req, f"queue_full:{req.backend}", now)
+                else:
+                    self.overload["accepted"] += 1
+                    gen.inflight += 1
+                    self.cbatcher.admit(req, now=now)
             elif kind == "plugin":
                 req.backend = "__plugin__:" + target
                 req.done = True          # plugins are terminal here
+                self.overload["accepted"] += 1
             else:
                 req.backend = "__reject__"
                 req.done = True
+                self.overload["accepted"] += 1
             reqs.append(req)
         return reqs
 
@@ -922,14 +1006,45 @@ class RouterService:
         admissions/preemptions between decode steps, ONE pooled decode
         step across the active slots, immediate retirement of finished
         requests (``force`` is moot: admission is per-slot, never held
-        for a full batch).  -> #requests completed (coalesced followers
-        included)."""
+        for a full batch).
+
+        Both modes first observe brownout pressure (when the ladder is
+        on) and sweep cancelled/expired requests out of the admission
+        queues; slot mode additionally frees the decode slots and KV
+        rows of cancelled/expired in-flight requests (whole-batch mode
+        decodes each released batch to completion, so mid-decode
+        cancellation only takes effect at batch boundaries there).
+        -> #requests completed (coalesced followers included)."""
+        now = self.cbatcher.clock() if now is None else now
+        if self.brownout is not None:
+            self.brownout.observe(now)
         if self.scheduler is not None:
             return self.scheduler.step(now=now)
+        self.cbatcher.sweep_terminal(
+            now, lambda r: self._finish_overload(r, now))
         nb = self.cbatcher.next_batch(now=now, force=force)
         if nb is None:
             return 0
         return self._decode_batch(*nb)
+
+    def _finish_overload(self, req: Request, now: float) -> int:
+        """Finalize a swept (cancelled or expired) request: terminal
+        flags, audit record, follower fan-out, generation refcount via
+        ``_on_request_done``.  -> #requests finished."""
+        if req.cancelled:
+            req.error = req.error or "cancelled by client"
+        else:
+            req.timed_out = True
+            req.error = req.error or "request timeout"
+        if self.audit:
+            self.audit.log(
+                "cancel" if req.cancelled else "timeout",
+                generation=req.generation, query_hash=qhash(req.text),
+                route=req.route, backend=req.backend,
+                detail={"tokens": len(req.output_tokens),
+                        "expire_s": req.expire_s})
+        return finish_request(req, now=now,
+                              on_done=self._on_request_done)
 
     def _has_pending_work(self) -> bool:
         if self.scheduler is not None:
@@ -950,13 +1065,18 @@ class RouterService:
             ``requeue`` (evicted requests per backend), ``slots``
             (per-backend occupancy), ``breakers`` (circuit state per
             backend), ``generations`` (hot-swap refcounts), and
-            ``audit`` (records logged per kind).
+            ``audit`` (records logged per kind), plus ``ingress``
+            (overload counters: accepted/shed/timed_out/cancelled and
+            the current ``brownout_level``).
         """
         out: Dict[str, Any] = {
             "queue_depth": {b: len(q) for b, q in
                             self.cbatcher.queues.items()},
             "batcher": dict(self.cbatcher.stats),
             "generations": self.generations(),
+            "ingress": {**self.overload,
+                        "brownout_level": (self.brownout.level
+                                           if self.brownout else 0)},
         }
         if self.scheduler is not None:
             out["scheduler"] = dict(self.scheduler.stats)

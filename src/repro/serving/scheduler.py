@@ -43,10 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.batcher import ContinuousBatcher, Request, finish_request
+from repro.serving.audit import qhash
+from repro.serving.batcher import (ContinuousBatcher, Request,
+                                   finish_request, promote_follower,
+                                   sweep_followers, terminal_due)
 from repro.serving.faults import HALF_OPEN, FaultManager
 
-FREE, ACTIVE, PARKED = "free", "active", "parked"
+FREE, ACTIVE, PARKED, PREFILLING = "free", "active", "parked", "prefilling"
 
 
 def _next_pow2(n: int) -> int:
@@ -93,12 +96,17 @@ class _Slot:
     next_tok: int = 0            # token pending append+feed
     budget: int = 0              # total tokens this request may emit
     parked_at: float = 0.0       # park order for eviction staleness
+    # chunked prefill (state PREFILLING): the full unpadded prompt
+    # (+replayed generation) token list and the next chunk offset
+    ptoks: Optional[List[int]] = None
+    poff: int = 0
 
 
 class _BackendPool:
     """Per-backend slot pool: pooled KV cache + jitted pooled step."""
 
-    def __init__(self, rt, n_slots: int, max_slots: Optional[int] = None):
+    def __init__(self, rt, n_slots: int, max_slots: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.rt = rt
         self.n_slots = n_slots                      # max ACTIVE (mutable)
         # rows are sized for the autoscale ceiling up front: growing
@@ -134,6 +142,26 @@ class _BackendPool:
             return jnp.argmax(logits, axis=-1), merged
 
         self._pool_step = pool_step
+        # chunked prefill: long prompts prefill `chunk` tokens per
+        # pooled step through PREFILLING slots instead of one whole-
+        # prompt shot.  Enabled only when the model's decode plumbing
+        # supports multi-token cache extension (pure causal attention,
+        # no window/cross/recurrence) and the chunk leaves cache room.
+        self.chunk: Optional[int] = None
+        if prefill_chunk and prefill_chunk < rt.max_seq \
+                and model.supports_chunked_prefill():
+            self.chunk = int(prefill_chunk)
+            self.warm_chunk = False
+
+            @jax.jit
+            def chunk_step(params, cache, toks, pos0, active):
+                posv = jnp.where(active, pos0, 0).astype(jnp.int32)
+                logits, new_cache = model.prefill_chunk(
+                    params, cache, toks.astype(jnp.int32), posv)
+                merged = _merge_rows(cache, new_cache, active)
+                return jnp.argmax(logits, axis=-1), merged
+
+            self._chunk_step = chunk_step
 
     # -- state views ---------------------------------------------------------
     def active(self) -> List[_Slot]:
@@ -141,6 +169,15 @@ class _BackendPool:
 
     def parked(self) -> List[_Slot]:
         return [s for s in self.slots if s.state == PARKED]
+
+    def prefilling(self) -> List[_Slot]:
+        return [s for s in self.slots if s.state == PREFILLING]
+
+    def occupied(self) -> int:
+        """Slots holding scheduling capacity (ACTIVE or mid-chunked-
+        prefill — both consume a pooled row and a capacity unit)."""
+        return sum(1 for s in self.slots
+                   if s.state in (ACTIVE, PREFILLING))
 
     def free_slot(self) -> Optional[_Slot]:
         for s in self.slots:
@@ -169,7 +206,7 @@ class DecodeScheduler:
                  faults: Optional[FaultManager] = None,
                  fallback: Optional[Callable[[str], Optional[str]]] = None,
                  on_done: Optional[Callable[[Request], None]] = None,
-                 audit=None):
+                 audit=None, prefill_chunk: Optional[int] = None):
         """Args:
             backends: ``{name: BackendRuntime}`` the service loaded.
             cbatcher: the service's ``ContinuousBatcher`` (admission
@@ -187,6 +224,13 @@ class DecodeScheduler:
             on_done: terminal-request hook (generation refcount +
                 audit on the router).
             audit: optional ``AuditSink``.
+            prefill_chunk: chunked-prefill size — prompts longer than
+                this prefill ``prefill_chunk`` tokens per pooled step
+                (PREFILLING slots) instead of stalling a whole step on
+                one long single-shot prefill; ``None`` disables.
+                Backends whose model cannot extend its cache multi-
+                token (windowed attention, recurrence, cross-attention)
+                fall back to single-shot automatically.
 
         Raises:
             ValueError: when ``n_slots < 1`` or ``max_slots < n_slots``.
@@ -212,6 +256,7 @@ class DecodeScheduler:
         self.fallback = fallback
         self.on_done = on_done
         self.audit = audit
+        self.prefill_chunk = prefill_chunk
         self.pools: Dict[str, _BackendPool] = {}
         # evicted (re-prefill) requests, per backend, staleness order
         self.requeue: Dict[str, List[Request]] = {}
@@ -219,7 +264,8 @@ class DecodeScheduler:
                       "preemptions": 0, "resumed_inplace": 0,
                       "evictions": 0, "reprefills": 0, "truncated": 0,
                       "step_faults": 0, "prefill_faults": 0,
-                      "failed": 0, "diverted": 0}
+                      "failed": 0, "diverted": 0, "cancelled": 0,
+                      "timed_out": 0, "prefill_chunks": 0}
         self._park_clock = 0.0
         # self-measured service-time model (EWMA, real wall clock): how
         # long a prefill and one pooled decode step actually take, so
@@ -255,7 +301,8 @@ class DecodeScheduler:
         if pool is None:
             pool = self.pools[backend] = _BackendPool(
                 self.backends[backend], self.n_slots,
-                max_slots=self.max_slots)
+                max_slots=self.max_slots,
+                prefill_chunk=self.prefill_chunk)
         return pool
 
     # ---- autoscale surface --------------------------------------------------
@@ -285,15 +332,17 @@ class DecodeScheduler:
         """Per-backend slot usage for diagnostics and the autoscaler.
 
         Returns:
-            ``{backend: {active, parked, free, capacity, rows}}`` —
-            ``free`` is unclaimed *scheduling* capacity
-            (``capacity - active``), distinct from free cache rows.
+            ``{backend: {active, parked, prefilling, free, capacity,
+            rows}}`` — ``free`` is unclaimed *scheduling* capacity
+            (``capacity - active - prefilling``), distinct from free
+            cache rows.
         """
         out: Dict[str, Dict[str, int]] = {}
         for backend, pool in self.pools.items():
             a, p = len(pool.active()), len(pool.parked())
-            out[backend] = {"active": a, "parked": p,
-                            "free": max(0, pool.n_slots - a),
+            c = len(pool.prefilling())
+            out[backend] = {"active": a, "parked": p, "prefilling": c,
+                            "free": max(0, pool.n_slots - a - c),
                             "capacity": pool.n_slots, "rows": pool.rows}
         return out
 
@@ -401,7 +450,7 @@ class DecodeScheduler:
         request and skips preemption; resume-in-place stays free)."""
         pool = self._pool(backend)
         prefills: List[Tuple[_Slot, Request]] = []
-        while len(pool.active()) < pool.n_slots:
+        while pool.occupied() < pool.n_slots:
             if limit is not None and len(prefills) >= limit:
                 break
             queued = self._queued_candidates(backend, now)
@@ -435,7 +484,7 @@ class DecodeScheduler:
         # preemption: capacity full, a queued deadline is imminent, and
         # some active request is strictly less urgent
         if self.preempt and limit is None:
-            while len(pool.active()) >= pool.n_slots:
+            while pool.occupied() >= pool.n_slots:
                 queued = self._queued_candidates(backend, now)
                 if not queued:
                     break
@@ -445,6 +494,8 @@ class DecodeScheduler:
                 if not self._imminent(best_q, pool, now):
                     break
                 actives = pool.active()
+                if not actives:        # all capacity is mid-chunked-
+                    break              # prefill: nothing preemptible
                 victim = max(actives, key=lambda s: (s.req.slack(now),
                                                      -(s.req.arrival_s
                                                        or 0.0)))
@@ -471,6 +522,26 @@ class DecodeScheduler:
         if pool.cache is None:
             pool.cache = rt.model.init_cache(pool.rows, rt.max_seq)
         done = 0
+        if pool.chunk:
+            # long prompts peel off into PREFILLING slots (one chunk
+            # per pooled step via _run_chunks); short ones keep the
+            # batched single-shot path below
+            rest: List[Tuple[_Slot, Request]] = []
+            for slot, req in prefills:
+                t = self._tokenize(rt, req)
+                if len(t) <= pool.chunk:
+                    rest.append((slot, req))
+                    continue
+                # cap so the final chunk's padded writes stay inside the
+                # cache window (garbage tokens land at positions >= the
+                # true length, masked out until decode overwrites them)
+                limit = rt.max_seq - pool.chunk
+                slot.state = PREFILLING
+                slot.ptoks = t[-limit:] if len(t) > limit else t
+                slot.poff = 0
+            prefills = rest
+            if not prefills:
+                return 0
         toks = [self._tokenize(rt, r) for _, r in prefills]
         plen = min(_next_pow2(max(max(len(t) for t in toks), 1)),
                    rt.max_seq)
@@ -513,11 +584,168 @@ class DecodeScheduler:
                 done += self._retire(backend, slot, now)
         return done
 
+    def _run_chunks(self, backend: str, now: float) -> int:
+        """One pooled chunk-prefill step for every PREFILLING slot:
+        each slot advances ``pool.chunk`` tokens through the cache
+        (fixed (rows, chunk) shape — one compiled variant per pool);
+        a slot whose prompt completes flips to ACTIVE with its first
+        generated token pending, exactly as if it had single-shot
+        prefilled.  -> #requests completed (zero-budget edge case)."""
+        pool = self.pools.get(backend)
+        pre = pool.prefilling() if pool is not None else []
+        if not pre:
+            return 0
+        rt = pool.rt
+        if pool.cache is None:
+            pool.cache = rt.model.init_cache(pool.rows, rt.max_seq)
+        C = pool.chunk
+        toks = np.zeros((pool.rows, C), np.int32)
+        pos0 = np.zeros(pool.rows, np.int64)
+        active = np.zeros(pool.rows, bool)
+        for s in pre:
+            seg = s.ptoks[s.poff:s.poff + C]
+            toks[s.idx, :len(seg)] = seg
+            pos0[s.idx] = s.poff
+            active[s.idx] = True
+        t0 = time.monotonic()
+        first, pool.cache = pool._chunk_step(
+            rt.params, pool.cache, jnp.asarray(toks),
+            jnp.asarray(pos0), jnp.asarray(active))
+        first = np.asarray(first)
+        dt = time.monotonic() - t0
+        if pool.warm_chunk:            # first call per pool = compile
+            self._prefill_ewma = dt if self._prefill_ewma is None \
+                else 0.7 * self._prefill_ewma + 0.3 * dt
+        pool.warm_chunk = True
+        self.stats["prefill_chunks"] += 1
+        done = 0
+        for s in pre:
+            start = s.poff
+            s.poff = min(start + C, len(s.ptoks))
+            if s.poff < len(s.ptoks):
+                continue               # more chunks to go
+            req = s.req
+            # prompt complete: the first generated token is the argmax
+            # at the last *valid* position of this chunk
+            s.next_tok = int(first[s.idx, (len(s.ptoks) - 1) - start])
+            s.pos = len(s.ptoks)
+            s.state = ACTIVE
+            s.ptoks = None
+            kv_room = max(0, rt.max_seq - s.pos)
+            s.budget = min(req.max_new_tokens,
+                           len(req.output_tokens) + kv_room)
+            if s.budget < req.max_new_tokens and not req.truncated:
+                req.truncated = True
+                self.stats["truncated"] += 1
+            if len(req.output_tokens) >= s.budget:
+                done += self._retire(backend, s, now)
+        return done
+
+    def _contain_chunk_fault(self, backend: str, exc: BaseException,
+                             now: float) -> int:
+        """A faulted chunk step frees every PREFILLING slot and requeues
+        its request for a clean re-prefill next step (divert/fail past
+        the retry budget); ACTIVE/PARKED slots are untouched."""
+        pool = self.pools.get(backend)
+        if pool is None:
+            return 0
+        self.stats["prefill_faults"] += 1
+        msg = f"{type(exc).__name__}: {exc}"
+        if self.audit:
+            self.audit.log("fault", backend=backend,
+                           detail={"error": msg, "where": "chunk_prefill"})
+        budget = self.faults.retry.max_retries if self.faults else 0
+        done = 0
+        for s in pool.prefilling():
+            req = s.req
+            s.state = FREE
+            s.req = None
+            s.ptoks = None
+            req.retries += 1
+            if req.retries <= budget:
+                self.requeue.setdefault(backend, []).append(req)
+            else:
+                done += self._divert_or_fail(backend, req, msg, now)
+        return done
+
+    # ---- overload sweep ----------------------------------------------------
+    def _finish_expired(self, req: Request, now: float) -> int:
+        """Finalize a swept (cancelled or hard-expired) request: flags,
+        stats, audit record, follower fan-out + ``on_done`` (generation
+        refcount).  -> #requests finished."""
+        if req.cancelled:
+            self.stats["cancelled"] += 1
+            req.error = req.error or "cancelled by client"
+        else:
+            req.timed_out = True
+            self.stats["timed_out"] += 1
+            req.error = req.error or "request timeout"
+        if self.audit:
+            self.audit.log(
+                "cancel" if req.cancelled else "timeout",
+                generation=req.generation, query_hash=qhash(req.text),
+                route=req.route, backend=req.backend,
+                detail={"tokens": len(req.output_tokens),
+                        "expire_s": req.expire_s})
+        return finish_request(req, now=now, on_done=self.on_done)
+
+    def _sweep_terminal(self, now: float) -> int:
+        """Remove cancelled/expired requests everywhere they can live —
+        admission queues, the evicted re-prefill queues, and the slots
+        themselves.  A cancelled request mid-decode frees its slot (and
+        thereby its pooled KV row) this very step; a terminal leader
+        with live coalesced followers promotes the first one in place,
+        so riders keep the decode progress.  -> #requests finished."""
+        done = 0
+
+        def fin(r: Request) -> None:
+            nonlocal done
+            done += self._finish_expired(r, now)
+
+        self.cbatcher.sweep_terminal(now, fin)
+        for backend in list(self.requeue):
+            kept: List[Request] = []
+            for req in self.requeue[backend]:
+                sweep_followers(req, now, fin)
+                if not terminal_due(req, now):
+                    kept.append(req)
+                    continue
+                promoted = promote_follower(req)
+                self.cbatcher.replace_inflight(req, promoted)
+                if promoted is not None:
+                    kept.append(promoted)
+                fin(req)
+            if kept:
+                self.requeue[backend] = kept
+            else:
+                del self.requeue[backend]
+        for backend, pool in self.pools.items():
+            for slot in pool.slots:
+                if slot.req is None:
+                    continue
+                sweep_followers(slot.req, now, fin)
+                if not terminal_due(slot.req, now):
+                    continue
+                req = slot.req
+                promoted = promote_follower(req)
+                self.cbatcher.replace_inflight(req, promoted)
+                if promoted is not None:
+                    # same backend/text/budget: the promoted rider takes
+                    # over the slot and decode continues uninterrupted
+                    slot.req = promoted
+                else:
+                    slot.state = FREE
+                    slot.req = None
+                    slot.ptoks = None
+                fin(req)
+        return done
+
     # ---- decode ------------------------------------------------------------
     def _retire(self, backend: str, slot: _Slot, now: float) -> int:
         req = slot.req
         slot.state = FREE
         slot.req = None
+        slot.ptoks = None
         self.cbatcher.finish_inflight(req)
         self.stats["retired"] += 1
         return finish_request(req, now=now, on_done=self.on_done)
@@ -617,6 +845,7 @@ class DecodeScheduler:
         for slot, req in prefills:
             slot.state = FREE
             slot.req = None
+            slot.ptoks = None
             req.retries += 1
             if req.retries <= budget:
                 self.requeue.setdefault(backend, []).append(req)
@@ -659,7 +888,7 @@ class DecodeScheduler:
         included)."""
         now = self.cbatcher.clock() if now is None else now
         fm = self.faults
-        done = 0
+        done = self._sweep_terminal(now)
         for backend in self._backends_with_work():
             if fm is not None and fm.is_open(backend):
                 done += self._divert_queued(backend, now)
@@ -671,7 +900,8 @@ class DecodeScheduler:
             prefills = self._admit(backend, now,
                                    limit=1 if probing else None)
             pool = self.pools.get(backend)
-            ran = bool(prefills) or bool(pool and pool.active())
+            ran = bool(prefills) or bool(
+                pool and (pool.active() or pool.prefilling()))
             if not ran:
                 continue
             if fm is not None and probing:
@@ -686,6 +916,14 @@ class DecodeScheduler:
                     ok = False
                     done += self._contain_prefill_fault(
                         backend, prefills, e, now)
+            if ok and self.pools[backend].prefilling():
+                try:
+                    if fm is not None:
+                        fm.pre_call(backend)
+                    done += self._run_chunks(backend, now)
+                except Exception as e:  # noqa: BLE001 — containment
+                    ok = False
+                    done += self._contain_chunk_fault(backend, e, now)
             if ok:
                 try:
                     if fm is not None and self.pools[backend].active():

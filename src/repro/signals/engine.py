@@ -543,6 +543,7 @@ class SignalEngine:
         self._two_stage_req = two_stage
         self._nprobe_req = nprobe
         self.nprobe = 1
+        self.n_slabs = 0
         self.names = sorted(config.signals)
         self.index = {n: i for i, n in enumerate(self.names)}
         self.centroids: Dict[str, np.ndarray] = {}
@@ -773,11 +774,25 @@ class SignalEngine:
             np_tensors["grouped_mask"], np_tensors["member_full"],
             np_tensors["default_full"], precision=self.precision)
         n_slabs = ivf_np["heads"].shape[0]
+        self.n_slabs = n_slabs
         req = (default_nprobe(n_slabs) if self._nprobe_req is None
                else int(self._nprobe_req))
         self.nprobe = max(1, min(req, n_slabs))
         for k, v in ivf_np.items():
             np_tensors[f"ivf_{k}"] = v
+
+    def set_nprobe(self, nprobe: int) -> int:
+        """Runtime ``nprobe`` adjustment — the degradation-ladder
+        actuator.  Clamps to ``[1, n_slabs]`` and takes effect on the
+        next ``evaluate`` call (``nprobe`` is a static jit argument, so
+        each distinct value selects an already- or newly-compiled
+        variant; stepping between a few ladder values re-uses cached
+        executables).  No-op on non-two-stage engines, where there is
+        no coarse stage to narrow.  -> the nprobe actually in effect."""
+        if not self.two_stage:
+            return self.nprobe
+        self.nprobe = max(1, min(int(nprobe), self.n_slabs))
+        return self.nprobe
 
     def _build_sharded_bundle(self, t: Dict[str, np.ndarray]
                               ) -> Dict[str, np.ndarray]:

@@ -6,12 +6,15 @@ The harness exists so every perf PR proves itself on the SAME workload:
 
 * ``profiles``    — dacite-style dataclass scenario configs with a named
                     registry (diurnal, flash_crowd, heavy_tail,
-                    multi_tenant, unique_flood, steady);
+                    multi_tenant, unique_flood, adversarial_flood,
+                    steady);
 * ``generator``   — profile -> deterministic, seeded arrival/length
                     streams (``TraceEvent`` list);
 * ``replay``      — drive any profile through ``RouterService.enqueue``
                     / ``serve_step`` (whole-batch or slot scheduler,
-                    preempt on/off, faults on/off);
+                    preempt on/off, faults on/off), either in-process
+                    or through the ``AsyncIngress`` front door with
+                    open-/closed-loop clients;
 * ``diagnostics`` — per-step telemetry into structured JSONL plus an
                     end-of-run summary (fv3net-runtime-diagnostics
                     style manager);

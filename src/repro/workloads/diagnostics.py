@@ -24,6 +24,9 @@ Each JSONL record is one serve step:
                     truncated, faults, ...)
   breakers          circuit-breaker state per backend (when any exist)
   audit_alerts      running count of conflict_alert audit records
+  ingress           overload counters from the front door / router
+                    (accepted, shed, timed_out, cancelled, and the
+                    current brownout_level)
 
 ``validate_record`` is the schema gate the workload-smoke CI job (and
 the unit tests) run over every emitted line.
@@ -38,6 +41,17 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 __all__ = ["DiagnosticsConfig", "DiagnosticsManager", "validate_record"]
+
+# ingress counter fields every "ingress" record entry must carry
+_INGRESS_KEYS = ("accepted", "shed", "timed_out", "cancelled",
+                 "brownout_level")
+
+
+def _ingress_ok(v: Any) -> bool:
+    """Type/range check for the optional ``ingress`` record field."""
+    return isinstance(v, dict) and all(
+        isinstance(v.get(k), int) and v[k] >= 0 for k in _INGRESS_KEYS)
+
 
 # field name -> (required, type check) for one JSONL step record
 _SCHEMA: Dict[str, tuple] = {
@@ -54,6 +68,7 @@ _SCHEMA: Dict[str, tuple] = {
     "slots": (False, lambda v: isinstance(v, dict)),
     "breakers": (False, lambda v: isinstance(v, dict)),
     "audit_alerts": (False, lambda v: isinstance(v, int) and v >= 0),
+    "ingress": (False, _ingress_ok),
 }
 
 
@@ -228,6 +243,9 @@ class DiagnosticsManager:
         if "audit" in telemetry:
             rec["audit_alerts"] = int(
                 telemetry["audit"].get("conflict_alert", 0))
+        if "ingress" in telemetry:
+            rec["ingress"] = {k: int(telemetry["ingress"].get(k, 0))
+                              for k in _INGRESS_KEYS}
         self.records.append(rec)
         if self._file is not None:
             self._file.write(json.dumps(rec, sort_keys=True) + "\n")

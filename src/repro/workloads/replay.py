@@ -13,6 +13,20 @@ observe once per serve step, exactly like a production sidecar would.
 Serve-step exceptions are contained and counted (``crashed_steps``) so
 a chaos replay reports breakage instead of dying — the workload-smoke
 CI job gates on that count being zero.
+
+Two client shapes are supported when a ``front_door``
+(``serving.ingress.AsyncIngress``) is passed:
+
+* ``client_mode="open"`` — open-loop: every arrival is submitted at
+  its trace offset regardless of completions, the classic
+  flash-crowd/overload shape (arrival rate is the independent
+  variable).
+* ``client_mode="closed"`` — closed-loop: a fixed window of
+  ``closed_concurrency`` outstanding requests, the next submitted only
+  when one resolves (throughput is completion-gated, like a pool of
+  synchronous clients).
+
+Without a front door the in-process path above remains the default.
 """
 from __future__ import annotations
 
@@ -68,12 +82,102 @@ def _due_groups(due: List[TraceEvent]):
     return groups.items()
 
 
+def _replay_front_door(svc, profile, events, front_door, client_mode,
+                       closed_concurrency, client_timeout_s,
+                       diagnostics, autoscaler,
+                       stall_timeout_s: float) -> ReplayReport:
+    """Front-door arm of ``replay_trace``: submit the trace through an
+    ``AsyncIngress`` (its serving thread drives the service) while this
+    thread plays the client(s).  Diagnostics/autoscaler hooks run on
+    the serving thread via the ingress ``on_step``/``on_request_done``
+    callbacks — this thread never touches the service directly."""
+    clock = svc.cbatcher.clock
+    t0 = clock()
+    if diagnostics is not None:
+        diagnostics.start(now=t0)
+
+    def _on_step(step, telemetry, completed, now):
+        if autoscaler is not None:
+            autoscaler.observe(now)
+        if diagnostics is not None:
+            diagnostics.observe_step(step, telemetry,
+                                     completed=completed, now=now)
+
+    def _on_done(req):
+        if diagnostics is not None:
+            diagnostics.on_request_done(req)
+
+    front_door.on_step = _on_step
+    front_door.on_request_done = _on_done
+    front_door.start()
+
+    def _submit(ev):
+        if autoscaler is not None:
+            autoscaler.note_slo(ev.slo_ms)
+        return front_door.submit(
+            ev.text, max_new_tokens=ev.max_new_tokens, slo_ms=ev.slo_ms,
+            timeout_s=client_timeout_s)
+
+    tickets = []
+    if client_mode == "open":
+        for ev in events:
+            lead = ev.t_s - (clock() - t0)
+            if lead > 0:
+                time.sleep(lead)
+            tickets.append(_submit(ev))
+    elif client_mode == "closed":
+        outstanding: List[Any] = []
+        for ev in events:
+            while len(outstanding) >= max(1, closed_concurrency):
+                outstanding[0].wait(timeout=stall_timeout_s)
+                live = [t for t in outstanding if not t.done]
+                if len(live) == len(outstanding):   # stalled: bail out
+                    for t in live:
+                        t.cancel()
+                outstanding = live
+            tickets.append(_submit(ev))
+            outstanding.append(tickets[-1])
+    else:
+        raise ValueError(f"unknown client_mode {client_mode!r}")
+
+    # wait for every ticket to reach a terminal state, with a stall
+    # guard: no resolution for `stall_timeout_s` -> cancel the rest
+    deadline = time.monotonic() + stall_timeout_s
+    while True:
+        live = [t for t in tickets if not t.done]
+        if not live:
+            break
+        if time.monotonic() >= deadline:
+            for t in live:
+                t.cancel()
+            deadline = time.monotonic() + stall_timeout_s
+        n = len(live)
+        live[0].wait(timeout=0.05)
+        if len([t for t in tickets if not t.done]) < n:
+            deadline = time.monotonic() + stall_timeout_s
+
+    c = front_door.counters
+    rejected = sum(t.status in ("rejected", "shed") for t in tickets)
+    return ReplayReport(
+        profile=profile.name, events=len(events),
+        enqueued=len(tickets) - rejected, rejected=rejected,
+        completed=len(tickets) - rejected,
+        crashed_steps=c["crashed_steps"], steps=c["steps"],
+        wall_s=clock() - t0,
+        summary=diagnostics.summary() if diagnostics is not None else {},
+        autoscale=autoscaler.summary() if autoscaler is not None else {})
+
+
 def replay_trace(svc, profile: ScenarioProfile, *,
                  events: Optional[List[TraceEvent]] = None,
                  diagnostics=None, autoscaler=None, admission=None,
                  max_steps: Optional[int] = None,
                  settle_steps: int = 2000,
-                 poll_s: float = 0.001) -> ReplayReport:
+                 poll_s: float = 0.001,
+                 front_door=None, client_mode: str = "open",
+                 closed_concurrency: int = 8,
+                 client_timeout_s: Optional[float] = None,
+                 stall_timeout_s: float = 15.0) -> ReplayReport:
     """Drive ``profile``'s trace through ``svc`` in real time.
 
     Args:
@@ -89,17 +193,41 @@ def replay_trace(svc, profile: ScenarioProfile, *,
             serve step.
         admission: optional ``AdmissionController`` gating arrivals;
             shed arrivals are reported (and counted as SLO misses in
-            the diagnostics when they carried deadlines).
+            the diagnostics when they carried deadlines).  In-process
+            path only — with a front door, admission control is the
+            ingress/queue-cap's job.
         max_steps: hard cap on serve steps (None = until drained).
         settle_steps: post-trace drain budget — serve steps allowed
             after the last arrival before the run is cut off.
         poll_s: idle sleep while waiting for the next arrival.
+        front_door: optional ``AsyncIngress`` wrapping ``svc``; when
+            given, arrivals go through ``submit`` and the ingress
+            serving thread drives the steps (this thread is purely a
+            client).  The front door is left running — callers own
+            ``drain()``.
+        client_mode: ``"open"`` (submit at trace offsets) or
+            ``"closed"`` (fixed ``closed_concurrency`` window);
+            front-door only.
+        closed_concurrency: outstanding-request window for
+            ``client_mode="closed"``.
+        client_timeout_s: per-request hard timeout stamped on
+            front-door submissions (None = ingress default).
+        stall_timeout_s: front-door watchdog — with no ticket
+            resolving for this long, outstanding tickets are cancelled
+            so the replay always terminates.
 
     Returns:
         A ``ReplayReport``; the service is left constructed (callers
         can inspect queues/stats afterwards).
     """
     events = generate_trace(profile) if events is None else events
+    if front_door is not None:
+        if front_door.svc is not svc:
+            raise ValueError("front_door wraps a different service")
+        return _replay_front_door(
+            svc, profile, events, front_door, client_mode,
+            closed_concurrency, client_timeout_s, diagnostics,
+            autoscaler, stall_timeout_s)
     clock = svc.cbatcher.clock
     t0 = clock()
     if diagnostics is not None:

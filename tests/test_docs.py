@@ -19,6 +19,8 @@ _DOC_LINTED = [
     "src/repro/serving/batcher.py",
     "src/repro/serving/faults.py",
     "src/repro/serving/audit.py",
+    "src/repro/serving/ingress.py",
+    "src/repro/serving/brownout.py",
     "src/repro/workloads/profiles.py",
     "src/repro/workloads/generator.py",
     "src/repro/workloads/diagnostics.py",

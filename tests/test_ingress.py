@@ -1,0 +1,379 @@
+"""Overload-resilient ingress: backpressure shedding, client
+cancellation and hard timeouts propagating into the slot scheduler
+(slot + KV freed mid-decode), the AsyncIngress front door (concurrent
+submit, bounded intake, graceful drain), the brownout degradation
+ladder, and chunked-prefill bitwise equivalence."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.batcher import Request, terminal_due
+from repro.serving.brownout import BrownoutConfig, BrownoutController
+from repro.serving.ingress import AsyncIngress, IngressConfig
+from repro.serving.router import RouterService
+
+DSL = """
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve"]
+  threshold: 0.5
+}
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math]
+  default: math
+}
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+GLOBAL { default_model: "backend-math" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+"""
+
+
+def _slot_svc(slots=1, **kw):
+    """Backend-loaded slot service on a fake clock the test advances."""
+    t = [0.0]
+    svc = RouterService(DSL, max_batch=4, slots=slots, audit=True, **kw)
+    svc.cbatcher.clock = lambda: t[0]
+    return svc, t
+
+
+# ---------------------------------------------------------------------------
+# units: terminal_due / shed bookkeeping (no backends)
+# ---------------------------------------------------------------------------
+
+def test_terminal_due_flags():
+    r = Request(text="x", max_new_tokens=1)
+    assert not terminal_due(r, 10.0)
+    r.expire_s = 5.0
+    assert terminal_due(r, 5.0) and not terminal_due(r, 4.9)
+    r.expire_s = None
+    r.cancel()
+    assert r.cancelled and terminal_due(r, 0.0)
+    r.done = True
+    assert not terminal_due(r, 0.0)     # already terminal: never swept
+
+
+def test_enqueue_sheds_past_queue_cap_with_reason():
+    svc, _ = _slot_svc(slots=1, queue_cap=2)
+    reqs = svc.enqueue([f"solve the integral variant {i}"
+                        for i in range(5)], max_new_tokens=2)
+    shed = [r for r in reqs if r.shed]
+    kept = [r for r in reqs if not r.shed]
+    assert len(kept) == 2 and len(shed) == 3
+    assert all(r.done and r.shed_reason == "queue_full:backend-math"
+               for r in shed)
+    assert svc.overload["shed"] == 3 and svc.overload["accepted"] == 2
+    assert svc.audit.counts().get("shed") == 3
+    assert svc.telemetry()["ingress"]["shed"] == 3
+
+
+def test_coalesced_duplicates_are_never_shed():
+    svc, _ = _slot_svc(slots=1, queue_cap=1)
+    reqs = svc.enqueue(["solve the integral twice"] * 4,
+                       max_new_tokens=2)
+    # one leader occupies the whole cap; duplicates ride it for free
+    assert not any(r.shed for r in reqs)
+    assert sum(not r.coalesced for r in reqs) == 1
+
+
+# ---------------------------------------------------------------------------
+# cancellation / timeout through the slot scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_client_cancel_mid_decode_frees_slot_and_kv():
+    svc, t = _slot_svc(slots=1)
+    long_req = svc.enqueue(["solve the integral of x cubed"],
+                           max_new_tokens=64)[0]
+    for _ in range(3):
+        svc.serve_step()
+    occ = svc.scheduler.slot_occupancy()["backend-math"]
+    assert occ["active"] == 1 and not long_req.done
+    tokens_at_cancel = len(long_req.output_tokens)
+    long_req.cancel()
+    svc.serve_step()                     # sweep observes the flag
+    assert long_req.done and long_req.cancelled
+    assert "cancel" in long_req.error
+    # far fewer tokens than requested: decode really stopped mid-flight
+    assert len(long_req.output_tokens) <= tokens_at_cancel + 1 < 64
+    occ = svc.scheduler.slot_occupancy()["backend-math"]
+    assert occ["active"] == 0 and occ["free"] == occ["capacity"]
+    assert svc.scheduler.stats["cancelled"] == 1
+    assert svc.audit.counts().get("cancel") == 1
+    assert svc.overload["cancelled"] == 1
+    # the freed slot (and its pooled KV row) is immediately reusable
+    nxt = svc.enqueue(["derivative of the algebra equation"],
+                      max_new_tokens=2)[0]
+    for _ in range(20):
+        if nxt.done:
+            break
+        svc.serve_step()
+    assert nxt.done and not nxt.failed and len(nxt.output_tokens) == 2
+
+
+@pytest.mark.slow
+def test_timeout_expiry_emits_audit_record():
+    svc, t = _slot_svc(slots=1)
+    req = svc.enqueue(["solve the integral of x"], max_new_tokens=64,
+                      timeout_s=5.0, now=0.0)[0]
+    assert req.expire_s == 5.0
+    svc.serve_step(now=1.0)
+    assert not req.done
+    t[0] = 6.0
+    svc.serve_step(now=6.0)              # sweep fires the expiry
+    assert req.done and req.timed_out and req.error == "request timeout"
+    assert svc.scheduler.stats["timed_out"] == 1
+    assert svc.overload["timed_out"] == 1
+    recs = [r for r in svc.audit.tail(50) if r.kind == "timeout"]
+    assert len(recs) == 1
+    assert recs[0].detail["expire_s"] == 5.0
+    occ = svc.scheduler.slot_occupancy()["backend-math"]
+    assert occ["active"] == 0            # slot freed by the sweep
+
+
+@pytest.mark.slow
+def test_queued_cancel_promotes_follower():
+    """Cancelling a coalesced leader while queued hands the in-flight
+    key to its first live follower instead of killing both."""
+    svc, t = _slot_svc(slots=1)
+    blocker = svc.enqueue(["solve the integral blocker"],
+                          max_new_tokens=32)[0]
+    svc.serve_step()                     # blocker occupies the slot
+    pair = svc.enqueue(["solve the integral shared"] * 2,
+                       max_new_tokens=4)
+    leader = next(r for r in pair if not r.coalesced)
+    rider = next(r for r in pair if r.coalesced)
+    leader.cancel()
+    for _ in range(60):
+        if rider.done:
+            break
+        svc.serve_step()
+    assert leader.done and leader.cancelled
+    assert rider.done and not rider.failed and not rider.cancelled
+    assert len(rider.output_tokens) == 4
+    assert not blocker.cancelled         # the blocker was never touched
+
+
+# ---------------------------------------------------------------------------
+# the AsyncIngress front door
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_front_door_serves_concurrent_submissions():
+    svc = RouterService(DSL, max_batch=4, slots=2, audit=True)
+    ing = AsyncIngress(svc).start()
+    results = []
+
+    def client(i):
+        tk = ing.submit(f"solve the integral client {i}",
+                        max_new_tokens=2)
+        tk.wait(timeout=300.0)
+        results.append(tk)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(results) == 4
+    assert all(tk.status == "done" for tk in results)
+    assert all(len(tk.output_tokens) == 2 for tk in results)
+    summary = ing.drain()
+    assert summary["crashed_steps"] == 0 and summary["done"] == 4
+
+
+@pytest.mark.slow
+def test_drain_finishes_inflight_and_never_accepts_after_stop():
+    svc = RouterService(DSL, max_batch=4, slots=1, audit=True)
+    ing = AsyncIngress(svc).start()
+    inflight = ing.submit("solve the integral before drain",
+                          max_new_tokens=2)
+    summary = ing.drain(timeout_s=300.0)
+    assert inflight.status == "done"     # in-flight work was finished
+    assert summary["drained_clean"]
+    late = ing.submit("solve the integral after drain",
+                      max_new_tokens=1)
+    assert late.done and late.status == "rejected"
+    assert late.reason == "shutting_down"
+    drains = [r for r in svc.audit.tail(50) if r.kind == "drain"]
+    assert len(drains) == 1 and drains[0].detail["drained_clean"]
+
+
+def test_intake_bound_rejects_with_reason():
+    svc = RouterService(DSL, load_backends=False)
+    ing = AsyncIngress(svc, IngressConfig(max_intake=2))  # not started
+    tickets = [ing.submit(f"solve variant {i}") for i in range(4)]
+    statuses = [t.status for t in tickets]
+    assert statuses.count("rejected") == 2
+    assert all(t.reason == "intake_full" for t in tickets if t.done)
+
+
+def test_cancel_before_admission_resolves_without_serving():
+    svc = RouterService(DSL, load_backends=False)
+    ing = AsyncIngress(svc)              # not started: stays in intake
+    tk = ing.submit("solve the integral never served")
+    tk.cancel()
+    ing.start()
+    assert tk.wait(timeout=30.0)
+    assert tk.status == "cancelled" and tk.request is None
+    ing.drain(timeout_s=5.0)
+
+
+# ---------------------------------------------------------------------------
+# brownout ladder
+# ---------------------------------------------------------------------------
+
+class _FakeQueueSvc:
+    """Just enough RouterService surface for the controller: queues,
+    an audit stub, and a two-stage-capable engine stub."""
+
+    class _Eng:
+        two_stage = True
+        nprobe = 8
+        n_slabs = 16
+
+        def set_nprobe(self, n):
+            self.nprobe = max(1, min(int(n), self.n_slabs))
+            return self.nprobe
+
+    class _Aud:
+        def __init__(self):
+            self.kinds = []
+
+        def log(self, kind, **kw):
+            self.kinds.append(kind)
+
+    class _CB:
+        def __init__(self):
+            self.queues = {}
+
+    def __init__(self, cap):
+        self.queue_cap = cap
+        self.engine = self._Eng()
+        self.audit = self._Aud()
+        self.cbatcher = self._CB()
+        self.scheduler = None
+        self._engine_opts = {"precision": "f32"}
+
+
+def test_brownout_ladder_steps_down_and_recovers_with_hysteresis():
+    svc = _FakeQueueSvc(cap=4)
+    ctl = BrownoutController(svc, BrownoutConfig(
+        down_patience=2, up_patience=4, ewma=1.0))
+    svc.cbatcher.queues = {"b": list(range(8))}   # pressure 2.0
+    levels = [ctl.observe(now=i * 0.1) for i in range(8)]
+    # 2 observations per level step-down: L1 at obs2, L2 at obs4, L3 at
+    # obs6, then pinned at max_level
+    assert levels == [0, 1, 1, 2, 2, 3, 3, 3]
+    assert svc.engine.nprobe == 1                 # floor at L3
+    assert svc._engine_opts["precision"] == "bf16"
+    assert ctl.effective_cap(4) == 2              # shed_factor 0.5
+    assert svc.audit.kinds.count("brownout") == len(ctl.transitions) == 3
+    # recovery needs up_patience consecutive cool observations per level
+    svc.cbatcher.queues = {"b": []}
+    for i in range(30):
+        ctl.observe(now=1.0 + i * 0.1)
+    assert ctl.level == 0
+    assert svc.engine.nprobe == 8                 # baseline restored
+    assert svc._engine_opts["precision"] == "f32"
+    assert ctl.effective_cap(4) == 4
+    # every transition (3 down + 3 up) is audited
+    assert svc.audit.kinds.count("brownout") == len(ctl.transitions) == 6
+
+
+def test_brownout_midband_pressure_resets_patience():
+    svc = _FakeQueueSvc(cap=10)
+    ctl = BrownoutController(svc, BrownoutConfig(
+        down_patience=2, up_patience=2, ewma=1.0))
+    svc.cbatcher.queues = {"b": list(range(9))}   # 0.9: hot
+    ctl.observe(now=0.0)
+    svc.cbatcher.queues = {"b": list(range(6))}   # 0.6: mid-band
+    ctl.observe(now=0.1)
+    svc.cbatcher.queues = {"b": list(range(9))}
+    ctl.observe(now=0.2)
+    assert ctl.level == 0                         # patience was reset
+    ctl.observe(now=0.3)
+    assert ctl.level == 1
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+def _chunk_model(arch):
+    from repro.configs import registry
+    from repro.models.model import build_model
+    cfg = registry.get_config(arch, smoke=True)
+    return cfg, build_model(cfg)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "stablelm-1.6b"])
+def test_chunked_prefill_bitwise_matches_single_shot(arch):
+    """Prefilling a prompt in C-token chunks must produce bitwise
+    identical last-token logits AND a cache from which the next decode
+    step is bitwise identical — chunking can never change outputs."""
+    cfg, m = _chunk_model(arch)
+    assert m.supports_chunked_prefill()
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 13), 0,
+                              cfg.vocab_size)
+    max_seq = 64
+    ref_logits, ref_cache = m.prefill(params, toks, max_seq=max_seq)
+
+    cache = m.init_cache(1, max_seq)
+    chunk = 4
+    last = None
+    for s in range(0, 13, chunk):
+        piece = toks[:, s:s + chunk]
+        w = piece.shape[1]
+        if w < chunk:                    # pad the tail chunk
+            piece = jnp.pad(piece, ((0, 0), (0, chunk - w)))
+        logits, cache = m.prefill_chunk(
+            params, cache, piece, jnp.full((1,), s, jnp.int32))
+        last = logits[:, w - 1]
+    assert np.array_equal(np.asarray(ref_logits), np.asarray(last))
+    # and the caches decode identically afterwards
+    nxt = jnp.argmax(last, -1)[:, None]
+    d_ref, _ = m.decode_step(params, ref_cache, nxt,
+                             jnp.full((1,), 13, jnp.int32))
+    d_chk, _ = m.decode_step(params, cache, nxt,
+                             jnp.full((1,), 13, jnp.int32))
+    assert np.array_equal(np.asarray(d_ref), np.asarray(d_chk))
+
+
+def test_chunked_prefill_rejects_unsupported_configs():
+    import dataclasses
+
+    from repro.configs import registry
+    cfg = registry.get_config("internlm2-1.8b", smoke=True)
+    spec = cfg.layer_specs()[0]
+    windowed = dataclasses.replace(
+        cfg, unit=(dataclasses.replace(spec, window=8),))
+    from repro.models.model import build_model
+    assert not build_model(windowed).supports_chunked_prefill()
+
+
+@pytest.mark.slow
+def test_scheduler_chunked_prefill_same_tokens_as_single_shot():
+    """The same long prompt decodes to the same tokens whether its
+    prefill ran single-shot or chunked across pooled steps."""
+    outs = []
+    for chunk in (None, 8):
+        svc, t = _slot_svc(slots=1, prefill_chunk=chunk)
+        text = "solve the integral of x to the power " * 3
+        req = svc.enqueue([text], max_new_tokens=4)[0]
+        for _ in range(80):
+            if req.done:
+                break
+            svc.serve_step()
+        assert req.done and not req.failed
+        if chunk:
+            assert svc.scheduler.stats["prefill_chunks"] > 0
+        outs.append(req.output_tokens)
+    assert outs[0] == outs[1]
