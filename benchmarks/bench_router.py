@@ -1163,11 +1163,138 @@ def run_ingress_smoke() -> list:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# whole-policy analyzer section (--analysis [--smoke])
+# ---------------------------------------------------------------------------
+
+ANALYSIS_SIZES = (1_000, 10_000, 100_000)
+ANALYSIS_D = 256
+
+
+def _analyze_table(table, *, prune: bool = True, base=None):
+    """(AnalysisResult, wall_s) for one staged-analyzer pass."""
+    from repro.analysis.engine import WholePolicyAnalyzer
+    an = WholePolicyAnalyzer(table.signals, table.groups, prune=prune)
+    t0 = time.perf_counter()
+    result = an.analyze(table.rules, base=base)
+    return result, time.perf_counter() - t0
+
+
+def _counters_slice(c) -> dict:
+    d = c.as_dict()
+    return {k: d[k] for k in
+            ("n_rules", "pairs_possible", "margin_evals", "slab_pairs",
+             "slab_pairs_kept", "geo_candidates", "geo_rule_pairs",
+             "mc_blocks", "prune_mode", "delta", "dirty_rules",
+             "carried_findings", "sat_fast_path", "stage_s")}
+
+
+def run_analysis_smoke() -> list:
+    """CI entry (``--analysis --smoke``): pruned vs exhaustive findings
+    must be bitwise-identical on a seeded 512-route planted table, and
+    a delta pass after a conflict-introducing one-rule edit must match
+    a full re-analysis while doing O(changed) work.  Exits 1 on any
+    miss; results merge into BENCH_router.json under analysis_smoke."""
+    from repro.analysis import pruning, tables
+    lines, failed = [], []
+    table = tables.planted_cap_table(512, d=64, n_conflicts=8, seed=0)
+    saved = pruning.PRUNE_MIN_N
+    pruning.PRUNE_MIN_N = 1     # force the slab path at 512 routes
+    try:
+        pr, pr_s = _analyze_table(table, prune=True)
+    finally:
+        pruning.PRUNE_MIN_N = saved
+    ex, ex_s = _analyze_table(table, prune=False)
+    if pr.findings != ex.findings:
+        failed.append("pruned_vs_exhaustive_mismatch")
+    if pr.counters.prune_mode != "pruned":
+        failed.append("slab_path_not_taken")
+    if len(pr.findings) < len(table.planted):
+        failed.append("planted_conflicts_missed")
+    lines.append(f"router/analysis_parity,0,"
+                 f"{'FAIL' if failed else 'ok'}"
+                 f"(n=512,findings={len(pr.findings)},"
+                 f"margin_evals={pr.counters.margin_evals}"
+                 f"/{ex.counters.margin_evals})")
+    edited = tables.with_new_conflict(table, src=3, dst=100)
+    delta, delta_s = _analyze_table(edited, prune=False, base=ex.summary)
+    full, full_s = _analyze_table(edited, prune=False)
+    if delta.findings != full.findings:
+        failed.append("delta_vs_full_mismatch")
+    if not delta.counters.delta or delta.counters.dirty_rules != 1:
+        failed.append("delta_not_incremental")
+    if delta.counters.margin_evals > 2 * len(table.rules):
+        failed.append("delta_work_not_o_changed")
+    lines.append(f"router/analysis_delta,0,"
+                 f"{'FAIL' if failed else 'ok'}"
+                 f"(dirty={delta.counters.dirty_rules},"
+                 f"carried={delta.counters.carried_findings},"
+                 f"margin_evals={delta.counters.margin_evals})")
+    merge_bench_json(JSON_PATH, "analysis_smoke", {
+        "n": 512, "pruned_s": pr_s, "exhaustive_s": ex_s,
+        "delta_s": delta_s, "full_after_edit_s": full_s,
+        "pruned": _counters_slice(pr.counters),
+        "exhaustive": _counters_slice(ex.counters),
+        "delta": _counters_slice(delta.counters),
+        "failed": failed})
+    lines.append(f"router/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    if failed:
+        print(f"router/ANALYSIS_SMOKE_FAILED,0,{','.join(failed)}",
+              file=sys.stderr)
+        sys.exit(1)
+    return lines
+
+
+def run_analysis(argv) -> list:
+    """``--analysis``: full-table and delta analyzer latency on planted
+    topic-clustered tables at n ∈ {1k, 10k, 100k} (d=256), merged into
+    BENCH_router.json under "analysis".  The 100k row is the paper's
+    admission-gate-at-scale claim: T1–T4 on CPU via slab pruning."""
+    if "--smoke" in argv:
+        return run_analysis_smoke()
+    from repro.analysis import tables
+    lines = []
+    section: dict = {"d": ANALYSIS_D, "sizes": {}}
+    for n in ANALYSIS_SIZES:
+        table = tables.planted_cap_table(n, d=ANALYSIS_D, n_conflicts=8,
+                                         seed=0)
+        full, full_s = _analyze_table(table)
+        edited = tables.with_benign_edit(table)
+        delta, delta_s = _analyze_table(edited, base=full.summary)
+        assert delta.counters.delta and delta.counters.dirty_rules == 1, \
+            "benign one-rule edit must run as a 1-dirty-rule delta pass"
+        assert delta.counters.margin_evals <= 2 * n, \
+            "delta margin work must be O(changed), not O(N^2)"
+        section["sizes"][str(n)] = {
+            "full_s": full_s, "delta_s": delta_s,
+            "findings": len(full.findings),
+            "full": _counters_slice(full.counters),
+            "delta": _counters_slice(delta.counters)}
+        lines.append(
+            f"router/analysis_full_n{n},{full_s * 1e6:.0f},"
+            f"mode={full.counters.prune_mode},"
+            f"findings={len(full.findings)},"
+            f"margin_evals={full.counters.margin_evals}")
+        lines.append(
+            f"router/analysis_delta_n{n},{delta_s * 1e6:.0f},"
+            f"dirty={delta.counters.dirty_rules},"
+            f"margin_evals={delta.counters.margin_evals}")
+    merge_bench_json(JSON_PATH, "analysis", section)
+    lines.append(f"router/json,0,{JSON_PATH.name}")
+    for ln in lines:
+        print(ln)
+    return lines
+
+
 def main(argv=None) -> list:
     argv = sys.argv[1:] if argv is None else list(argv)
     if _WORKER_FLAG in argv:
         sharded_worker()
         return []
+    if "--analysis" in argv:
+        return run_analysis(argv)
     if "--chaos-smoke" in argv:
         return run_chaos_smoke()
     if "--workload-smoke" in argv:

@@ -37,14 +37,13 @@ import numpy as np
 from repro.kernels import ops, ref
 
 try:
-    from benchmarks._util import atomic_write_json
+    from benchmarks._util import atomic_write_json, merge_bench_json
 except ModuleNotFoundError:          # run as a script from benchmarks/
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks._util import atomic_write_json
+    from benchmarks._util import atomic_write_json, merge_bench_json
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 JSON_PATH = ROOT / "BENCH_signal_pipeline.json"
-SMOKE_JSON_PATH = ROOT / "BENCH_signal_pipeline_smoke.json"
 
 DIM = 64
 
@@ -366,11 +365,14 @@ def main(argv=None):
         lines += bench_fused_kernel(results, shapes=[(16, 33), (7, 130)])
         lines += smoke_ivf_scale(results)
         results["parity_failures"] = len(failures)
-        atomic_write_json(SMOKE_JSON_PATH, {
-            "unit": "us_per_call", "mode": "smoke",
+        # smoke results land in a "smoke" section of the tracked bench
+        # JSON (merge keeps the full run's sections) — no stray
+        # BENCH_signal_pipeline_smoke.json artifact in the repo root
+        merge_bench_json(JSON_PATH, "smoke", {
+            "unit": "us_per_call",
             "parity_shapes": SMOKE_SHAPES,
             "ivf_parity_shapes": IVF_SMOKE_SHAPES, "results": results})
-        lines.append(f"signal_pipeline/json,0,{SMOKE_JSON_PATH.name}")
+        lines.append(f"signal_pipeline/json,0,{JSON_PATH.name}")
         lines.append(f"signal_pipeline/parity,0,"
                      f"{'FAIL' if failures else 'ok'}"
                      f"({len(SMOKE_SHAPES) + len(IVF_SMOKE_SHAPES)} "

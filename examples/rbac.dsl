@@ -1,0 +1,41 @@
+# Semantic RBAC policy (paper §8, examples/rbac_policy.py) with the
+# escalation fix applied: behavioral-role embedding signals are
+# softmax_exclusive, so the "biostatistics literature" boundary query
+# can no longer co-fire both roles and open two privilege paths.
+SIGNAL embedding researcher_behavior {
+  candidates: ["citing literature", "statistical analysis",
+               "scientific query"]
+  threshold: 0.55
+}
+SIGNAL embedding medical_professional_behavior {
+  candidates: ["clinical statistics", "biostatistics analysis",
+               "patient literature"]
+  threshold: 0.55
+}
+SIGNAL authz verified_employee {
+  subjects: [{ kind: "Group", name: "staff" }]
+}
+SIGNAL_GROUP behavioral_roles {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.6
+  members: [researcher_behavior, medical_professional_behavior]
+  default: researcher_behavior
+}
+ROUTE researcher_access {
+  PRIORITY 200
+  WHEN embedding("researcher_behavior") AND authz("verified_employee")
+  PLUGIN rag { backend: "restricted_papers" }
+}
+ROUTE medical_access {
+  PRIORITY 150
+  WHEN embedding("medical_professional_behavior") AND authz("verified_employee")
+  PLUGIN rag { backend: "phi_records" }
+}
+ROUTE general_access {
+  PRIORITY 100
+  WHEN authz("verified_employee")
+  MODEL "general"
+}
+PLUGIN rag { backend: "default" }
+GLOBAL { default_model: "general" }

@@ -1,0 +1,27 @@
+# Default serving policy (launch/serve.py quickstart): two embedding
+# domains under a softmax_exclusive group, a jailbreak guard tier, and
+# per-domain backends.  Lints clean: the group makes math/science
+# co-fire impossible (Thm 2), so no T4/T5 survives analysis.
+SIGNAL embedding math {
+  candidates: ["integral derivative algebra equation solve",
+               "matrix eigenvalue theorem proof"]
+}
+SIGNAL embedding science {
+  candidates: ["physics quantum chemistry biology experiment",
+               "DNA molecule energy particle"]
+}
+SIGNAL jailbreak detector { threshold: 0.62 }
+SIGNAL_GROUP domains {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math, science]
+  default: science
+}
+ROUTE jb { PRIORITY 500 TIER 2 WHEN jailbreak("detector") MODEL "fast-reject" }
+ROUTE math_route { PRIORITY 200 WHEN embedding("math") MODEL "backend-math" }
+ROUTE science_route { PRIORITY 100 WHEN embedding("science") MODEL "backend-science" }
+BACKEND backend-math { arch: "internlm2-1.8b" }
+BACKEND backend-science { arch: "stablelm-1.6b" }
+BACKEND fast-reject { arch: "internlm2-1.8b" }
+GLOBAL { default_model: "backend-science" }

@@ -1,0 +1,28 @@
+# The paper's listing 1 *with* its fix applied (examples/quickstart.py
+# walks through the conflicted version): two domain classifiers that
+# looked disjoint but co-activate on boundary queries, made exclusive
+# by a softmax_exclusive SIGNAL_GROUP — the no-retraining repair.
+SIGNAL domain math {
+  mmlu_categories: ["college_mathematics", "abstract_algebra"]
+}
+SIGNAL domain science {
+  mmlu_categories: ["college_physics", "college_chemistry"]
+}
+SIGNAL_GROUP domain_taxonomy {
+  semantics: softmax_exclusive
+  temperature: 0.1
+  threshold: 0.51
+  members: [math, science]
+  default: science
+}
+ROUTE math_route {
+  PRIORITY 200
+  WHEN domain("math")
+  MODEL "qwen2.5-math"
+}
+ROUTE science_route {
+  PRIORITY 100
+  WHEN domain("science")
+  MODEL "qwen2.5-science"
+}
+GLOBAL { default_model: "qwen2.5-science" }

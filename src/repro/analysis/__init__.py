@@ -1,0 +1,14 @@
+"""Scalable whole-policy conflict analysis (docs/analysis.md).
+
+Staged T1–T6 analyzer replacing ``ConflictDetector``'s O(N²) pair
+loop: device-vectorized cap geometry (``geometry_vec``), IVF slab
+candidate-pair pruning (``pruning``), and incremental delta analysis
+keyed by per-rule context hashes (``engine``).  ``tables`` builds the
+seeded topic-clustered benchmark tables the parity smoke and
+``bench_router --analysis`` run against.
+"""
+from repro.analysis.engine import (AnalysisCounters, AnalysisResult,
+                                   PolicySummary, WholePolicyAnalyzer)
+
+__all__ = ["AnalysisCounters", "AnalysisResult", "PolicySummary",
+           "WholePolicyAnalyzer"]

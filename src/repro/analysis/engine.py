@@ -1,0 +1,625 @@
+"""Staged whole-policy conflict analyzer (the scalable T1–T6 driver).
+
+``ConflictDetector.analyze_pairwise`` is an O(N²) Python loop with a
+SAT call and a fresh Monte-Carlo estimate per pair — fine for the
+paper's worked examples, unusable against the 100k-route tables the
+two-stage router serves.  This engine keeps the same finding taxonomy
+(identical kinds, severities, detail strings and fix hints) but never
+enumerates the full pair universe:
+
+* **crisp layer (T1–T3)** — per-*condition* satisfiability with a
+  fast path for pure positive conjunctions (satisfiable iff no two
+  atoms share an at-most-one group; implication is subset inclusion,
+  no SAT call).  Candidate pairs come from shared-atom /
+  shared-group-component indexes: an implication between satisfiable,
+  non-tautological conditions requires the higher condition to touch
+  an atom in the lower condition's group-connected component, so
+  unrelated rules are never paired.  Unsatisfiable and tautological
+  conditions get their own O(bad · N) sweeps reproducing the pair
+  loop's vacuous-implication findings exactly.
+* **geometric layer (T4–T5)** — candidate signal pairs from the
+  vectorized margin screen with IVF slab pruning (``pruning.py``),
+  masses from the batched per-signal vMF estimator
+  (``geometry_vec.py``), then findings per admissible rule pair via
+  atom→rule indexes.  Caps that provably do not intersect can produce
+  neither a T4 (intersection required) nor a T5 (the both-fire region
+  is empty), so pruning is lossless for both kinds.
+* **classifier layer (T6)** — category-disjoint classifier signal
+  pairs via the same rule indexes.
+
+Every pass also emits a :class:`PolicySummary` — per-rule context
+hashes covering the rule's own fields, its referenced signals and
+their group memberships.  A later pass given that summary as ``base``
+runs *delta analysis*: findings between two context-unchanged rules
+are carried over verbatim and only pairs touching a changed rule are
+re-analyzed, making the hot-swap admission gate O(changed) instead of
+O(N²).  Estimator seeds are keyed per signal name, so carried and
+recomputed findings agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.analysis import geometry_vec, pruning
+from repro.core import sat
+from repro.core.atoms import AtomKind, SignalAtom
+from repro.core.conditions import And, Atom, Cond, Not
+from repro.core.taxonomy import (ConflictType, Decidability, Finding, Rule,
+                                 TaxonomyConfig, finding_sort_key)
+
+
+@dataclasses.dataclass
+class AnalysisCounters:
+    """Work accounting for one analyzer pass — the observable evidence
+    that pruning and delta analysis actually skipped work."""
+    n_rules: int = 0
+    pairs_possible: int = 0
+    # crisp layer
+    sat_calls: int = 0             # DPLL invocations (misses of the memo)
+    sat_fast_path: int = 0         # conditions decided without SAT
+    implication_checks: int = 0    # pairwise implication queries resolved
+    crisp_pairs: int = 0           # candidate rule pairs examined (T2/T3)
+    # geometric layer
+    n_geo_signals: int = 0
+    slab_pairs: int = 0
+    slab_pairs_kept: int = 0
+    margin_evals: int = 0          # pairwise cap margins computed
+    geo_candidates: int = 0        # intersecting signal pairs
+    geo_rule_pairs: int = 0        # rule pairs examined for T4/T5
+    mc_blocks: int = 0             # vMF sample blocks generated
+    mc_pair_evals: int = 0         # per-pair mass evaluations
+    prune_mode: str = ""
+    # classifier layer
+    t6_pairs: int = 0
+    # delta analysis
+    delta: bool = False
+    dirty_rules: int = 0
+    carried_findings: int = 0
+    # wall clock per stage, seconds
+    stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> Dict:
+        """JSON-safe dump (bench sections, RebindResult.analysis)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PolicySummary:
+    """Cached generation-N analysis state keyed for delta re-analysis.
+
+    ``rule_ctx`` maps rule name → context hash covering everything a
+    pair analysis can observe about that rule: its condition / action /
+    priority / tier and, per referenced signal, the signal's type,
+    threshold, centroid, categories and full group memberships.  Two
+    rules whose hashes both match the cached generation reproduce
+    identical pair findings, so those findings are carried over."""
+    fingerprint: Optional[str]
+    config_key: str
+    any_pairs: bool
+    rule_ctx: Dict[str, str]
+    findings: List[Finding]
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    """Findings (deterministically sorted) + counters + the summary to
+    seed the next delta pass."""
+    findings: List[Finding]
+    counters: AnalysisCounters
+    summary: PolicySummary
+
+
+def _sha(*parts: str) -> str:
+    h = hashlib.sha1()
+    for p in parts:
+        h.update(p.encode("utf-8", "replace"))
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+class WholePolicyAnalyzer:
+    """Scalable staged implementation of the T1–T6 hierarchy.
+
+    Construct per (signals, groups, config); ``analyze(rules)`` runs a
+    full pass, ``analyze(rules, base=summary)`` a delta pass against a
+    cached generation.  ``prune=False`` forces the exhaustive
+    geometric screen — the small-table equivalence oracle."""
+
+    def __init__(self, signals: Dict[str, SignalAtom],
+                 exclusive_groups: Sequence[Sequence[str]] = (),
+                 cfg: TaxonomyConfig = TaxonomyConfig(), *,
+                 prune: bool = True, fingerprint: Optional[str] = None):
+        self.signals = signals
+        self.groups = [tuple(g) for g in exclusive_groups]
+        self.cfg = cfg
+        self.prune = prune
+        self.fingerprint = fingerprint
+        # atom name -> indexes of groups containing it
+        self._atom_groups: Dict[str, Set[int]] = {}
+        for gi, g in enumerate(self.groups):
+            for a in g:
+                self._atom_groups.setdefault(a, set()).add(gi)
+        # group-connectivity components (union-find over atom names)
+        self._comp: Dict[str, int] = {}
+        parent: Dict[str, str] = {}
+
+        def find(x: str) -> str:
+            while parent.setdefault(x, x) != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for g in self.groups:
+            for a in g[1:]:
+                parent[find(a)] = find(g[0])
+        roots: Dict[str, int] = {}
+        for a in list(parent):
+            r = find(a)
+            self._comp[a] = roots.setdefault(r, len(roots))
+        self._n_comp = len(roots)
+        # per-condition memo: repr -> (pure_atoms|None, sat, taut|None)
+        self._cond_info: Dict[str, list] = {}
+        self._impl_memo: Dict[Tuple[str, str], bool] = {}
+
+    # -- condition classification -------------------------------------------
+    def _pure_atoms(self, cond: Cond) -> Optional[FrozenSet[str]]:
+        if isinstance(cond, Atom):
+            return frozenset({cond.name})
+        if isinstance(cond, And):
+            parts = [self._pure_atoms(c) for c in cond.children]
+            if any(p is None for p in parts):
+                return None
+            return frozenset().union(*parts) if parts else frozenset()
+        return None
+
+    def _info(self, cond: Cond, counters: AnalysisCounters) -> list:
+        key = repr(cond)
+        hit = self._cond_info.get(key)
+        if hit is not None:
+            return hit
+        pure = self._pure_atoms(cond)
+        if pure is not None:
+            clash = False
+            atoms = sorted(pure)
+            for i, a in enumerate(atoms):
+                ga = self._atom_groups.get(a)
+                if not ga:
+                    continue
+                for b in atoms[i + 1:]:
+                    if ga & self._atom_groups.get(b, set()):
+                        clash = True
+                        break
+                if clash:
+                    break
+            counters.sat_fast_path += 1
+            info = [pure, not clash, len(pure) == 0 and not clash]
+        else:
+            counters.sat_calls += 1
+            satisfiable = sat.satisfiable(cond, self.groups)
+            info = [None, satisfiable, None]   # taut computed lazily
+        self._cond_info[key] = info
+        return info
+
+    def _taut(self, cond: Cond, counters: AnalysisCounters) -> bool:
+        info = self._info(cond, counters)
+        if info[2] is None:
+            counters.sat_calls += 1
+            info[2] = not sat.satisfiable(Not(cond), self.groups)
+        return info[2]
+
+    def _implies(self, lo: Cond, hi: Cond, counters: AnalysisCounters
+                 ) -> bool:
+        key = (repr(lo), repr(hi))
+        hit = self._impl_memo.get(key)
+        if hit is None:
+            counters.sat_calls += 1
+            hit = sat.implies(lo, hi, self.groups)
+            self._impl_memo[key] = hit
+        counters.implication_checks += 1
+        return hit
+
+    # -- finding constructors (strings identical to the pair loop) ----------
+    def _t1(self, r: Rule) -> Finding:
+        return Finding(
+            ConflictType.LOGICAL_CONTRADICTION, Decidability.SAT,
+            (r.name,), f"condition of {r.name} is unsatisfiable",
+            severity="error",
+            fix_hint="remove the rule or fix the contradictory "
+                     "NOT/AND structure")
+
+    def _t2(self, hi: Rule, lo: Rule) -> Finding:
+        return Finding(
+            ConflictType.STRUCTURAL_SHADOWING, Decidability.SAT,
+            (hi.name, lo.name),
+            f"{hi.name} (priority {hi.priority}) structurally "
+            f"shadows {lo.name} (priority {lo.priority})",
+            severity="error",
+            fix_hint=f"raise {lo.name}'s priority above "
+                     f"{hi.name} or add a NOT guard to {hi.name}")
+
+    def _t3(self, hi: Rule, lo: Rule) -> Finding:
+        return Finding(
+            ConflictType.STRUCTURAL_REDUNDANCY, Decidability.SAT,
+            (hi.name, lo.name),
+            f"{lo.name} has a condition equivalent to higher-"
+            f"priority {hi.name}; it can never fire",
+            severity="error",
+            fix_hint=f"delete {lo.name} or change its condition")
+
+    # -- context hashing ------------------------------------------------------
+    def _signal_sig(self, name: str) -> str:
+        s = self.signals.get(name)
+        if s is None:
+            return f"{name}:missing"
+        c = s.centroid
+        if c is None:
+            cdig = "none"
+        else:
+            cdig = hashlib.sha1(
+                np.ascontiguousarray(
+                    np.asarray(c, np.float64)).tobytes()).hexdigest()
+        gs = sorted(self.groups[gi] for gi in self._atom_groups.get(name, ()))
+        return repr((s.name, s.signal_type, float(s.threshold),
+                     tuple(s.categories), s.group, cdig, gs))
+
+    def rule_context(self, r: Rule) -> str:
+        """Context hash: everything pair analysis observes about ``r``."""
+        parts = [r.name, repr(r.condition), r.action, str(r.priority),
+                 str(r.tier)]
+        parts += [self._signal_sig(a) for a in sorted(r.condition.atoms())]
+        return _sha(*parts)
+
+    def config_key(self) -> str:
+        """Hash of the taxonomy thresholds/MC knobs a summary is valid
+        for; pruning mode is excluded (it never changes findings)."""
+        return _sha(repr(dataclasses.astuple(self.cfg)))
+
+    # -- driver ---------------------------------------------------------------
+    def analyze(self, rules: Sequence[Rule],
+                base: Optional[PolicySummary] = None) -> AnalysisResult:
+        """Run the hierarchy; with ``base``, re-analyze only pairs that
+        touch a context-changed rule and carry the rest over."""
+        counters = AnalysisCounters()
+        t0 = time.perf_counter()
+        ordered = sorted(rules, key=lambda r: (-r.tier, -r.priority, r.name))
+        rank = {r.name: i for i, r in enumerate(ordered)}
+        by_name = {r.name: r for r in ordered}
+        counters.n_rules = len(ordered)
+        counters.pairs_possible = len(ordered) * (len(ordered) - 1) // 2
+        any_pairs = len({(r.action, r.priority) for r in ordered}) > 1
+        ctx = {r.name: self.rule_context(r) for r in ordered}
+        cfg_key = self.config_key()
+
+        dirty: Optional[Set[str]] = None
+        carried: List[Finding] = []
+        if base is not None and base.config_key == cfg_key \
+                and base.any_pairs == any_pairs:
+            clean = {n for n, h in ctx.items()
+                     if base.rule_ctx.get(n) == h}
+            dirty = set(ctx) - clean
+            carried = [f for f in base.findings
+                       if all(n in clean for n in f.rules)]
+            counters.delta = True
+            counters.dirty_rules = len(dirty)
+            counters.carried_findings = len(carried)
+        counters.stage_s["prepare"] = time.perf_counter() - t0
+
+        def admissible(a: Rule, b: Rule) -> Optional[Tuple[Rule, Rule]]:
+            """(hi, lo) if this rule pair is analyzed, else None."""
+            if a.name == b.name:
+                return None
+            if a.action == b.action and a.priority == b.priority:
+                return None
+            if dirty is not None and a.name not in dirty \
+                    and b.name not in dirty:
+                return None
+            return (a, b) if rank[a.name] < rank[b.name] else (b, a)
+
+        findings: List[Finding] = list(carried)
+        findings += self._crisp_stage(ordered, rank, any_pairs, dirty,
+                                      admissible, counters)
+        findings += self._geometric_stage(ordered, dirty, admissible,
+                                          counters)
+        findings += self._classifier_stage(ordered, dirty, admissible,
+                                           counters)
+        findings.sort(key=finding_sort_key)
+        summary = PolicySummary(self.fingerprint, cfg_key, any_pairs,
+                                ctx, findings)
+        return AnalysisResult(findings, counters, summary)
+
+    # -- stage: crisp T1–T3 ---------------------------------------------------
+    def _crisp_stage(self, ordered, rank, any_pairs, dirty, admissible,
+                     counters) -> List[Finding]:
+        t0 = time.perf_counter()
+        out: List[Finding] = []
+        info = {r.name: self._info(r.condition, counters) for r in ordered}
+        unsat = [r for r in ordered if not info[r.name][1]]
+        # T1: one finding per unsatisfiable rule that meets any pair
+        for r in (ordered if dirty is None
+                  else [x for x in ordered if x.name in dirty]):
+            if any_pairs and not info[r.name][1]:
+                out.append(self._t1(r))
+        # vacuous implications: an unsatisfiable low rule implies every
+        # higher rule (T2), and is equivalent to an unsatisfiable one (T3)
+        for u in unsat:
+            for r in ordered:
+                pair = admissible(u, r)
+                if pair is None or pair[1] is not u:
+                    continue
+                hi = pair[0]
+                out.append(self._t3(hi, u) if not info[hi.name][1]
+                           else self._t2(hi, u))
+        # tautological high rules shadow every satisfiable lower rule
+        taut_rules = [r for r in ordered
+                      if info[r.name][1]
+                      and self._taut_cheap(r, info, counters)]
+        taut_names = {r.name for r in taut_rules}
+        for t in taut_rules:
+            for r in ordered:
+                pair = admissible(t, r)
+                if pair is None or pair[0] is not t:
+                    continue
+                lo = pair[1]
+                if not info[lo.name][1]:
+                    continue          # handled by the vacuous sweep
+                out.append(self._t3(t, lo)
+                           if self._taut_cheap(lo, info, counters)
+                           else self._t2(t, lo))
+        # pure positive conjunctions: implication ⇔ atom-set inclusion
+        atom_rules: Dict[str, List[Rule]] = {}
+        for r in ordered:
+            if info[r.name][0] is not None:
+                for a in info[r.name][0]:
+                    atom_rules.setdefault(a, []).append(r)
+        seen: Set[Tuple[str, str]] = set()
+        pure_iter = ordered if dirty is None \
+            else [r for r in ordered if r.name in dirty]
+        for r in pure_iter:
+            pa = info[r.name][0]
+            if pa is None:
+                continue
+            for a in sorted(pa):
+                for s in atom_rules.get(a, ()):
+                    pair = admissible(r, s)
+                    if pair is None:
+                        continue
+                    hi, lo = pair
+                    key = (hi.name, lo.name)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    if not info[lo.name][1] or not info[hi.name][0]:
+                        continue      # vacuous/taut sweeps own these
+                    if hi.name in taut_names:
+                        continue
+                    counters.crisp_pairs += 1
+                    s_hi, s_lo = info[hi.name][0], info[lo.name][0]
+                    counters.implication_checks += 1
+                    if s_hi <= s_lo:
+                        out.append(self._t3(hi, lo) if s_hi == s_lo
+                                   else self._t2(hi, lo))
+        # complex conditions: SAT on pairs sharing a group component
+        comp_rules: Dict[int, List[Rule]] = {}
+        for r in ordered:
+            for c in {self._comp[a] for a in r.condition.atoms()
+                      if a in self._comp}:
+                comp_rules.setdefault(c, []).append(r)
+        complex_rules = [r for r in ordered if info[r.name][0] is None]
+        for r in complex_rules:
+            partners: Dict[str, Rule] = {}
+            for a in r.condition.atoms():
+                for s in atom_rules.get(a, ()):
+                    partners[s.name] = s
+                c = self._comp.get(a)
+                if c is not None:
+                    for s in comp_rules.get(c, ()):
+                        partners[s.name] = s
+            for s in complex_rules:
+                if set(s.condition.atoms()) & set(r.condition.atoms()):
+                    partners[s.name] = s
+            for s in partners.values():
+                pair = admissible(r, s)
+                if pair is None:
+                    continue
+                hi, lo = pair
+                key = (hi.name, lo.name)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if not info[lo.name][1] or not info[hi.name][1]:
+                    continue          # vacuous sweep owns these
+                if hi.name in taut_names:
+                    continue
+                counters.crisp_pairs += 1
+                if self._implies(lo.condition, hi.condition, counters):
+                    out.append(
+                        self._t3(hi, lo)
+                        if self._implies(hi.condition, lo.condition,
+                                         counters) else self._t2(hi, lo))
+        counters.stage_s["crisp"] = time.perf_counter() - t0
+        return out
+
+    def _taut_cheap(self, r: Rule, info, counters) -> bool:
+        pure = info[r.name][0]
+        if pure is not None:
+            return len(pure) == 0
+        return self._taut(r.condition, counters)
+
+    # -- stage: geometric T4–T5 ----------------------------------------------
+    def _geo_atoms(self, ordered) -> Tuple[List[str], Dict[str, List[Rule]]]:
+        by_atom: Dict[str, List[Rule]] = {}
+        for r in ordered:
+            for a in sorted(r.condition.atoms()):
+                s = self.signals.get(a)
+                if s is not None and s.kind is AtomKind.GEOMETRIC \
+                        and s.centroid is not None:
+                    by_atom.setdefault(a, []).append(r)
+        return sorted(by_atom), by_atom
+
+    def _same_group(self, a: str, b: str) -> bool:
+        return bool(self._atom_groups.get(a, set())
+                    & self._atom_groups.get(b, set()))
+
+    def _geometric_stage(self, ordered, dirty, admissible, counters
+                         ) -> List[Finding]:
+        t0 = time.perf_counter()
+        out: List[Finding] = []
+        names, by_atom = self._geo_atoms(ordered)
+        counters.n_geo_signals = len(names)
+        if len(names) < 2:
+            counters.stage_s["geometric"] = time.perf_counter() - t0
+            return out
+        # bucket by embedding dim (mixed dims cannot pair anyway)
+        dims: Dict[int, List[str]] = {}
+        for n in names:
+            c = np.asarray(self.signals[n].centroid, np.float64)
+            dims.setdefault(int(c.shape[0]), []).append(n)
+        for dim_names in dims.values():
+            out += self._geo_dim(dim_names, by_atom, dirty, admissible,
+                                 counters)
+        counters.stage_s["geometric"] = time.perf_counter() - t0
+        return out
+
+    def _geo_dim(self, names, by_atom, dirty, admissible, counters
+                 ) -> List[Finding]:
+        idx = {n: i for i, n in enumerate(names)}
+        c64 = np.stack([np.asarray(self.signals[n].centroid, np.float64)
+                        for n in names])
+        c64 /= np.maximum(np.linalg.norm(c64, axis=1, keepdims=True), 1e-12)
+        radii = np.array([np.arccos(np.clip(self.signals[n].threshold,
+                                            -1.0, 1.0)) for n in names])
+        rows = None
+        if dirty is not None:
+            # pairs touching a changed rule always have at least one
+            # signal referenced by a changed rule on one side
+            dirty_sigs = sorted({a for a, rs in by_atom.items()
+                                 if a in idx
+                                 and any(r.name in dirty for r in rs)})
+            rows = np.array([idx[a] for a in dirty_sigs], np.int64)
+            if rows.size == 0:
+                return []
+        ia, ib, margins, stats = pruning.candidate_pairs(
+            c64, radii, prune=self.prune, rows=rows, seed=self.cfg.seed)
+        counters.slab_pairs += stats.slab_pairs
+        counters.slab_pairs_kept += stats.slab_pairs_kept
+        counters.margin_evals += stats.margin_evals
+        counters.prune_mode = stats.mode
+        # drop pairs whose signals share a softmax_exclusive group
+        keep = [k for k in range(ia.size)
+                if not self._same_group(names[ia[k]], names[ib[k]])]
+        ia, ib, margins = ia[keep], ib[keep], margins[keep]
+        counters.geo_candidates += int(ia.size)
+        if ia.size == 0:
+            return []
+        est = geometry_vec.MassEstimator(
+            names, c64,
+            np.array([self.signals[n].threshold for n in names]),
+            self.cfg.kappa(c64.shape[1]), self.cfg.mc_samples // 2,
+            self.cfg.seed)
+        est.estimate(list(zip(ia.tolist(), ib.tolist())))
+        counters.mc_blocks += est.blocks_sampled
+        counters.mc_pair_evals += est.pair_evals
+        out: List[Finding] = []
+        for k in range(ia.size):
+            a, b = names[ia[k]], names[ib[k]]
+            margin = float(margins[k])
+            for r1 in by_atom[a]:
+                for r2 in by_atom[b]:
+                    pair = admissible(r1, r2)
+                    if pair is None:
+                        continue
+                    hi, lo = pair
+                    sig_hi, sig_lo = (a, b) if hi is r1 else (b, a)
+                    counters.geo_rule_pairs += 1
+                    p = est.cofire(ia[k], ib[k])
+                    deep = margin <= -self.cfg.deep_overlap_margin_rad
+                    if p >= self.cfg.probable_conflict_eps or deep:
+                        out.append(self._t4(hi, lo, sig_hi, sig_lo,
+                                            margin, p, deep))
+                    against = est.against(idx[sig_hi], idx[sig_lo])
+                    if against >= self.cfg.soft_shadow_eps:
+                        out.append(self._t5(hi, lo, sig_lo, against))
+        return out
+
+    def _t4(self, hi: Rule, lo: Rule, a: str, b: str, margin: float,
+            p: float, deep: bool) -> Finding:
+        return Finding(
+            ConflictType.PROBABLE_CONFLICT, Decidability.GEOMETRIC,
+            (hi.name, lo.name),
+            f"embedding signals {a!r} and {b!r} have intersecting "
+            f"activation caps (separation margin {margin:.3f} rad); "
+            f"estimated co-fire mass {p:.1%}"
+            + (" — deep overlap: boundary queries co-fire even "
+               "where the modeled query mixture is thin"
+               if deep and p < self.cfg.probable_conflict_eps
+               else ""),
+            evidence={"cofire_prob": p, "margin_rad": margin,
+                      "signals": (a, b)},
+            fix_hint="declare both in a SIGNAL_GROUP with "
+                     "semantics: softmax_exclusive (Voronoi "
+                     "normalization, Thm 2) or raise thresholds")
+
+    def _t5(self, hi: Rule, lo: Rule, b: str, p: float) -> Finding:
+        return Finding(
+            ConflictType.SOFT_SHADOWING, Decidability.GEOMETRIC,
+            (hi.name, lo.name),
+            f"{hi.name} wins on priority while {b!r} is the "
+            f"more confident signal on ~{p:.1%} of queries — "
+            f"routing against the evidence",
+            evidence={"against_evidence_mass": p},
+            fix_hint="use TIER routing (confidence within "
+                     "tier) or a softmax_exclusive group")
+
+    # -- stage: classifier T6 -------------------------------------------------
+    def _classifier_stage(self, ordered, dirty, admissible, counters
+                          ) -> List[Finding]:
+        t0 = time.perf_counter()
+        out: List[Finding] = []
+        by_atom: Dict[str, List[Rule]] = {}
+        for r in ordered:
+            for a in sorted(r.condition.atoms()):
+                s = self.signals.get(a)
+                if s is not None and s.kind is AtomKind.CLASSIFIER \
+                        and s.categories:
+                    by_atom.setdefault(a, []).append(r)
+        names = sorted(by_atom)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                if self._same_group(a, b):
+                    continue
+                if set(self.signals[a].categories) \
+                        & set(self.signals[b].categories):
+                    continue
+                if dirty is not None \
+                        and not any(r.name in dirty for r in by_atom[a]) \
+                        and not any(r.name in dirty for r in by_atom[b]):
+                    continue
+                counters.t6_pairs += 1
+                for r1 in by_atom[a]:
+                    for r2 in by_atom[b]:
+                        pair = admissible(r1, r2)
+                        if pair is None:
+                            continue
+                        hi, lo = pair
+                        sig_hi, sig_lo = (a, b) if hi is r1 else (b, a)
+                        out.append(self._t6(hi, lo, sig_hi, sig_lo))
+        counters.stage_s["classifier"] = time.perf_counter() - t0
+        return out
+
+    def _t6(self, hi: Rule, lo: Rule, a: str, b: str) -> Finding:
+        return Finding(
+            ConflictType.CALIBRATION_CONFLICT,
+            Decidability.UNDECIDABLE,
+            (hi.name, lo.name),
+            f"classifier signals {a!r}/{b!r} have disjoint "
+            f"category sets but may co-activate near semantic "
+            f"boundaries; not statically decidable (Thm 1.3)",
+            severity="info",
+            fix_hint="add TEST block assertions for boundary "
+                     "queries, or enable the online co-fire "
+                     "monitor (core/monitor.py)")

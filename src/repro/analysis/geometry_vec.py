@@ -1,0 +1,195 @@
+"""Device-vectorized spherical-cap geometry for the whole-policy
+conflict analyzer.
+
+The legacy detector decides cap intersection and estimates co-fire mass
+one pair at a time (``core/geometry.py``).  This module batches both:
+
+* **margin screen** — one (B, D)·(D, M) centroid-similarity GEMM per
+  tile, jitted, f32 on device.  The screen keeps every pair whose f32
+  separation margin is below ``INTERSECT_TOL + SCREEN_SLACK_RAD``; the
+  slack dominates the f32 GEMM + arccos rounding error, so the screen
+  never drops a truly intersecting pair.  Survivors are re-margined in
+  f64 numpy (bit-compatible with ``geometry.cap_separation_margin``)
+  and the *final* intersection decision is made there — which is why
+  pruned and exhaustive runs produce identical candidate sets.
+* **batched co-fire / against-evidence mass** — one vMF sample block
+  per *signal* (seeded from the signal name, so estimates are
+  independent of table size, rule order, and which other signals
+  changed — the property delta analysis needs), then one
+  (m, D)·(D, P) GEMM per signal against all of its candidate partners.
+  A pair's co-fire mass averages the two blocks' indicator counts;
+  the directional ``s_b > s_a`` counts give soft-shadowing evidence
+  for both orientations from the same GEMM.
+
+Centroid tables are uploaded through the signal engine's memoized
+``_device_tables`` (content-hashed LRU), so repeated analyses of the
+same table — the rebind gate's common case — skip the host→device copy.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry
+
+# final (f64) intersection tolerance — identical to geometry.caps_intersect
+INTERSECT_TOL = 1e-12
+# f32 screen slack: |f32 margin − f64 margin| is bounded by the GEMM
+# accumulation error (~D·eps_f32) amplified by arccos near ±1; 5e-3 rad
+# covers D ≤ 4096 with two orders of magnitude to spare
+SCREEN_SLACK_RAD = 5e-3
+
+
+def _device_centroids(c32: np.ndarray) -> jnp.ndarray:
+    """Memoized device upload of a unit-row centroid matrix (f32)."""
+    from repro.signals.engine import _device_tables
+    return _device_tables({"analysis_c": np.ascontiguousarray(c32)},
+                          mesh=None, precision="f32")["analysis_c"]
+
+
+@jax.jit
+def _margin_screen_core(ca: jnp.ndarray, cb: jnp.ndarray,
+                        ra: jnp.ndarray, rb: jnp.ndarray) -> jnp.ndarray:
+    """(B, M) bool: f32 separation margin below the screen threshold."""
+    sims = jnp.clip(ca @ cb.T, -1.0, 1.0)
+    margin = jnp.arccos(sims) - (ra[:, None] + rb[None, :])
+    return margin <= INTERSECT_TOL + SCREEN_SLACK_RAD
+
+
+def margin_screen(ca: jnp.ndarray, cb: jnp.ndarray,
+                  ra: np.ndarray, rb: np.ndarray) -> np.ndarray:
+    """Screen one tile of row caps against one tile of column caps.
+
+    Padding rows/cols are encoded by the caller with radius −10 rad
+    (margin >> slack, never kept).  Returns a host bool matrix."""
+    return np.asarray(_margin_screen_core(
+        ca, cb, jnp.asarray(ra, jnp.float32), jnp.asarray(rb, jnp.float32)))
+
+
+def refine_margins(c64: np.ndarray, radii: np.ndarray,
+                   ia: np.ndarray, ib: np.ndarray) -> np.ndarray:
+    """Exact f64 separation margins for screened pairs (ia, ib).
+
+    Matches ``geometry.cap_separation_margin`` on the same unit rows —
+    the authoritative value reported in findings and compared against
+    ``INTERSECT_TOL`` for the final intersect decision."""
+    if ia.size == 0:
+        return np.zeros(0, np.float64)
+    u = c64[ia] / np.linalg.norm(c64[ia], axis=1, keepdims=True)
+    v = c64[ib] / np.linalg.norm(c64[ib], axis=1, keepdims=True)
+    ang = np.arccos(np.clip(np.einsum("ij,ij->i", u, v), -1.0, 1.0))
+    return ang - (radii[ia] + radii[ib])
+
+
+# ---------------------------------------------------------------------------
+# batched vMF mass estimation
+# ---------------------------------------------------------------------------
+
+
+def signal_sample_block(name: str, centroid: np.ndarray, kappa: float,
+                        m: int, seed: int) -> np.ndarray:
+    """(m, d) f64 vMF sample block for one signal.
+
+    Seeded by (analysis seed, crc32(signal name)): deterministic,
+    order-free, and stable under edits to *other* signals — a clean
+    rule pair re-estimates to bit-identical masses in a delta pass."""
+    rng = np.random.default_rng([seed, zlib.crc32(name.encode())])
+    return geometry.sample_vmf(centroid, kappa, m, rng)
+
+
+@jax.jit
+def _mass_counts_core(x: jnp.ndarray, self_sims: jnp.ndarray,
+                      cp: jnp.ndarray, thr_self: jnp.ndarray,
+                      thrp: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Per-partner indicator counts over one signal's sample block.
+
+    x: (m, D) samples of signal i; self_sims: (m,) x·c_i; cp: (P, D)
+    partner centroids; thrp: (P,) partner thresholds (2.0 = dead pad).
+    -> (both, cross_gt_self, self_gt_cross), each (P,) int32, where
+    ``both`` counts samples inside both caps and the directional counts
+    split ``both`` by which signal scores higher."""
+    cross = x @ cp.T                                   # (m, P)
+    fired_self = (self_sims >= thr_self)[:, None]
+    both = fired_self & (cross >= thrp[None, :])
+    cgs = both & (cross > self_sims[:, None])
+    sgc = both & (cross < self_sims[:, None])
+    return (both.sum(0).astype(jnp.int32),
+            cgs.sum(0).astype(jnp.int32),
+            sgc.sum(0).astype(jnp.int32))
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class MassEstimator:
+    """Batched co-fire / against-evidence masses over candidate pairs.
+
+    Built once per analysis pass from the f32 centroid matrix; sample
+    blocks are generated lazily per participating signal and every
+    partner list is evaluated with one GEMM (partner count bucketed to
+    a power of two so the jitted kernel compiles a handful of shapes).
+    """
+
+    def __init__(self, names: Sequence[str], c64: np.ndarray,
+                 thresholds: np.ndarray, kappa: float, m: int, seed: int):
+        self.names = list(names)
+        self.c64 = c64
+        self.thr = np.asarray(thresholds, np.float64)
+        self.kappa = float(kappa)
+        self.m = int(m)
+        self.seed = int(seed)
+        # per-pair counts keyed (i, j): [both_i, cgs_i, sgc_i] from i's
+        # block (cross = sims vs j) and the mirror from j's block
+        self._counts: Dict[Tuple[int, int], np.ndarray] = {}
+        self.blocks_sampled = 0
+        self.pair_evals = 0
+
+    def estimate(self, pairs: Sequence[Tuple[int, int]]) -> None:
+        """Populate counts for unordered index pairs (i < j)."""
+        partners: Dict[int, List[int]] = {}
+        for i, j in pairs:
+            partners.setdefault(i, []).append(j)
+            partners.setdefault(j, []).append(i)
+        for i in sorted(partners):
+            ps = sorted(set(partners[i]))
+            x = signal_sample_block(self.names[i], self.c64[i],
+                                    self.kappa, self.m, self.seed)
+            self.blocks_sampled += 1
+            x32 = jnp.asarray(x, jnp.float32)
+            self_sims = jnp.asarray(x @ self.c64[i], jnp.float32)
+            pb = _bucket(max(len(ps), 1))
+            cp = np.zeros((pb, self.c64.shape[1]), np.float32)
+            thrp = np.full(pb, 2.0, np.float32)
+            cp[:len(ps)] = self.c64[ps].astype(np.float32)
+            thrp[:len(ps)] = self.thr[ps].astype(np.float32)
+            both, cgs, sgc = _mass_counts_core(
+                x32, self_sims, jnp.asarray(cp),
+                jnp.float32(self.thr[i]), jnp.asarray(thrp))
+            both, cgs, sgc = (np.asarray(both), np.asarray(cgs),
+                              np.asarray(sgc))
+            for k, j in enumerate(ps):
+                self._counts[(i, j)] = np.array(
+                    [both[k], cgs[k], sgc[k]], np.int64)
+                self.pair_evals += 1
+
+    def cofire(self, i: int, j: int) -> float:
+        """P(both caps fire) under the two-centroid vMF mixture."""
+        a = self._counts[(i, j)]
+        b = self._counts[(j, i)]
+        return float((a[0] + b[0]) / (2.0 * self.m))
+
+    def against(self, hi_sig: int, lo_sig: int) -> float:
+        """P(both fire ∧ lo's signal scores strictly higher)."""
+        # on hi's block the lo signal is the cross column (cross>self);
+        # on lo's block it is self (self>cross)
+        a = self._counts[(hi_sig, lo_sig)]
+        b = self._counts[(lo_sig, hi_sig)]
+        return float((a[1] + b[2]) / (2.0 * self.m))

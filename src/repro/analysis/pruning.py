@@ -1,0 +1,183 @@
+"""IVF-based candidate-pair pruning for the whole-policy analyzer.
+
+Finding every intersecting cap pair among N routes is the analyzer's
+scale bottleneck: the margin matrix is O(N²).  This module reuses the
+two-stage router's bind-time layout (``signals/ivf.py``: deterministic
+spherical k-means + the bounded-chunk slab layout) to skip blocks of
+pairs that *provably* cannot intersect.
+
+Soundness argument (docs/analysis.md): for slabs s, t with unit heads
+h_s, h_t, member spread δ_s = max_i angle(c_i, h_s) and max cap radius
+rmax_s, the spherical triangle inequality gives, for any members
+i ∈ s, j ∈ t,
+
+    angle(c_i, c_j) ≥ angle(h_s, h_t) − δ_s − δ_t
+    margin(i, j)    ≥ angle(h_s, h_t) − δ_s − δ_t − rmax_s − rmax_t.
+
+If that lower bound exceeds the intersection tolerance (plus a float
+slack), no pair between the slabs intersects and the whole block is
+skipped without computing a single pairwise similarity.  Surviving
+blocks go through the f32 device margin screen and the f64 refine
+(``geometry_vec``), so the *final* candidate set is bit-identical to
+an exhaustive pass — the pruned-vs-exhaustive parity the tests and the
+CI smoke pin, mirroring the router's nprobe = n_slabs oracle.
+
+Cluster quality only affects how much is pruned, never what survives:
+a loose clustering degrades to more block screens, not to missed pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import geometry_vec
+from repro.signals.ivf import build_slab_layout, spherical_kmeans
+
+# bound slack absorbing f64 rounding in the slab-level bound
+BOUND_SLACK_RAD = 1e-6
+# below this table size the slab machinery costs more than it saves
+PRUNE_MIN_N = 2048
+# row-tile height for the exhaustive / delta-rows screens
+TILE_ROWS = 1024
+# dead-pad radius: margin = angle + 200 rad, never survives the screen
+_PAD_RADIUS = -100.0
+
+
+@dataclasses.dataclass
+class PruneStats:
+    """Work accounting for one candidate-pair search."""
+    pairs_possible: int = 0        # N·(N−1)/2 in the full pair universe
+    slab_pairs: int = 0            # slab blocks considered (pruned mode)
+    slab_pairs_kept: int = 0       # blocks that survived the cap bound
+    margin_evals: int = 0          # pairwise f32 margins actually computed
+    candidates: int = 0            # pairs intersecting after f64 refine
+    mode: str = "exhaustive"       # exhaustive | pruned | rows
+
+
+def _pow2(n: int, floor: int) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_side(c32: np.ndarray, radii: np.ndarray, idx: np.ndarray,
+              width: int) -> Tuple[jnp.ndarray, np.ndarray]:
+    """Gather one side of a block, padded to ``width`` dead slots."""
+    c = np.zeros((width, c32.shape[1]), np.float32)
+    r = np.full(width, _PAD_RADIUS, np.float32)
+    c[: idx.size] = c32[idx]
+    r[: idx.size] = radii[idx]
+    return jnp.asarray(c), r
+
+
+def _finalize(c64: np.ndarray, radii: np.ndarray, gi: np.ndarray,
+              gj: np.ndarray, stats: PruneStats
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Canonicalize (i<j), dedup, refine in f64, keep true intersections."""
+    if gi.size == 0:
+        stats.candidates = 0
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float64)
+    lo = np.minimum(gi, gj)
+    hi = np.maximum(gi, gj)
+    keep = lo != hi
+    lo, hi = lo[keep], hi[keep]
+    packed = np.unique(lo.astype(np.int64) * (c64.shape[0] + 1) + hi)
+    ia = packed // (c64.shape[0] + 1)
+    ib = packed % (c64.shape[0] + 1)
+    margins = geometry_vec.refine_margins(c64, radii, ia, ib)
+    final = margins <= geometry_vec.INTERSECT_TOL
+    stats.candidates = int(final.sum())
+    return ia[final], ib[final], margins[final]
+
+
+def candidate_pairs(c64: np.ndarray, radii: np.ndarray, *,
+                    prune: bool = True,
+                    rows: Optional[np.ndarray] = None,
+                    kmeans_iters: int = 4, seed: int = 0
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               PruneStats]:
+    """All unordered cap pairs (i < j) whose caps intersect.
+
+    c64: (N, D) unit f64 centroids; radii: (N,) angular radii.
+    ``rows`` restricts one side of the pair universe to the given
+    indices (delta analysis: pairs touching a changed signal) — the
+    screen then costs O(|rows|·N) instead of O(N²).  With ``prune``
+    the slab bound skips provably-disjoint blocks; the returned set is
+    identical either way.  -> (ia, ib, margins_f64, stats)."""
+    n = int(c64.shape[0])
+    stats = PruneStats(pairs_possible=n * (n - 1) // 2)
+    radii32 = np.asarray(radii, np.float32)
+    c32 = np.ascontiguousarray(c64, dtype=np.float32)
+    out_i: List[np.ndarray] = []
+    out_j: List[np.ndarray] = []
+    all_idx = np.arange(n, dtype=np.int64)
+
+    def screen(rows_idx: np.ndarray, cols_idx: np.ndarray,
+               ca: jnp.ndarray, ra: np.ndarray,
+               cb: jnp.ndarray, rb: np.ndarray) -> None:
+        keep = geometry_vec.margin_screen(ca, cb, ra, rb)
+        stats.margin_evals += int(rows_idx.size) * int(cols_idx.size)
+        ii, jj = np.nonzero(keep[: rows_idx.size, : cols_idx.size])
+        if ii.size:
+            out_i.append(rows_idx[ii])
+            out_j.append(cols_idx[jj])
+
+    if rows is not None or not prune or n < PRUNE_MIN_N:
+        # full-width column side, uploaded once through the memoized
+        # device-table cache; only the row tiles vary
+        cb = geometry_vec._device_centroids(c32)
+        if rows is not None:
+            stats.mode = "rows"
+            row_universe = np.asarray(
+                sorted(set(int(r) for r in rows)), np.int64)
+        else:
+            stats.mode = "exhaustive"
+            row_universe = all_idx
+        for lo in range(0, row_universe.size, TILE_ROWS):
+            tile = row_universe[lo: lo + TILE_ROWS]
+            ca, ra = _pad_side(c32, radii32, tile,
+                               min(TILE_ROWS, _pow2(tile.size, 64)))
+            screen(tile, all_idx, ca, ra, cb, radii32)
+    else:
+        stats.mode = "pruned"
+        k = max(1, int(round(math.sqrt(n))))
+        _, assign = spherical_kmeans(c32, k, iters=kmeans_iters, seed=seed)
+        chunks, _ = build_slab_layout(assign, k)
+        chunks = [ch.astype(np.int64) for ch in chunks if ch.size]
+        s = len(chunks)
+        heads = np.zeros((s, c64.shape[1]), np.float64)
+        spread = np.zeros(s)
+        rmax = np.zeros(s)
+        for t, ch in enumerate(chunks):
+            m = c64[ch].mean(axis=0)
+            heads[t] = m / max(float(np.linalg.norm(m)), 1e-8)
+            cosines = np.clip(c64[ch] @ heads[t], -1.0, 1.0)
+            spread[t] = float(np.arccos(cosines).max())
+            rmax[t] = float(radii[ch].max())
+        hang = np.arccos(np.clip(heads @ heads.T, -1.0, 1.0))
+        bound = hang - (spread[:, None] + spread[None, :]) \
+            - (rmax[:, None] + rmax[None, :])
+        keep = bound <= geometry_vec.INTERSECT_TOL + BOUND_SLACK_RAD
+        stats.slab_pairs = s * (s + 1) // 2
+        width = _pow2(max(ch.size for ch in chunks), 64)
+        for a in range(s):
+            if not keep[a, a:].any():
+                continue
+            ca, ra = _pad_side(c32, radii32, chunks[a], width)
+            for b in range(a, s):
+                if not keep[a, b]:
+                    continue
+                stats.slab_pairs_kept += 1
+                cb, rb = _pad_side(c32, radii32, chunks[b], width)
+                screen(chunks[a], chunks[b], ca, ra, cb, rb)
+
+    gi = np.concatenate(out_i) if out_i else np.zeros(0, np.int64)
+    gj = np.concatenate(out_j) if out_j else np.zeros(0, np.int64)
+    ia, ib, margins = _finalize(c64, radii, gi, gj, stats)
+    return ia, ib, margins, stats

@@ -1,0 +1,121 @@
+"""Seeded synthetic route tables for analyzer benchmarks and parity
+tests.
+
+``planted_cap_table`` builds the topic-clustered geometry the IVF slab
+pruning is designed for: ~√n tight topic clusters of high-threshold
+embedding signals whose caps provably never intersect within a
+cluster, plus ``n_conflicts`` *planted* deep-overlap pairs at isolated
+random directions.  The planted pairs are the ground truth: a correct
+analyzer (pruned, exhaustive, or delta) finds exactly those T4s.
+
+The planted geometry is chosen so the intersect decision is robust to
+estimator details — margins around −0.65 rad sit far on both sides of
+every threshold involved (intersection tolerance, deep-overlap cutoff)
+— which is what lets tests compare the staged engine against the
+legacy pair loop by finding identity rather than by float equality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.atoms import SignalAtom
+from repro.core.conditions import Atom
+from repro.core.taxonomy import Rule
+
+# topic-cluster scatter: same-topic centroid angles ≈ √2·TAU ≈ 0.17 rad,
+# well clear of twice the topic cap radius (≈ 0.09 rad) — no accidental
+# intersections inside a cluster
+TOPIC_TAU = 0.12
+TOPIC_THRESHOLD = 0.999            # cap radius ≈ 0.045 rad
+PLANTED_THRESHOLD = 0.93           # cap radius ≈ 0.376 rad
+PLANTED_ANGLE = 0.1                # pair margin ≈ 0.1 − 0.75 ≈ −0.65 rad
+
+
+@dataclasses.dataclass
+class PlantedTable:
+    """A synthetic policy: one single-atom rule per embedding signal,
+    with ``planted`` the signal-name pairs that must surface as T4."""
+    signals: Dict[str, SignalAtom]
+    groups: List[Tuple[str, ...]]
+    rules: List[Rule]
+    planted: List[Tuple[str, str]]
+
+
+def _unit_rows(x: np.ndarray) -> np.ndarray:
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def planted_cap_table(n: int, d: int = 256, n_conflicts: int = 8,
+                      seed: int = 0) -> PlantedTable:
+    """n-route topic-clustered table with ``n_conflicts`` planted deep
+    T4 pairs (the last ``2·n_conflicts`` signals, pair k = indices
+    n−2k−2 / n−2k−1).  Deterministic in ``seed``."""
+    if 2 * n_conflicts > n:
+        raise ValueError("need n >= 2*n_conflicts")
+    rng = np.random.default_rng(seed)
+    n_topics = max(1, int(round(math.sqrt(n))))
+    centers = _unit_rows(rng.standard_normal((n_topics, d)))
+    topic = rng.integers(0, n_topics, size=n)
+    # unit-normalized noise direction: scatter angle ≈ TAU regardless of
+    # d (a raw gaussian's norm grows with √d and would smear each topic
+    # across ~1 rad, defeating the slab bound the table exists to test)
+    noise = _unit_rows(rng.standard_normal((n, d)))
+    c = _unit_rows(centers[topic] + TOPIC_TAU * noise)
+    thr = np.full(n, TOPIC_THRESHOLD)
+
+    planted: List[Tuple[str, str]] = []
+    for k in range(n_conflicts):
+        i, j = n - 2 * k - 2, n - 2 * k - 1
+        u = _unit_rows(rng.standard_normal(d))
+        v = rng.standard_normal(d)
+        w = v - (v @ u) * u
+        w /= max(float(np.linalg.norm(w)), 1e-12)
+        c[i] = u
+        c[j] = math.cos(PLANTED_ANGLE) * u + math.sin(PLANTED_ANGLE) * w
+        thr[i] = thr[j] = PLANTED_THRESHOLD
+        planted.append((_sig_name(i), _sig_name(j)))
+
+    signals = {
+        _sig_name(i): SignalAtom(_sig_name(i), "embedding",
+                                 threshold=float(thr[i]), centroid=c[i])
+        for i in range(n)
+    }
+    rules = [Rule(name=f"r{i:06d}", condition=Atom(_sig_name(i)),
+                  action=f"m{i % 2}", priority=i) for i in range(n)]
+    return PlantedTable(signals, [], rules, planted)
+
+
+def _sig_name(i: int) -> str:
+    return f"s{i:06d}"
+
+
+def with_benign_edit(table: PlantedTable, index: int = 0) -> PlantedTable:
+    """Copy with signal ``index``'s threshold nudged — dirties exactly
+    one rule's context without changing any intersection decision."""
+    name = _sig_name(index)
+    signals = dict(table.signals)
+    signals[name] = dataclasses.replace(signals[name], threshold=0.9985)
+    return PlantedTable(signals, list(table.groups), list(table.rules),
+                        list(table.planted))
+
+
+def with_new_conflict(table: PlantedTable, src: int, dst: int
+                      ) -> PlantedTable:
+    """Copy where signal ``src``'s cap is moved into deep overlap with
+    signal ``dst``'s — a delta pass over the one dirtied rule must
+    surface the new T4 exactly as a full pass does."""
+    s_src, s_dst = _sig_name(src), _sig_name(dst)
+    signals = dict(table.signals)
+    # only src changes: exactly one rule dirties, yet the co-located
+    # caps overlap deeply (margin ≈ −0.42 rad) whatever dst's radius is
+    dst_c = np.asarray(signals[s_dst].centroid, np.float64)
+    signals[s_src] = dataclasses.replace(
+        signals[s_src], centroid=dst_c.copy(),
+        threshold=PLANTED_THRESHOLD)
+    return PlantedTable(signals, list(table.groups), list(table.rules),
+                        list(table.planted) + [(min(s_src, s_dst),
+                                                max(s_src, s_dst))])

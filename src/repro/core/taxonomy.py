@@ -30,6 +30,10 @@ from repro.core.conditions import Atom, Cond
 
 
 class ConflictType(enum.Enum):
+    """The paper's six anomaly types T1–T6 (fig. 2), ordered by the
+    decidability hierarchy: T1–T3 are SAT-decidable over crisp Boolean
+    structure, T4–T5 are decidable from fixed embedding geometry, T6 is
+    statically undecidable without the query distribution."""
     LOGICAL_CONTRADICTION = 1
     STRUCTURAL_SHADOWING = 2
     STRUCTURAL_REDUNDANCY = 3
@@ -39,6 +43,7 @@ class ConflictType(enum.Enum):
 
 
 class Decidability(enum.Enum):
+    """Theorem 1's three decidability levels for a finding/condition."""
     SAT = "decidable-sat"                  # crisp atoms
     GEOMETRIC = "decidable-geometric"      # embedding atoms, fixed model
     UNDECIDABLE = "undecidable-static"     # classifier atoms w/o P(x)
@@ -46,6 +51,7 @@ class Decidability(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class Rule:
+    """One prioritized routing rule: WHEN ``condition`` DO ``action``."""
     name: str
     condition: Cond
     action: str
@@ -55,16 +61,19 @@ class Rule:
 
 @dataclasses.dataclass(frozen=True)
 class Finding:
+    """One detected anomaly: kind + decidability level + the rule names
+    involved, with human ``detail`` and machine ``evidence``."""
     kind: ConflictType
     decidability: Decidability
     rules: Tuple[str, ...]
     detail: str
-    severity: str = "warning"              # warning | error
+    severity: str = "warning"              # info | warning | error
     evidence: Optional[dict] = None
     fix_hint: str = ""
 
 
 def atom_kinds(cond: Cond, signals: Dict[str, SignalAtom]) -> List[AtomKind]:
+    """Kinds of the signals a condition references, sorted by name."""
     return [signals[n].kind for n in sorted(cond.atoms()) if n in signals]
 
 
@@ -84,6 +93,7 @@ def condition_level(cond: Cond, signals: Dict[str, SignalAtom]) -> Decidability:
 
 @dataclasses.dataclass
 class TaxonomyConfig:
+    """Thresholds and Monte-Carlo knobs for the T4–T6 detectors."""
     probable_conflict_eps: float = 0.01    # min co-fire mass to report T4
     # caps whose separation margin is this deep into overlap are a T4
     # hazard regardless of the assumed query mixture: the co-fire region
@@ -97,6 +107,7 @@ class TaxonomyConfig:
     seed: int = 0
 
     def kappa(self, d: int) -> float:
+        """vMF concentration of the modeled query mixture in dim d."""
         return self.query_kappa_scale * d
 
 
@@ -256,24 +267,44 @@ class ConflictDetector:
 
     # -- driver ---------------------------------------------------------------
     def analyze(self, rules: Sequence[Rule]) -> List[Finding]:
+        """Run the full T1–T6 hierarchy over ``rules``.
+
+        Delegates to the staged whole-policy analyzer
+        (``repro.analysis.engine.WholePolicyAnalyzer``): vectorized cap
+        geometry + IVF candidate-pair pruning replace the O(N²) Python
+        pair loop, which survives as :meth:`analyze_pairwise` — the
+        small-table oracle the analyzer's tests compare against.
+        Findings come back in deterministic sorted order regardless of
+        the input rule order (see :func:`finding_sort_key`)."""
+        from repro.analysis.engine import WholePolicyAnalyzer
+        return WholePolicyAnalyzer(
+            self.signals, self.groups, self.cfg).analyze(rules).findings
+
+    def analyze_pairwise(self, rules: Sequence[Rule]) -> List[Finding]:
+        """Reference O(N²) pair-loop implementation of the hierarchy.
+
+        Kept as the exhaustive oracle for the staged analyzer; only
+        viable on small tables (per-pair SAT calls + per-pair vMF
+        Monte-Carlo).  Deterministic: rules are ordered by
+        (-tier, -priority, name) and findings are sorted."""
         findings: List[Finding] = []
-        ordered = sorted(rules, key=lambda r: (-r.tier, -r.priority))
+        ordered = sorted(rules, key=lambda r: (-r.tier, -r.priority, r.name))
         seen_contradiction = set()
         for i, hi in enumerate(ordered):
             for lo in ordered[i + 1:]:
                 if hi.action == lo.action and hi.priority == lo.priority:
                     continue
-                fs = self._crisp_findings(hi, lo)
-                # report each contradiction once
-                fs = [f for f in fs if not (
-                    f.kind is ConflictType.LOGICAL_CONTRADICTION
-                    and (f.rules in seen_contradiction
-                         or seen_contradiction.add(f.rules)))]
-                findings.extend(fs)
+                for f in self._crisp_findings(hi, lo):
+                    if f.kind is ConflictType.LOGICAL_CONTRADICTION:
+                        # report each contradiction once
+                        if f.rules in seen_contradiction:
+                            continue
+                        seen_contradiction.add(f.rules)
+                    findings.append(f)
                 findings.extend(self._geometric_findings(hi, lo))
                 findings.extend(self._soft_shadowing(hi, lo))
                 findings.extend(self._calibration_findings(hi, lo))
-        return findings
+        return sorted(findings, key=finding_sort_key)
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +316,14 @@ class ConflictDetector:
 # input mass" hazard — statically detectable, so a new generation that
 # *introduces* one must never reach traffic.
 BLOCKING_KINDS = (ConflictType.PROBABLE_CONFLICT,)
+
+
+def finding_sort_key(f: Finding) -> Tuple:
+    """Total order on findings so analyzer output is deterministic in
+    the input rule order: kind, then the involved rule names, then the
+    rendered detail (distinguishes multiple signal pairs between the
+    same two rules)."""
+    return (f.kind.value, f.rules, f.detail, f.severity)
 
 
 def finding_key(f: Finding) -> Tuple:

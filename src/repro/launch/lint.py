@@ -1,0 +1,279 @@
+"""repro-lint: whole-policy static analysis for Semantic Router DSL
+files (docs/analysis.md).
+
+  PYTHONPATH=src python -m repro.launch.lint examples/*.dsl
+  PYTHONPATH=src python -m repro.launch.lint policy.dsl --json out.json
+
+Runs the compiler, the validator's static passes (M1–M5, M7) and the
+staged T1–T6 conflict analyzer (``repro.analysis``) over each policy,
+after binding live centroids through the hash embedder so the
+geometric layer sees the same caps the server routes on.  Prints
+human-readable diagnostics; ``--json`` additionally emits one
+SARIF-style report (version 2.1.0 layout, schema in docs/analysis.md)
+covering all linted files.
+
+Exit status is nonzero iff any policy is *blocked*: a compile error,
+an error-severity validator diagnostic, or a blocking finding
+(error severity, or a T4 probable conflict — the admission gate's
+``BLOCKING_KINDS``).  Warnings and infos never affect the exit code,
+so the CI ``policy-lint`` job gates exactly on what the serving
+admission gate would reject.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.analysis.engine import WholePolicyAnalyzer
+from repro.core.taxonomy import (Finding, blocking_findings, finding_key)
+from repro.dsl.compiler import CompileError, compile_text
+from repro.dsl.validate import Diagnostic, Validator
+
+SARIF_VERSION = "2.1.0"
+_LEVELS = {"error": "error", "warning": "warning", "info": "note"}
+
+
+@dataclasses.dataclass
+class PolicyReport:
+    """Everything lint learned about one policy file."""
+    uri: str
+    fingerprint: Optional[str] = None
+    compile_error: Optional[str] = None
+    diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    counters: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def blocked(self) -> bool:
+        """True iff this policy must fail the lint gate."""
+        return bool(self.compile_error
+                    or any(d.severity == "error" for d in self.diagnostics)
+                    or blocking_findings(self.findings))
+
+
+def lint_text(text: str, uri: str = "<policy>", *,
+              prune: bool = True) -> PolicyReport:
+    """Compile, validate, bind and analyze one DSL policy."""
+    report = PolicyReport(uri=uri)
+    try:
+        config = compile_text(text)
+    except (CompileError, SyntaxError) as e:
+        report.compile_error = f"{type(e).__name__}: {e}"
+        return report
+    report.fingerprint = config.fingerprint()
+    report.diagnostics = Validator(config).validate(run_taxonomy=False)
+    if any(d.severity == "error" for d in report.diagnostics):
+        return report      # binding an invalid policy may itself fail
+    # bind live centroids (mean candidate embeddings written back into
+    # the signal atoms) so cap geometry matches what serving routes on
+    from repro.signals.embedder import HashEmbedder
+    from repro.signals.engine import SignalEngine
+    SignalEngine(config, HashEmbedder())
+    result = WholePolicyAnalyzer(
+        config.signals, config.exclusive_groups(), prune=prune,
+        fingerprint=config.fingerprint()).analyze(config.rules)
+    report.findings = result.findings
+    report.counters = result.counters.as_dict()
+    return report
+
+
+def lint_path(path: pathlib.Path, *, prune: bool = True) -> PolicyReport:
+    """``lint_text`` over a policy file, with its path as the URI."""
+    return lint_text(path.read_text(), uri=str(path), prune=prune)
+
+
+# ---------------------------------------------------------------------------
+# SARIF-style report (schema documented in docs/analysis.md)
+# ---------------------------------------------------------------------------
+
+
+def _json_safe(v: Any) -> Any:
+    if isinstance(v, dict):
+        return {str(k): _json_safe(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    if hasattr(v, "item"):           # numpy scalar
+        return v.item()
+    return v
+
+
+def _finding_result(report: PolicyReport, f: Finding) -> Dict[str, Any]:
+    return {
+        "ruleId": f"T{f.kind.value}-{f.kind.name}",
+        "level": _LEVELS.get(f.severity, "warning"),
+        "message": {"text": f.detail},
+        "locations": [{"physicalLocation": {
+            "artifactLocation": {"uri": report.uri}}}],
+        "properties": {
+            "rules": list(f.rules),
+            "severity": f.severity,
+            "decidability": f.decidability.value,
+            "findingKey": _json_safe(finding_key(f)),
+            "blocking": f in blocking_findings([f]),
+            "evidence": _json_safe(f.evidence or {}),
+            "fixHint": f.fix_hint,
+        },
+    }
+
+
+def _diag_result(report: PolicyReport, d: Diagnostic) -> Dict[str, Any]:
+    return {
+        "ruleId": d.code,
+        "level": _LEVELS.get(d.severity, "warning"),
+        "message": {"text": d.message},
+        "locations": [{"physicalLocation": {
+            "artifactLocation": {"uri": report.uri}}}],
+        "properties": {"severity": d.severity, "fixHint": d.fix_hint},
+    }
+
+
+def sarif_report(reports: List[PolicyReport]) -> Dict[str, Any]:
+    """One SARIF 2.1.0-layout document covering all linted policies."""
+    results: List[Dict[str, Any]] = []
+    for r in reports:
+        if r.compile_error:
+            results.append({
+                "ruleId": "COMPILE",
+                "level": "error",
+                "message": {"text": r.compile_error},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": r.uri}}}],
+                "properties": {"severity": "error", "fixHint": ""},
+            })
+        results += [_diag_result(r, d) for d in r.diagnostics]
+        results += [_finding_result(r, f) for f in r.findings]
+    return {
+        "version": SARIF_VERSION,
+        "$schema": "https://json.schemastore.org/sarif-2.1.0.json",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro-lint",
+                "informationUri": "docs/analysis.md",
+            }},
+            "results": results,
+            "properties": {
+                "policies": [{
+                    "uri": r.uri,
+                    "fingerprint": r.fingerprint,
+                    "blocked": r.blocked,
+                    "counters": _json_safe(r.counters),
+                } for r in reports],
+            },
+        }],
+    }
+
+
+def validate_report(doc: Dict[str, Any]) -> List[str]:
+    """Schema check for a repro-lint SARIF document; returns problems
+    (empty list = valid).  This is the schema docs/analysis.md pins."""
+    errs: List[str] = []
+    if doc.get("version") != SARIF_VERSION:
+        errs.append(f"version must be {SARIF_VERSION!r}")
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or len(runs) != 1:
+        return errs + ["runs must be a one-element list"]
+    run = runs[0]
+    name = run.get("tool", {}).get("driver", {}).get("name")
+    if name != "repro-lint":
+        errs.append("tool.driver.name must be 'repro-lint'")
+    for i, res in enumerate(run.get("results", [])):
+        where = f"results[{i}]"
+        if not isinstance(res.get("ruleId"), str) or not res["ruleId"]:
+            errs.append(f"{where}: missing ruleId")
+        if res.get("level") not in ("note", "warning", "error"):
+            errs.append(f"{where}: bad level {res.get('level')!r}")
+        if not isinstance(res.get("message", {}).get("text"), str):
+            errs.append(f"{where}: missing message.text")
+        locs = res.get("locations")
+        if not (isinstance(locs, list) and locs
+                and locs[0].get("physicalLocation", {})
+                .get("artifactLocation", {}).get("uri")):
+            errs.append(f"{where}: missing location uri")
+        props = res.get("properties", {})
+        if props.get("severity") not in ("info", "warning", "error"):
+            errs.append(f"{where}: bad properties.severity")
+    pols = run.get("properties", {}).get("policies")
+    if not isinstance(pols, list) or not pols:
+        errs.append("run.properties.policies must be a non-empty list")
+    else:
+        for i, p in enumerate(pols):
+            if not isinstance(p.get("uri"), str):
+                errs.append(f"policies[{i}]: missing uri")
+            if not isinstance(p.get("blocked"), bool):
+                errs.append(f"policies[{i}]: missing blocked flag")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _print_report(r: PolicyReport, quiet: bool) -> None:
+    n_block = (1 if r.compile_error else 0) \
+        + sum(1 for d in r.diagnostics if d.severity == "error") \
+        + len(blocking_findings(r.findings))
+    status = "BLOCKED" if r.blocked else "ok"
+    print(f"{r.uri}: {status} — {len(r.findings)} finding(s), "
+          f"{len(r.diagnostics)} diagnostic(s), {n_block} blocking")
+    if quiet:
+        return
+    if r.compile_error:
+        print(f"  [error] COMPILE: {r.compile_error}")
+    for d in r.diagnostics:
+        print(f"  [{d.severity}] {d.code}: {d.message}")
+        if d.fix_hint:
+            print(f"      fix: {d.fix_hint}")
+    for f in r.findings:
+        mark = " (blocking)" if blocking_findings([f]) else ""
+        print(f"  [{f.severity}] T{f.kind.value}-{f.kind.name}"
+              f"{mark} {f.rules}: {f.detail}")
+        if f.fix_hint:
+            print(f"      fix: {f.fix_hint}")
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code (0 = no policy
+    blocked)."""
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="Static conflict analysis for Semantic Router DSL "
+                    "policies (docs/analysis.md)")
+    ap.add_argument("policies", nargs="+", help=".dsl policy files")
+    ap.add_argument("--json", default="",
+                    help="write a SARIF-style JSON report here "
+                         "('-' for stdout)")
+    ap.add_argument("--no-prune", action="store_true",
+                    help="force the exhaustive geometric screen "
+                         "(parity debugging)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="one status line per policy, no finding detail")
+    args = ap.parse_args(argv)
+    reports = [lint_path(pathlib.Path(p), prune=not args.no_prune)
+               for p in args.policies]
+    for r in reports:
+        _print_report(r, args.quiet)
+    if args.json:
+        doc = sarif_report(reports)
+        problems = validate_report(doc)
+        if problems:       # never emit a report that fails its own schema
+            raise AssertionError(f"internal schema violation: {problems}")
+        text = json.dumps(doc, indent=2, sort_keys=True)
+        if args.json == "-":
+            print(text)
+        else:
+            pathlib.Path(args.json).write_text(text + "\n")
+    blocked = [r.uri for r in reports if r.blocked]
+    if blocked:
+        print(f"repro-lint: {len(blocked)}/{len(reports)} "
+              f"polic{'y' if len(blocked) == 1 else 'ies'} blocked")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -79,8 +79,8 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.monitor import OnlineConflictMonitor
-from repro.core.taxonomy import (ConflictDetector, Finding,
-                                 blocking_findings, finding_key)
+from repro.analysis.engine import PolicySummary, WholePolicyAnalyzer
+from repro.core.taxonomy import (Finding, blocking_findings, finding_key)
 from repro.dsl.compiler import CompileError, RouterConfig, compile_text
 from repro.dsl.validate import Diagnostic, Validator, has_errors
 from repro.models.model import build_model
@@ -173,6 +173,9 @@ class PolicyGeneration:
     inflight: int = 0
     retired: bool = False
     blocking_keys: Optional[frozenset] = None
+    # cached whole-policy analysis summary (analysis/engine.py) — the
+    # base the next rebind's delta pass re-analyzes against
+    analysis: Optional[PolicySummary] = None
     # rule-aligned sharded term tables (distributed/policy_shard) —
     # built only when the engine's shard_map path is active, so the
     # non-observing mesh route can psum_scatter the policy argmax
@@ -189,6 +192,9 @@ class RebindResult:
     reasons: List[str] = dataclasses.field(default_factory=list)
     diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
     blocking: List[Finding] = dataclasses.field(default_factory=list)
+    # analyzer work counters from the admission gate (delta pass on the
+    # common path) — AnalysisCounters.as_dict(), None if taxonomy skipped
+    analysis: Optional[dict] = None
 
 
 class RouterService:
@@ -415,17 +421,29 @@ class RouterService:
                 pr[a] = max(pr.get(a, r.priority), r.priority)
         return pr
 
-    def _blocking_keys(self, gen: PolicyGeneration) -> frozenset:
-        """Identity set of ``gen``'s blocking taxonomy findings, cached.
-        Computed post-bind (its engine already wrote live centroids back
-        into the atoms), so old and new generations compare on the same
-        geometry."""
-        if gen.blocking_keys is None:
-            det = ConflictDetector(gen.config.signals,
-                                   gen.config.exclusive_groups())
+    def _analyzer(self, gen: PolicyGeneration) -> WholePolicyAnalyzer:
+        return WholePolicyAnalyzer(gen.config.signals,
+                                   gen.config.exclusive_groups(),
+                                   fingerprint=gen.fingerprint)
+
+    def _policy_summary(self, gen: PolicyGeneration) -> PolicySummary:
+        """``gen``'s whole-policy analysis summary, computed once and
+        cached.  Computed post-bind (its engine already wrote live
+        centroids back into the atoms), so old and new generations
+        compare on the same geometry; the summary's per-rule context
+        hashes are what the next rebind's delta pass diffs against."""
+        if gen.analysis is None:
+            result = self._analyzer(gen).analyze(gen.config.rules)
+            gen.analysis = result.summary
             gen.blocking_keys = frozenset(
                 finding_key(f)
-                for f in blocking_findings(det.analyze(gen.config.rules)))
+                for f in blocking_findings(result.findings))
+        return gen.analysis
+
+    def _blocking_keys(self, gen: PolicyGeneration) -> frozenset:
+        """Identity set of ``gen``'s blocking taxonomy findings, cached."""
+        if gen.blocking_keys is None:
+            self._policy_summary(gen)
         return gen.blocking_keys
 
     # ---- hot-swap --------------------------------------------------------------
@@ -479,20 +497,28 @@ class RouterService:
         except Exception as e:  # noqa: BLE001 — bind must not kill serving
             return reject([f"bind error: {type(e).__name__}: {e}"], diags)
         gen.diagnostics = diags
-        # 4. admission gate: the full detection hierarchy on the bound
-        #    policy; block on conflicts the swap would *introduce*
+        # 4. admission gate: the detection hierarchy on the bound
+        #    policy, as a *delta* pass against the serving generation's
+        #    cached summary — only rules whose context (condition,
+        #    priority, signal geometry, group membership) changed are
+        #    re-analyzed, O(changed) instead of O(N²); block on
+        #    conflicts the swap would *introduce*
+        counters = None
         if run_taxonomy:
-            findings = ConflictDetector(
-                gen.config.signals,
-                gen.config.exclusive_groups()).analyze(gen.config.rules)
-            blocking = blocking_findings(findings)
+            result = self._analyzer(gen).analyze(
+                gen.config.rules, base=self._policy_summary(old))
+            counters = result.counters.as_dict()
+            gen.analysis = result.summary
+            blocking = blocking_findings(result.findings)
             gen.blocking_keys = frozenset(finding_key(f) for f in blocking)
             introduced = [f for f in blocking
                           if finding_key(f) not in self._blocking_keys(old)]
             if introduced:
-                return reject(
+                rej = reject(
                     [f"{f.kind.name} {f.rules}: {f.detail}"
                      for f in introduced], diags, introduced)
+                rej.analysis = counters
+                return rej
         # 5. backends the new policy needs that are not loaded yet
         if self._load_backends_flag:
             self._load_backends(gen.config)
@@ -507,7 +533,7 @@ class RouterService:
             self.audit.log("rebind", generation=gen.gen_id,
                            detail={"from": old.gen_id,
                                    "fingerprint": gen.fingerprint})
-        return RebindResult(True, gen.gen_id)
+        return RebindResult(True, gen.gen_id, analysis=counters)
 
     def _free_if_drained(self, gen: PolicyGeneration) -> None:
         if gen.retired and gen.inflight <= 0 and gen is not self._gen:

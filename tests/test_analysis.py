@@ -1,0 +1,203 @@
+"""The staged whole-policy analyzer (src/repro/analysis/) against its
+oracles: the legacy O(N²) pair loop (finding_key parity), the
+exhaustive geometric screen (bitwise parity for the pruned path), and
+a full re-analysis (bitwise parity for the delta path).  Also pins the
+deterministic finding order and the analyze_pairwise contradiction
+dedup (docs/analysis.md)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.analysis import pruning
+from repro.analysis.engine import WholePolicyAnalyzer
+from repro.analysis.tables import (
+    planted_cap_table, with_benign_edit, with_new_conflict)
+from repro.core.atoms import SignalAtom
+from repro.core.conditions import And, Atom, Not, Or
+from repro.core.taxonomy import (
+    ConflictDetector, ConflictType, Rule, finding_key)
+
+
+def _unit(d, axis, angle=0.0, tilt_axis=1):
+    v = np.zeros(d)
+    v[axis] = math.cos(angle)
+    v[tilt_axis] = math.sin(angle)
+    return tuple(v)
+
+
+def _crafted_policy():
+    """A small policy that exercises every taxonomy stage at once:
+    unsat conditions, tautologies, subset/equivalent conditions,
+    complex (Not/Or) conditions, intersecting caps, and
+    category-disjoint classifiers."""
+    d = 16
+    signals = {
+        # two co-grouped embeddings -> conjunction of both is unsat (T1)
+        "ga": SignalAtom("ga", "embedding", 0.9,
+                         centroid=_unit(d, 0), group="g"),
+        "gb": SignalAtom("gb", "embedding", 0.9,
+                         centroid=_unit(d, 1), group="g"),
+        # intersecting un-grouped caps (T4/T5)
+        "ca": SignalAtom("ca", "embedding", 0.95,
+                         centroid=_unit(d, 2)),
+        "cb": SignalAtom("cb", "embedding", 0.93,
+                         centroid=_unit(d, 2, angle=0.05, tilt_axis=3)),
+        # category-disjoint classifiers (T6)
+        "dm": SignalAtom("dm", "domain", 0.6,
+                         categories=("college_math",)),
+        "dp": SignalAtom("dp", "domain", 0.6,
+                         categories=("physics",)),
+    }
+    groups = [("ga", "gb")]
+    rules = [
+        Rule("r_unsat", And((Atom("ga"), Atom("gb"))), "m0", 900),
+        Rule("r_taut", Or((Atom("ca"), Not(Atom("ca")))), "m1", 800),
+        Rule("r_two", And((Atom("ca"), Atom("dm"))), "m0", 700),
+        Rule("r_sub", Atom("ca"), "m1", 600),                 # superset
+        Rule("r_eq", And((Atom("dm"), Atom("ca"))), "m0", 500),
+        Rule("r_cb", Atom("cb"), "m1", 400),
+        Rule("r_phys", Atom("dp"), "m0", 300),
+        Rule("r_not", And((Atom("cb"), Not(Atom("dm")))), "m1", 200),
+    ]
+    return signals, groups, rules
+
+
+def _keys(findings):
+    return sorted(finding_key(f) for f in findings)
+
+
+def test_engine_matches_legacy_on_crafted_policy():
+    signals, groups, rules = _crafted_policy()
+    det = ConflictDetector(signals, groups)
+    legacy = det.analyze_pairwise(rules)
+    staged = WholePolicyAnalyzer(signals, groups).analyze(rules).findings
+    # finding_key (not bitwise): the two paths use different MC
+    # estimators, so numeric evidence differs but findings must not
+    assert _keys(staged) == _keys(legacy)
+    kinds = {f.kind for f in staged}
+    assert {ConflictType.LOGICAL_CONTRADICTION,
+            ConflictType.STRUCTURAL_SHADOWING,
+            ConflictType.STRUCTURAL_REDUNDANCY,
+            ConflictType.PROBABLE_CONFLICT,
+            ConflictType.CALIBRATION_CONFLICT} <= kinds
+
+
+def test_engine_matches_legacy_on_planted_table():
+    # small: the legacy oracle pays per-pair SAT + Monte-Carlo
+    table = planted_cap_table(16, d=32, n_conflicts=3, seed=1)
+    det = ConflictDetector(table.signals, table.groups)
+    legacy = det.analyze_pairwise(table.rules)
+    staged = WholePolicyAnalyzer(
+        table.signals, table.groups).analyze(table.rules).findings
+    assert _keys(staged) == _keys(legacy)
+    t4 = [f for f in staged if f.kind is ConflictType.PROBABLE_CONFLICT]
+    assert len(t4) >= len(table.planted)
+
+
+def test_detector_analyze_delegates_to_engine():
+    signals, groups, rules = _crafted_policy()
+    det = ConflictDetector(signals, groups)
+    assert _keys(det.analyze(rules)) == _keys(det.analyze_pairwise(rules))
+
+
+def test_deterministic_order_under_shuffle():
+    signals, groups, rules = _crafted_policy()
+    an = WholePolicyAnalyzer(signals, groups)
+    base = an.analyze(rules).findings
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        shuffled = list(rules)
+        rng.shuffle(shuffled)
+        assert WholePolicyAnalyzer(signals, groups) \
+            .analyze(shuffled).findings == base
+
+
+def test_pairwise_contradiction_dedup():
+    """analyze_pairwise reports each unsatisfiable condition once, no
+    matter how many admissible pairs the rule participates in."""
+    signals, groups, rules = _crafted_policy()
+    legacy = ConflictDetector(signals, groups).analyze_pairwise(rules)
+    t1 = [f for f in legacy
+          if f.kind is ConflictType.LOGICAL_CONTRADICTION]
+    assert [f.rules for f in t1] == [("r_unsat",)]
+
+
+def test_pruned_matches_exhaustive_bitwise():
+    table = planted_cap_table(512, d=64, n_conflicts=8, seed=0)
+    old = pruning.PRUNE_MIN_N
+    pruning.PRUNE_MIN_N = 1      # force the slab path on a small table
+    try:
+        pruned = WholePolicyAnalyzer(
+            table.signals, table.groups, prune=True).analyze(table.rules)
+    finally:
+        pruning.PRUNE_MIN_N = old
+    exhaustive = WholePolicyAnalyzer(
+        table.signals, table.groups, prune=False).analyze(table.rules)
+    assert pruned.counters.prune_mode == "pruned"
+    assert exhaustive.counters.prune_mode == "exhaustive"
+    # bitwise: same screen+refine decide both paths (docs/analysis.md)
+    assert pruned.findings == exhaustive.findings
+    assert pruned.counters.margin_evals < exhaustive.counters.margin_evals
+    t4 = [f for f in pruned.findings
+          if f.kind is ConflictType.PROBABLE_CONFLICT]
+    assert len(t4) >= len(table.planted)
+
+
+def test_delta_benign_edit_matches_full():
+    table = planted_cap_table(256, d=64, n_conflicts=4, seed=2)
+    an = WholePolicyAnalyzer(table.signals, table.groups)
+    base = an.analyze(table.rules)
+    edited = with_benign_edit(table, index=0)
+    an2 = WholePolicyAnalyzer(edited.signals, edited.groups)
+    full = an2.analyze(edited.rules)
+    delta = WholePolicyAnalyzer(edited.signals, edited.groups) \
+        .analyze(edited.rules, base=base.summary)
+    assert delta.findings == full.findings     # bitwise
+    assert delta.counters.delta
+    assert delta.counters.dirty_rules == 1
+    assert delta.counters.carried_findings > 0
+    # O(changed): one dirty signal row against the table, not N²/2
+    assert delta.counters.margin_evals <= 2 * len(edited.rules)
+
+
+def test_delta_catches_new_conflict():
+    table = planted_cap_table(256, d=64, n_conflicts=4, seed=3)
+    an = WholePolicyAnalyzer(table.signals, table.groups)
+    base = an.analyze(table.rules)
+    edited = with_new_conflict(table, src=5, dst=40)
+    full = WholePolicyAnalyzer(
+        edited.signals, edited.groups).analyze(edited.rules)
+    delta = WholePolicyAnalyzer(edited.signals, edited.groups) \
+        .analyze(edited.rules, base=base.summary)
+    assert delta.findings == full.findings
+    assert delta.counters.dirty_rules == 1
+    new_keys = {finding_key(f) for f in delta.findings} \
+        - {finding_key(f) for f in base.findings}
+    assert any(k[0] == ConflictType.PROBABLE_CONFLICT.name
+               for k in new_keys)
+
+
+def test_delta_invalidated_by_config_change():
+    from repro.core.taxonomy import TaxonomyConfig
+    table = planted_cap_table(64, d=32, n_conflicts=2, seed=4)
+    base = WholePolicyAnalyzer(
+        table.signals, table.groups).analyze(table.rules)
+    cfg = TaxonomyConfig(mc_samples=512)
+    redo = WholePolicyAnalyzer(table.signals, table.groups, cfg=cfg) \
+        .analyze(table.rules, base=base.summary)
+    assert not redo.counters.delta     # config hash mismatch -> full pass
+
+
+def test_counters_accounting():
+    table = planted_cap_table(64, d=32, n_conflicts=2, seed=5)
+    res = WholePolicyAnalyzer(
+        table.signals, table.groups).analyze(table.rules)
+    c = res.counters
+    assert c.n_rules == 64
+    assert c.pairs_possible == 64 * 63 // 2
+    assert c.margin_evals > 0 and c.mc_pair_evals > 0
+    assert set(c.stage_s) == {"prepare", "crisp", "geometric",
+                              "classifier"}
+    d = c.as_dict()
+    assert d["n_rules"] == 64 and isinstance(d["stage_s"], dict)

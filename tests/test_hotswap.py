@@ -118,6 +118,46 @@ def test_rebind_allows_preexisting_t4_conflict():
     assert res.accepted and res.generation == 1
 
 
+def test_rebind_delta_reanalyzes_only_changed_rule():
+    """The admission gate analyzes generation N+1 against generation N's
+    cached PolicySummary: a one-signal edit re-analyzes one rule's
+    candidate pairs, not the whole table (docs/analysis.md)."""
+    svc = RouterService(DSL, load_backends=False)
+    res = svc.rebind(DSL.replace('threshold: 0.5\n}\nSIGNAL embedding '
+                                 'science',
+                                 'threshold: 0.52\n}\nSIGNAL embedding '
+                                 'science'))
+    assert res.accepted and res.generation == 1
+    c = res.analysis
+    assert c is not None and c["delta"]
+    assert c["dirty_rules"] == 1          # only math_route's ctx changed
+    assert c["prune_mode"] == "rows"      # dirty-signal rows, not N²
+    assert c["margin_evals"] <= 2 * c["n_rules"]
+
+
+def test_rebind_delta_still_rejects_new_t4():
+    """Delta analysis must reject an introduced conflict exactly like a
+    full pass: append an ungrouped clone of the math signal feeding a
+    competing route and check the gate blocks it on the delta path."""
+    svc = RouterService(DSL, load_backends=False)
+    clone = DSL.replace(
+        "GLOBAL {",
+        'SIGNAL embedding mathclone {\n'
+        '  candidates: ["integral derivative algebra equation solve"]\n'
+        '  threshold: 0.5\n}\n'
+        'ROUTE clone_route { PRIORITY 150 WHEN embedding("mathclone") '
+        'MODEL "backend-science" }\n'
+        "GLOBAL {")
+    res = svc.rebind(clone)
+    assert not res.accepted and svc.generation == 0
+    assert any(f.kind is ConflictType.PROBABLE_CONFLICT
+               for f in res.blocking)
+    c = res.analysis
+    assert c is not None and c["delta"]
+    assert c["dirty_rules"] == 1          # the new clone_route only
+    assert c["carried_findings"] >= 0
+
+
 def test_finding_key_ignores_numeric_evidence_drift():
     from repro.core.taxonomy import Decidability, Finding
     f1 = Finding(ConflictType.PROBABLE_CONFLICT, Decidability.GEOMETRIC,

@@ -1,0 +1,107 @@
+"""repro-lint CLI and SARIF-style report (src/repro/launch/lint.py,
+docs/analysis.md): exit codes gate exactly on blocked policies, the
+shipped examples lint clean, and every emitted report validates
+against its own documented schema."""
+import json
+import pathlib
+
+import pytest
+
+from repro.launch import lint
+
+EXAMPLES = sorted(
+    (pathlib.Path(__file__).resolve().parent.parent / "examples")
+    .glob("*.dsl"))
+
+CONFLICTED = """
+SIGNAL embedding math {
+  candidates: ["solve the equation"]
+  threshold: 0.6
+}
+SIGNAL embedding science {
+  candidates: ["explain the experiment"]
+  threshold: 0.6
+}
+ROUTE math_route {
+  PRIORITY 200
+  WHEN embedding("math")
+  MODEL "math-model"
+}
+ROUTE science_route {
+  PRIORITY 100
+  WHEN embedding("science")
+  MODEL "science-model"
+}
+"""
+
+
+def test_examples_lint_clean(tmp_path):
+    assert EXAMPLES
+    out = tmp_path / "report.json"
+    rc = lint.main([str(p) for p in EXAMPLES] + ["--json", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert lint.validate_report(doc) == []
+    pols = doc["runs"][0]["properties"]["policies"]
+    assert [p["uri"] for p in pols] == [str(p) for p in EXAMPLES]
+    assert not any(p["blocked"] for p in pols)
+    assert all(p["counters"]["n_rules"] >= 2 for p in pols)
+
+
+def test_blocked_policy_nonzero_exit(tmp_path):
+    src = tmp_path / "conflicted.dsl"
+    src.write_text(CONFLICTED)
+    out = tmp_path / "report.json"
+    rc = lint.main([str(src), "--json", str(out)])
+    assert rc == 1
+    doc = json.loads(out.read_text())
+    assert lint.validate_report(doc) == []
+    results = doc["runs"][0]["results"]
+    t4 = [r for r in results if r["ruleId"] == "T4-PROBABLE_CONFLICT"]
+    assert t4 and t4[0]["properties"]["blocking"]
+    assert t4[0]["level"] == "warning"
+    assert doc["runs"][0]["properties"]["policies"][0]["blocked"]
+
+
+def test_fix_is_unblocked():
+    fixed = CONFLICTED.replace(
+        'ROUTE math_route',
+        'SIGNAL_GROUP domains {\n'
+        '  semantics: softmax_exclusive\n'
+        '  temperature: 0.1\n'
+        '  threshold: 0.6\n'
+        '  members: [math, science]\n'
+        '  default: math\n'
+        '}\n'
+        'ROUTE math_route')
+    report = lint.lint_text(fixed, uri="fixed.dsl")
+    assert not report.blocked
+    assert not any(f.kind.name == "PROBABLE_CONFLICT"
+                   for f in report.findings)
+
+
+def test_compile_error_is_blocked():
+    report = lint.lint_text("ROUTE { oops", uri="bad.dsl")
+    assert report.blocked and report.compile_error
+    doc = lint.sarif_report([report])
+    assert lint.validate_report(doc) == []
+    res = doc["runs"][0]["results"]
+    assert [r["ruleId"] for r in res] == ["COMPILE"]
+    assert res[0]["level"] == "error"
+
+
+def test_no_prune_same_findings():
+    report_p = lint.lint_text(CONFLICTED, uri="c.dsl", prune=True)
+    report_e = lint.lint_text(CONFLICTED, uri="c.dsl", prune=False)
+    assert report_p.findings == report_e.findings
+
+
+def test_validate_report_rejects_malformed():
+    doc = lint.sarif_report([lint.lint_text(CONFLICTED)])
+    assert lint.validate_report(doc) == []
+    bad = json.loads(json.dumps(doc))
+    bad["runs"][0]["results"][0].pop("ruleId")
+    bad["version"] = "1.0"
+    problems = lint.validate_report(bad)
+    assert any("ruleId" in p for p in problems)
+    assert any("version" in p for p in problems)

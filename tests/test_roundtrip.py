@@ -1,86 +1,44 @@
 """§7.1 round-trip invariant: compile(decompile(cfg)) ≡ cfg, property-
-tested over randomly generated programs (hypothesis)."""
+tested over randomly generated programs (hypothesis) and over every
+shipped example policy.  The non-hypothesis tests run regardless; the
+property tests self-skip when hypothesis is absent."""
+import pathlib
 import string
 
 import pytest
-
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.dsl.compiler import compile_text
 from repro.dsl.decompile import decompile
 from repro.dsl.emit import to_flat_dict
 
-NAMES = st.sampled_from(
-    ["alpha", "beta", "gamma", "delta", "epsilon", "zeta", "eta"])
-STYPES = st.sampled_from(["domain", "embedding", "keyword", "jailbreak",
-                          "pii", "complexity"])
-CATS = st.lists(st.sampled_from(
-    ["college_math", "physics", "chem", "bio", "law", "cs"]),
-    max_size=3, unique=True)
-QUERY = st.text(alphabet=string.ascii_letters + " ", min_size=1,
-                max_size=20).filter(lambda s: s.strip())
+EXAMPLES = sorted(
+    (pathlib.Path(__file__).resolve().parent.parent / "examples")
+    .glob("*.dsl"))
 
 
-@st.composite
-def programs(draw):
-    sig_names = draw(st.lists(NAMES, min_size=1, max_size=4, unique=True))
-    out = []
-    sigs = {}
-    for n in sig_names:
-        t = draw(STYPES)
-        sigs[n] = t
-        cats = draw(CATS) if t == "domain" else []
-        thr = draw(st.floats(0.1, 0.9)).__round__(3)
-        body = f"  threshold: {thr}\n"
-        if cats:
-            body += "  mmlu_categories: [" + \
-                ", ".join(f'"{c}"' for c in cats) + "]\n"
-        out.append(f"SIGNAL {t} {n} {{\n{body}}}")
-    if len(sig_names) >= 2 and draw(st.booleans()):
-        members = sig_names[:2]
-        out.append(
-            "SIGNAL_GROUP grp {\n  semantics: softmax_exclusive\n"
-            f"  temperature: {draw(st.floats(0.05, 1.0)).__round__(3)}\n"
-            f"  threshold: 0.6\n"
-            f"  members: [{', '.join(members)}]\n"
-            f"  default: {members[0]}\n}}")
-    n_routes = draw(st.integers(1, 3))
-    for i in range(n_routes):
-        n = sig_names[i % len(sig_names)]
-        neg = draw(st.booleans())
-        extra = ""
-        if len(sig_names) > 1 and neg:
-            m = sig_names[(i + 1) % len(sig_names)]
-            extra = f' AND NOT {sigs[m]}("{m}")'
-        tier = draw(st.integers(0, 2))
-        tier_line = f"  TIER {tier}\n" if tier else ""
-        out.append(
-            f"ROUTE route{i} {{\n  PRIORITY {draw(st.integers(0, 500))}\n"
-            f"{tier_line}  WHEN {sigs[n]}(\"{n}\"){extra}\n"
-            f'  MODEL "model-{i}"\n}}')
-    if draw(st.booleans()):
-        out.append('GLOBAL {\n  default_model: "fallback"\n}')
-    if draw(st.booleans()):
-        q = draw(QUERY)
-        out.append(f'TEST t0 {{\n  "{q}" -> route0\n}}')
-    if draw(st.booleans()):
-        n = sig_names[0]
-        out.append(
-            f'DECISION_TREE dt {{\n  IF {sigs[n]}("{n}") '
-            f'{{ MODEL "m0" }}\n  ELSE {{ MODEL "m1" }}\n}}')
-    return "\n".join(out)
-
-
-@given(programs())
-@settings(max_examples=120, deadline=None)
-def test_roundtrip_semantic_equality(text):
+def _fingerprint_roundtrip(text):
+    """parse → decompile → parse must land on a canonical form whose
+    ``RouterConfig.fingerprint`` is a fixed point of further round-trips
+    (the hot-swap no-op check keys on it), while staying semantically
+    equal to the original program."""
     cfg1 = compile_text(text)
-    text2 = decompile(cfg1)
-    cfg2 = compile_text(text2)
-    assert to_flat_dict(cfg1) == to_flat_dict(cfg2)
-    # idempotence: decompiling again is a fixed point
-    assert decompile(cfg2) == text2
+    canon = compile_text(decompile(cfg1))
+    again = compile_text(decompile(canon))
+    assert to_flat_dict(cfg1) == to_flat_dict(canon)
+    assert canon.fingerprint() == again.fingerprint()
+    assert decompile(canon) == decompile(again)
+
+
+def test_examples_exist():
+    """The CI policy-lint job and the round-trip gate both key off
+    examples/*.dsl — losing them must fail loudly, not skip silently."""
+    assert EXAMPLES, "no example policies found in examples/*.dsl"
+
+
+@pytest.mark.parametrize(
+    "path", EXAMPLES, ids=[p.name for p in EXAMPLES])
+def test_fingerprint_roundtrip_examples(path):
+    _fingerprint_roundtrip(path.read_text())
 
 
 def test_roundtrip_paper_constructs():
@@ -110,3 +68,90 @@ ROUTE general_access {
     assert cfg1.actions["researcher_access"].kind == "plugin"
     assert cfg1.actions["researcher_access"].params["backend"] == \
         "restricted_papers"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (self-skipping when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    NAMES = st.sampled_from(
+        ["alpha", "beta", "gamma", "delta", "epsilon", "zeta", "eta"])
+    STYPES = st.sampled_from(["domain", "embedding", "keyword", "jailbreak",
+                              "pii", "complexity"])
+    CATS = st.lists(st.sampled_from(
+        ["college_math", "physics", "chem", "bio", "law", "cs"]),
+        max_size=3, unique=True)
+    QUERY = st.text(alphabet=string.ascii_letters + " ", min_size=1,
+                    max_size=20).filter(lambda s: s.strip())
+
+    @st.composite
+    def programs(draw):
+        sig_names = draw(st.lists(NAMES, min_size=1, max_size=4,
+                                  unique=True))
+        out = []
+        sigs = {}
+        for n in sig_names:
+            t = draw(STYPES)
+            sigs[n] = t
+            cats = draw(CATS) if t == "domain" else []
+            thr = draw(st.floats(0.1, 0.9)).__round__(3)
+            body = f"  threshold: {thr}\n"
+            if cats:
+                body += "  mmlu_categories: [" + \
+                    ", ".join(f'"{c}"' for c in cats) + "]\n"
+            out.append(f"SIGNAL {t} {n} {{\n{body}}}")
+        if len(sig_names) >= 2 and draw(st.booleans()):
+            members = sig_names[:2]
+            out.append(
+                "SIGNAL_GROUP grp {\n  semantics: softmax_exclusive\n"
+                f"  temperature: {draw(st.floats(0.05, 1.0)).__round__(3)}\n"
+                f"  threshold: 0.6\n"
+                f"  members: [{', '.join(members)}]\n"
+                f"  default: {members[0]}\n}}")
+        n_routes = draw(st.integers(1, 3))
+        for i in range(n_routes):
+            n = sig_names[i % len(sig_names)]
+            neg = draw(st.booleans())
+            extra = ""
+            if len(sig_names) > 1 and neg:
+                m = sig_names[(i + 1) % len(sig_names)]
+                extra = f' AND NOT {sigs[m]}("{m}")'
+            tier = draw(st.integers(0, 2))
+            tier_line = f"  TIER {tier}\n" if tier else ""
+            out.append(
+                f"ROUTE route{i} {{\n"
+                f"  PRIORITY {draw(st.integers(0, 500))}\n"
+                f"{tier_line}  WHEN {sigs[n]}(\"{n}\"){extra}\n"
+                f'  MODEL "model-{i}"\n}}')
+        if draw(st.booleans()):
+            out.append('GLOBAL {\n  default_model: "fallback"\n}')
+        if draw(st.booleans()):
+            q = draw(QUERY)
+            out.append(f'TEST t0 {{\n  "{q}" -> route0\n}}')
+        if draw(st.booleans()):
+            n = sig_names[0]
+            out.append(
+                f'DECISION_TREE dt {{\n  IF {sigs[n]}("{n}") '
+                f'{{ MODEL "m0" }}\n  ELSE {{ MODEL "m1" }}\n}}')
+        return "\n".join(out)
+
+    @given(programs())
+    @settings(max_examples=120, deadline=None)
+    def test_roundtrip_semantic_equality(text):
+        cfg1 = compile_text(text)
+        text2 = decompile(cfg1)
+        cfg2 = compile_text(text2)
+        assert to_flat_dict(cfg1) == to_flat_dict(cfg2)
+        # idempotence: decompiling again is a fixed point
+        assert decompile(cfg2) == text2
+
+    @given(programs())
+    @settings(max_examples=120, deadline=None)
+    def test_fingerprint_roundtrip_corpus(text):
+        _fingerprint_roundtrip(text)
+except ModuleNotFoundError:              # hypothesis not installed
+    pass
